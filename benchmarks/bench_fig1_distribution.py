@@ -1,0 +1,36 @@
+"""Fig. 1 analogue: % of integers in dense vs sparse 128-blocks, by list size.
+
+A block is *sparse* when VByte beats its characteristic bit-vector, *dense*
+otherwise (the paper's exact definition)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, gov2_like_corpus, timeit
+
+
+def dense_fraction(seq: np.ndarray, block: int = 128) -> float:
+    from repro.core.costs import elem_costs_np, gaps_from_sorted
+
+    gaps = gaps_from_sorted(seq)
+    e, b = elem_costs_np(gaps)
+    n = (len(seq) // block) * block
+    if n == 0:
+        return 0.0
+    eb = e[:n].reshape(-1, block).sum(1)
+    bb = b[:n].reshape(-1, block).sum(1)
+    return float((bb <= eb).mean())
+
+
+def run(quick: bool = True) -> None:
+    rng = np.random.default_rng(0)
+    sizes = {"short": 5_000, "medium": 50_000, "long": 200_000 if not quick else 80_000}
+    for cat, n in sizes.items():
+        seq = gov2_like_corpus(rng, n_lists=1, n=n)[0]
+        dt, frac = timeit(dense_fraction, seq, repeat=1)
+        emit(f"fig1_dense_frac_{cat}", dt * 1e6, f"dense_block_frac={frac:.3f}")
+
+
+if __name__ == "__main__":
+    run(False)

@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks (interpret mode on CPU -- correctness-shaped
+throughput only; real perf numbers require a TPU.  The derived field reports
+the achieved M ints/s and the oracle agreement)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timeit
+
+
+def run(quick: bool = True) -> None:
+    import jax.numpy as jnp
+
+    from repro.kernels.embedding_bag.ops import multi_hot_embed
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    from repro.kernels.gain_scan.ops import gain_prefix
+    from repro.kernels.vbyte_decode.ops import decode, pack_blocks
+
+    rng = np.random.default_rng(0)
+    n = 20_000 if quick else 200_000
+
+    vals = rng.integers(0, 2**20, n).astype(np.uint32)
+    lens, data, n_out = pack_blocks(vals)
+    dt, out = timeit(lambda: np.asarray(decode(lens, data, n_out)), repeat=1)
+    ok = np.array_equal(out, vals)
+    emit("kernel_vbyte_decode", dt * 1e6, f"mints_per_s={n/dt/1e6:.2f};oracle_ok={ok}")
+
+    gaps = rng.integers(1, 1000, n).astype(np.int64)
+    dt, (g, mn, mx) = timeit(lambda: gain_prefix(gaps), repeat=1)
+    emit("kernel_gain_scan", dt * 1e6, f"mints_per_s={n/dt/1e6:.2f}")
+
+    B, K, V, D = (64, 8, 10_000, 128) if quick else (512, 16, 100_000, 128)
+    table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, V, (B, K)), jnp.int32)
+    mask = jnp.asarray(rng.random((B, K)) < 0.8)
+    dt, out = timeit(lambda: np.asarray(multi_hot_embed(table, ids, mask)), repeat=1)
+    ref = np.asarray(embedding_bag_ref(table, ids, mask.astype(jnp.float32)))
+    ok = bool(np.allclose(out, ref, atol=1e-5))
+    emit("kernel_embedding_bag", dt * 1e6, f"bags_per_s={B/dt:.0f};oracle_ok={ok}")
+
+
+if __name__ == "__main__":
+    run(False)

@@ -1,0 +1,45 @@
+"""Table 3 analogue: space (bpi) of VByte / uniform / eps-opt / optimal
+partitioning, on docs AND freqs sequences.  Validates the paper's claims:
+optimal <= eps-opt <= uniform << un-partitioned (~2x)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, freqs_like, gov2_like_corpus, timeit
+
+
+def run(quick: bool = True) -> None:
+    from repro.core.costs import gaps_from_sorted
+    from repro.core.partition import (
+        eps_optimal,
+        optimal_partitioning,
+        partitioning_cost,
+        uniform_partitioning,
+    )
+    from repro.core.index import build_unpartitioned_index
+
+    rng = np.random.default_rng(0)
+    n = 40_000 if quick else 400_000
+
+    for kind, seq in (
+        ("docs", gov2_like_corpus(rng, 1, n)[0]),
+        ("freqs", freqs_like(rng, n)),
+    ):
+        gaps = gaps_from_sorted(seq)
+        unp = build_unpartitioned_index([seq]).bits_per_int()
+        c_uni = partitioning_cost(gaps, uniform_partitioning(len(seq), 128)) / n
+        dt_eps, P_eps = timeit(eps_optimal, gaps, repeat=1)
+        c_eps = partitioning_cost(gaps, P_eps) / n
+        dt_opt, P_opt = timeit(optimal_partitioning, gaps, repeat=1)
+        c_opt = partitioning_cost(gaps, P_opt) / n
+        emit(f"table3_{kind}_vbyte_unpartitioned", 0.0, f"bpi={unp:.2f}")
+        emit(f"table3_{kind}_vbyte_uniform", 0.0, f"bpi={c_uni:.2f}")
+        emit(f"table3_{kind}_vbyte_eps_opt", dt_eps * 1e6, f"bpi={c_eps:.2f}")
+        emit(f"table3_{kind}_vbyte_opt", dt_opt * 1e6, f"bpi={c_opt:.2f}")
+        assert c_opt <= c_eps <= c_uni * 1.001, (c_opt, c_eps, c_uni)
+        emit(f"table3_{kind}_improvement", 0.0, f"x_vs_unpartitioned={unp/c_opt:.2f}")
+
+
+if __name__ == "__main__":
+    run(False)

@@ -1,0 +1,48 @@
+"""Table 2 analogue: the VByte family -- space (bpi) + sequential decode speed."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, freqs_like, gov2_like_corpus, timeit
+
+
+def run(quick: bool = True) -> None:
+    from repro.core.costs import gaps_from_sorted
+    from repro.core.vbyte import (
+        streamvbyte_cost_bytes,
+        streamvbyte_decode,
+        streamvbyte_encode,
+        varint_g8iu_cost_bytes,
+        vbyte_cost_bytes,
+        vbyte_decode,
+        vbyte_encode,
+    )
+
+    rng = np.random.default_rng(0)
+    n = 50_000 if quick else 500_000
+    docs = gov2_like_corpus(rng, 1, n)[0]
+    gaps = gaps_from_sorted(docs) - 1
+
+    rows = {
+        "masked_vbyte": vbyte_cost_bytes(gaps) * 8 / n,  # original VByte format
+        "varint_gb": streamvbyte_cost_bytes(gaps) * 8 / n,
+        "varint_g8iu": varint_g8iu_cost_bytes(gaps) * 8 / n,
+        "stream_vbyte": streamvbyte_cost_bytes(gaps) * 8 / n,
+    }
+    for name, bpi in rows.items():
+        emit(f"table2_space_{name}", 0.0, f"docs_bpi={bpi:.2f}")
+
+    stream = vbyte_encode(gaps.astype(np.uint64))
+    dt, out = timeit(vbyte_decode, stream, n)
+    assert np.array_equal(out, gaps.astype(np.uint64))
+    emit("table2_decode_vbyte", dt * 1e6, f"mints_per_s={n/dt/1e6:.1f}")
+
+    ctrl, data = streamvbyte_encode(gaps.astype(np.uint32))
+    dt, out = timeit(streamvbyte_decode, ctrl, data, n)
+    assert np.array_equal(out.astype(np.uint32), gaps.astype(np.uint32))
+    emit("table2_decode_streamvbyte", dt * 1e6, f"mints_per_s={n/dt/1e6:.1f}")
+
+
+if __name__ == "__main__":
+    run(False)

@@ -1,0 +1,42 @@
+"""Shared benchmark helpers: calibrated synthetic datasets + timing."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.data.postings import make_posting_list  # noqa: E402
+
+
+def gov2_like_corpus(rng, n_lists=8, n=40_000):
+    """Docs sequences calibrated to Gov2 (dense gap ~2.13, sparse ~1850)."""
+    return [
+        make_posting_list(rng, n, mean_dense_gap=2.13, mean_sparse_gap=1850.0,
+                          frac_dense=0.8)
+        for _ in range(n_lists)
+    ]
+
+
+def freqs_like(rng, n=40_000):
+    """Within-document frequencies: tiny Zipfian ints, prefix-summed so the
+    partitioned machinery applies (strictly increasing), as in ds2i."""
+    f = np.minimum(rng.zipf(1.8, size=n), 1000).astype(np.int64)
+    return np.cumsum(f) - 1
+
+
+def timeit(fn, *args, repeat=3, number=1):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            out = fn(*args)
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best, out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")

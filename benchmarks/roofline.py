@@ -1,0 +1,79 @@
+"""Roofline table generator: reads experiments/dryrun/*.json.
+
+Emits the three roofline terms per (arch x shape x mesh), the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction -- the
+EXPERIMENTS.md section-Roofline table is generated from here
+(``python -m benchmarks.roofline --markdown``)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def load(dry_dir="experiments/dryrun"):
+    rows = []
+    for p in sorted(pathlib.Path(dry_dir).glob("*.json")):
+        r = json.loads(p.read_text())
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return None
+    rf = r["roofline"]
+    s = r["summary"]
+    return {
+        "cell": f"{r['arch']}/{r['shape']}",
+        "mesh": r["mesh"],
+        "t_compute_ms": rf["t_compute_s"] * 1e3,
+        "t_memory_ms": rf["t_memory_s"] * 1e3,
+        "t_collective_ms": rf["t_collective_s"] * 1e3,
+        "dominant": rf["dominant"],
+        "useful_ratio": rf.get("useful_flops_ratio", 0.0),
+        "roofline_frac": rf.get("roofline_fraction", 0.0),
+        "hbm_gb_per_dev": s["bytes_per_device"] / 1e9,
+        "wire_gb_per_dev": s["collective_wire_bytes_per_device"] / 1e9,
+    }
+
+
+def run(quick: bool = True) -> None:
+    rows = [fmt_row(r) for r in load()]
+    rows = [r for r in rows if r]
+    for r in rows:
+        if quick and r["mesh"] != "single":
+            continue
+        print(
+            f"roofline_{r['cell']}_{r['mesh']},0.00,"
+            f"dom={r['dominant']};bound_ms={max(r['t_compute_ms'], r['t_memory_ms'], r['t_collective_ms']):.2f};"
+            f"frac={r['roofline_frac']:.4f}"
+        )
+
+
+def markdown() -> None:
+    rows = [fmt_row(r) for r in load()]
+    rows = [r for r in rows if r]
+    hdr = ("| cell | mesh | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | useful FLOPs ratio | roofline frac |")
+    print(hdr)
+    print("|" + "---|" * 8)
+    for r in rows:
+        print(
+            f"| {r['cell']} | {r['mesh']} | {r['t_compute_ms']:.1f} | "
+            f"{r['t_memory_ms']:.1f} | {r['t_collective_ms']:.1f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | {r['roofline_frac']:.4f} |"
+        )
+    skips = [r for r in load() if r["status"] == "skipped"]
+    if skips:
+        print()
+        for r in skips:
+            print(f"- SKIP `{r['arch']}/{r['shape']}` ({r['mesh']}): {r['reason']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    a = ap.parse_args()
+    markdown() if a.markdown else run(False)

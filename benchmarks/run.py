@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Default is the quick profile
+(CI-sized datasets); ``--full`` uses paper-scale list lengths.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only tableN]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    bench_build_time,
+    bench_competitors,
+    bench_fig1_distribution,
+    bench_kernels,
+    bench_nextgeq,
+    bench_partition_space,
+    bench_queries,
+    bench_vbyte_family,
+    roofline,
+)
+
+MODULES = {
+    "fig1": bench_fig1_distribution,
+    "table2": bench_vbyte_family,
+    "table3": bench_partition_space,
+    "table4": bench_build_time,
+    "table5": bench_queries,
+    "table6": bench_competitors,
+    "fig7": bench_nextgeq,
+    "kernels": bench_kernels,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, mod in MODULES.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod.run(quick=not args.full)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0.00,{type(e).__name__}: {e}", file=sys.stdout)
+            raise
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

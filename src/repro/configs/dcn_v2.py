@@ -1,0 +1,19 @@
+"""dcn-v2 [arXiv:2008.13535; paper].
+
+n_dense=13 n_sparse=26 embed_dim=16 n_cross_layers=3 mlp=1024-1024-512
+interaction=cross.  Sparse tables: 26 fields x 1M rows (row-sharded).
+Table rows per field use 2^20 (~1M, power-of-2 hash size) so the flat table
+divides evenly across all mesh shardings (256 and 512 devices).
+"""
+from repro.configs import RECSYS_SHAPES, ArchBundle, register
+from repro.models.recsys import RecsysConfig
+
+FULL = RecsysConfig(
+    name="dcn-v2", kind="dcn", n_dense=13, n_sparse=26, embed_dim=16,
+    rows_per_field=1_048_576, n_cross_layers=3, mlp=(1024, 1024, 512),
+)
+SMOKE = RecsysConfig(
+    name="dcn-v2-smoke", kind="dcn", n_dense=13, n_sparse=6, embed_dim=8,
+    rows_per_field=1_024, n_cross_layers=2, mlp=(32, 16),
+)
+BUNDLE = register(ArchBundle("dcn-v2", "recsys", FULL, SMOKE, RECSYS_SHAPES))

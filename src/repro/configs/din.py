@@ -1,0 +1,17 @@
+"""din [arXiv:1706.06978; paper].
+
+embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80 interaction=target-attn.
+Item vocab: 2M rows (row-sharded over `model`).
+"""
+from repro.configs import RECSYS_SHAPES, ArchBundle, register
+from repro.models.recsys import RecsysConfig
+
+FULL = RecsysConfig(
+    name="din", kind="din", embed_dim=18, seq_len=100, attn_mlp=(80, 40),
+    item_vocab=2_097_152,
+)
+SMOKE = RecsysConfig(
+    name="din-smoke", kind="din", embed_dim=8, seq_len=10, attn_mlp=(16, 8),
+    item_vocab=1_024,
+)
+BUNDLE = register(ArchBundle("din", "recsys", FULL, SMOKE, RECSYS_SHAPES))

@@ -1,0 +1,19 @@
+"""dlrm-rm2 [arXiv:1906.00091; paper].
+
+n_dense=13 n_sparse=26 embed_dim=64 bot_mlp=13-512-256-64
+top_mlp=512-512-256-1 interaction=dot.
+Table rows per field use 2^20 (~1M, power-of-2 hash size) so the flat table
+divides evenly across all mesh shardings (256 and 512 devices).
+"""
+from repro.configs import RECSYS_SHAPES, ArchBundle, register
+from repro.models.recsys import RecsysConfig
+
+FULL = RecsysConfig(
+    name="dlrm-rm2", kind="dlrm", n_dense=13, n_sparse=26, embed_dim=64,
+    rows_per_field=1_048_576, bot_mlp=(512, 256, 64), top_mlp=(512, 512, 256),
+)
+SMOKE = RecsysConfig(
+    name="dlrm-rm2-smoke", kind="dlrm", n_dense=13, n_sparse=6, embed_dim=8,
+    rows_per_field=1_024, bot_mlp=(32, 16, 8), top_mlp=(32, 16),
+)
+BUNDLE = register(ArchBundle("dlrm-rm2", "recsys", FULL, SMOKE, RECSYS_SHAPES))

@@ -1,0 +1,267 @@
+"""2-level partitioned inverted index (paper Section 2) + query processing.
+
+Layout (arena style, all flat numpy arrays -> directly shardable / shippable
+to device):
+
+  L1 (per partition): ``endpoints`` (last docID), ``sizes``, ``tags``
+      (0 = VByte, 1 = bit-vector), ``offsets`` (byte offset into L2).
+  L2: one concatenated ``uint8`` payload buffer.
+  Per list: ``list_part_offsets`` slicing the L1 arrays, plus the list length.
+
+VByte partitions store the plain-VByte bytes of ``gap - 1`` (see costs.py);
+bit-vector partitions store the packed characteristic bitmap of the re-based
+values over ``universe = sum(gaps)`` bits.
+
+Query ops: ``decode_list``, ``next_geq`` and ``intersect`` (boolean AND via
+in-order NextGEQ, the paper's Tables 5/8 workload).
+
+The un-partitioned baseline (``UnpartitionedIndex``) encodes each list as one
+VByte stream chopped into skip-blocks of 128 postings (the paper's baseline:
+"a posting list is split into blocks of 128 postings ... encoded separately").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .bitvector import bitvector_decode, bitvector_encode, bitvector_next_geq
+from .costs import DEFAULT_F, gaps_from_sorted
+from .partition import (
+    optimal_partitioning,
+    partition_payload_costs,
+    uniform_partitioning,
+)
+from .vbyte import vbyte_decode, vbyte_encode
+
+TAG_VBYTE = 0
+TAG_BITVECTOR = 1
+
+
+@dataclass
+class PartitionedIndex:
+    n_lists: int = 0
+    list_part_offsets: np.ndarray = field(default_factory=lambda: np.zeros(1, np.int64))
+    list_sizes: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    endpoints: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    sizes: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    tags: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int8))
+    offsets: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    payload: np.ndarray = field(default_factory=lambda: np.zeros(0, np.uint8))
+    F: int = DEFAULT_F
+
+    # ---------------- stats ----------------
+    def space_bits(self) -> int:
+        """Total space accounted the paper's way: F bits per partition + L2."""
+        return int(len(self.endpoints) * self.F + self.payload.size * 8)
+
+    def bits_per_int(self) -> float:
+        n = int(self.list_sizes.sum())
+        return self.space_bits() / max(n, 1)
+
+    # ---------------- access ----------------
+    def _list_slice(self, t: int) -> slice:
+        return slice(int(self.list_part_offsets[t]), int(self.list_part_offsets[t + 1]))
+
+    def decode_list(self, t: int) -> np.ndarray:
+        sl = self._list_slice(t)
+        out = []
+        base = -1
+        for p in range(sl.start, sl.stop):
+            vals = self._decode_partition(p, base)
+            out.append(vals)
+            base = int(self.endpoints[p])
+        return np.concatenate(out) if out else np.zeros(0, np.int64)
+
+    def _decode_partition(self, p: int, base: int) -> np.ndarray:
+        off = int(self.offsets[p])
+        end = int(self.offsets[p + 1]) if p + 1 < len(self.offsets) else self.payload.size
+        size = int(self.sizes[p])
+        if self.tags[p] == TAG_VBYTE:
+            gaps = vbyte_decode(self.payload[off:end], size).astype(np.int64) + 1
+            return base + np.cumsum(gaps)
+        universe = int(self.endpoints[p]) - base
+        rebased = bitvector_decode(self.payload[off:end], universe)
+        return rebased + base + 1
+
+    def next_geq(self, t: int, x: int, cursor: int | None = None) -> tuple[int, int]:
+        """Smallest element >= x in list t (and the partition cursor).
+
+        Returns (value, cursor); value == -1 when x exceeds the list.
+        ``cursor`` lets callers resume forward scans (the AND loop).
+        """
+        sl = self._list_slice(t)
+        lo = sl.start if cursor is None else max(cursor, sl.start)
+        eps = self.endpoints[lo : sl.stop]
+        k = int(np.searchsorted(eps, x, side="left"))
+        p = lo + k
+        if p >= sl.stop:
+            return -1, sl.stop
+        base = int(self.endpoints[p - 1]) if p > sl.start else -1
+        if x <= base + 1:
+            # first element of partition p is the answer
+            vals = self._decode_partition(p, base)
+            return int(vals[0]), p
+        if self.tags[p] == TAG_BITVECTOR:
+            off = int(self.offsets[p])
+            end = int(self.offsets[p + 1]) if p + 1 < len(self.offsets) else self.payload.size
+            universe = int(self.endpoints[p]) - base
+            r = bitvector_next_geq(self.payload[off:end], universe, x - base - 1)
+            # the last element (== endpoint) is always present
+            if r < 0:
+                return int(self.endpoints[p]), p
+            return int(r + base + 1), p
+        vals = self._decode_partition(p, base)
+        k = int(np.searchsorted(vals, x, side="left"))
+        return int(vals[k]), p  # k < len(vals) because x <= endpoint
+
+    def intersect(self, terms: list[int]) -> np.ndarray:
+        """Boolean AND of the given lists (in-order NextGEQ algorithm)."""
+        if not terms:
+            return np.zeros(0, np.int64)
+        order = sorted(terms, key=lambda t: int(self.list_sizes[t]))
+        out = []
+        cursors: dict[int, int | None] = {t: None for t in order}
+        cand, cursors[order[0]] = self.next_geq(order[0], 0)
+        while cand >= 0:
+            matched = True
+            for t in order[1:]:
+                v, cursors[t] = self.next_geq(t, cand, cursors[t])
+                if v < 0:
+                    return np.asarray(out, dtype=np.int64)
+                if v != cand:
+                    cand = v
+                    matched = False
+                    break
+            if matched:
+                out.append(cand)
+                cand, cursors[order[0]] = self.next_geq(
+                    order[0], cand + 1, cursors[order[0]]
+                )
+            else:
+                v, cursors[order[0]] = self.next_geq(order[0], cand, cursors[order[0]])
+                if v < 0:
+                    break
+                cand = v
+        return np.asarray(out, dtype=np.int64)
+
+
+def _encode_partitions(seq: np.ndarray, P: np.ndarray, F: int):
+    """Encode one list given endpoints P; returns per-partition arrays."""
+    gaps = gaps_from_sorted(seq)
+    pe, pb = partition_payload_costs(gaps, P)
+    starts = np.concatenate([[0], P[:-1]])
+    endpoints, sizes, tags, payloads = [], [], [], []
+    base = -1
+    for s, r, ce_, cb_ in zip(starts, P, pe, pb):
+        part = seq[s:r]
+        endpoints.append(int(part[-1]))
+        sizes.append(int(r - s))
+        if ce_ <= cb_:
+            tags.append(TAG_VBYTE)
+            g = gaps[s:r] - 1
+            payloads.append(vbyte_encode(g.astype(np.uint64)))
+        else:
+            tags.append(TAG_BITVECTOR)
+            universe = int(part[-1]) - base
+            payloads.append(bitvector_encode(part - base - 1, universe))
+        base = int(part[-1])
+    return endpoints, sizes, tags, payloads
+
+
+def build_partitioned_index(
+    lists: list[np.ndarray],
+    strategy: str = "optimal",
+    F: int = DEFAULT_F,
+    uniform_block: int = 128,
+    partitioner=None,
+) -> PartitionedIndex:
+    """strategy in {"optimal", "uniform", "eps", "single"} or pass partitioner."""
+    from .partition import eps_optimal
+
+    all_ep, all_sz, all_tag, all_pay = [], [], [], []
+    lp_off = [0]
+    list_sizes = []
+    for seq in lists:
+        seq = np.asarray(seq, dtype=np.int64)
+        gaps = gaps_from_sorted(seq)
+        if partitioner is not None:
+            P = partitioner(gaps)
+        elif strategy == "optimal":
+            P = optimal_partitioning(gaps, F)
+        elif strategy == "uniform":
+            P = uniform_partitioning(len(seq), uniform_block)
+        elif strategy == "eps":
+            P = eps_optimal(gaps, F)
+        elif strategy == "single":
+            P = np.array([len(seq)], dtype=np.int64)
+        else:
+            raise ValueError(strategy)
+        ep, sz, tag, pay = _encode_partitions(seq, P, F)
+        all_ep += ep
+        all_sz += sz
+        all_tag += tag
+        all_pay += pay
+        lp_off.append(lp_off[-1] + len(ep))
+        list_sizes.append(len(seq))
+
+    offsets = np.zeros(len(all_pay), dtype=np.int64)
+    lens = np.array([p.size for p in all_pay], dtype=np.int64)
+    if len(lens):
+        offsets[1:] = np.cumsum(lens)[:-1]
+    payload = np.concatenate(all_pay) if all_pay else np.zeros(0, np.uint8)
+    return PartitionedIndex(
+        n_lists=len(lists),
+        list_part_offsets=np.asarray(lp_off, dtype=np.int64),
+        list_sizes=np.asarray(list_sizes, dtype=np.int64),
+        endpoints=np.asarray(all_ep, dtype=np.int64),
+        sizes=np.asarray(all_sz, dtype=np.int64),
+        tags=np.asarray(all_tag, dtype=np.int8),
+        offsets=offsets,
+        payload=payload,
+        F=F,
+    )
+
+
+def build_unpartitioned_index(lists: list[np.ndarray], F: int = DEFAULT_F) -> PartitionedIndex:
+    """The paper's baseline: VByte in skip-blocks of 128 postings.
+
+    Reuses the PartitionedIndex container with every partition tagged VByte
+    and uniform 128-boundaries -- equivalent to the classic blocked layout.
+    """
+    return _build_vbyte_blocked(lists, F)
+
+
+def _build_vbyte_blocked(lists: list[np.ndarray], F: int) -> PartitionedIndex:
+    all_ep, all_sz, all_tag, all_pay = [], [], [], []
+    lp_off = [0]
+    list_sizes = []
+    for seq in lists:
+        seq = np.asarray(seq, dtype=np.int64)
+        gaps = gaps_from_sorted(seq)
+        P = uniform_partitioning(len(seq), 128)
+        starts = np.concatenate([[0], P[:-1]])
+        for s, r in zip(starts, P):
+            all_ep.append(int(seq[r - 1]))
+            all_sz.append(int(r - s))
+            all_tag.append(TAG_VBYTE)
+            all_pay.append(vbyte_encode((gaps[s:r] - 1).astype(np.uint64)))
+        lp_off.append(lp_off[-1] + len(P))
+        list_sizes.append(len(seq))
+    offsets = np.zeros(len(all_pay), dtype=np.int64)
+    lens = np.array([p.size for p in all_pay], dtype=np.int64)
+    if len(lens):
+        offsets[1:] = np.cumsum(lens)[:-1]
+    payload = np.concatenate(all_pay) if all_pay else np.zeros(0, np.uint8)
+    return PartitionedIndex(
+        n_lists=len(lists),
+        list_part_offsets=np.asarray(lp_off, dtype=np.int64),
+        list_sizes=np.asarray(list_sizes, dtype=np.int64),
+        endpoints=np.asarray(all_ep, dtype=np.int64),
+        sizes=np.asarray(all_sz, dtype=np.int64),
+        tags=np.asarray(all_tag, dtype=np.int8),
+        offsets=offsets,
+        payload=payload,
+        F=F,
+    )

@@ -1,0 +1,50 @@
+"""Batched on-device query engine (TPU-style serving demo).
+
+The numpy engine in ``index.py`` is the faithful reproduction; this engine
+shows the TPU-native layout end to end: posting lists packed into the
+fixed-block Stream-VByte layout (``repro.kernels.vbyte_decode``), decoded on
+device, and probed with a batch of membership/NextGEQ queries via
+``searchsorted`` -- all jit-able.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costs import gaps_from_sorted
+from repro.kernels.vbyte_decode.ops import decode_sorted, pack_blocks
+
+
+class DeviceList:
+    """One posting list resident on device in kernel block layout."""
+
+    def __init__(self, seq: np.ndarray, use_kernel: bool = True):
+        gaps = gaps_from_sorted(np.asarray(seq, dtype=np.int64))
+        lens, data, n = pack_blocks((gaps - 1).astype(np.uint32))
+        self.lens = jnp.asarray(lens)
+        self.data = jnp.asarray(data)
+        self.n = n
+        self.use_kernel = use_kernel
+
+    def decode(self) -> jnp.ndarray:
+        return decode_sorted(self.lens, self.data, self.n,
+                             use_kernel=self.use_kernel)
+
+    def next_geq_batch(self, probes: jnp.ndarray) -> jnp.ndarray:
+        """Vectorized NextGEQ for a batch of probes (-1 past the end)."""
+        ids = self.decode()
+        k = jnp.searchsorted(ids, probes, side="left")
+        safe = jnp.minimum(k, self.n - 1)
+        vals = ids[safe]
+        return jnp.where(k >= self.n, -1, vals)
+
+    def intersect(self, other: "DeviceList") -> jnp.ndarray:
+        """Batched AND via membership test (returns mask over self.decode())."""
+        a = self.decode()
+        b = other.decode()
+        k = jnp.searchsorted(b, a, side="left")
+        safe = jnp.minimum(k, other.n - 1)
+        return jnp.where((k < other.n) & (b[safe] == a), a, -1)

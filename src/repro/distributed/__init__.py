@@ -1,0 +1,2 @@
+from .fault_tolerance import FaultTolerantRunner, SimulatedFailure
+from .straggler import StragglerWatchdog

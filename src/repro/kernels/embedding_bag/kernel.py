@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: fixed-arity EmbeddingBag (gather + weighted reduce).
+
+JAX has no native EmbeddingBag; the jnp path (take + segment_sum) streams a
+[B, K, D] intermediate through HBM.  This kernel fuses the gather and the
+reduction so only [B, D] ever leaves the core.
+
+The data-dependent row addressing uses SCALAR PREFETCH (PrefetchScalarGridSpec):
+the flat id array is prefetched into SMEM, and the *table* BlockSpec's
+index_map reads ids[b, k] to pick which (1, D) table row the next grid step
+streams into VMEM -- the standard Pallas TPU embedding-gather pattern.  Grid
+is (B, K); the output block (1, D) for row b is revisited across the K inner
+steps and accumulated in place (initialized at k == 0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, w_ref, table_row_ref, out_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    b = pl.program_id(0)
+    w = w_ref[b, k]
+    out_ref[...] += w * table_row_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,
+    weights: jnp.ndarray,
+    interpret: bool = True,
+):
+    """table: [V, D] (D % 128 == 0); ids/weights: [B, K] -> [B, D] f32."""
+    B, K = ids.shape
+    V, D = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # ids, weights
+        grid=(B, K),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, k, ids_ref, w_ref: (ids_ref[b, k], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda b, k, ids_ref, w_ref: (b, 0)),
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(ids, weights.astype(jnp.float32), table)

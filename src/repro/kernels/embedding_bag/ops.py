@@ -1,0 +1,25 @@
+"""jit'd wrappers for the EmbeddingBag kernel + segment-sum fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import embedding_bag
+from .ref import embedding_bag_ref
+
+
+def multi_hot_embed(
+    table, ids, mask, use_kernel: bool = True, interpret: bool = True
+):
+    """Multi-hot bag with boolean mask -> [B, D]."""
+    w = mask.astype(jnp.float32)
+    if use_kernel:
+        return embedding_bag(table, ids, w, interpret=interpret)
+    return embedding_bag_ref(table, ids, w)
+
+
+def segment_sum_embed(table, flat_ids, bag_ids, n_bags: int):
+    """Ragged bags via jax.ops.segment_sum (the CSR-style path)."""
+    rows = jnp.take(table, flat_ids, axis=0)
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)

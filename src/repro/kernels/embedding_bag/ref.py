@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fixed-arity EmbeddingBag."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray, weights: jnp.ndarray):
+    """table: [V, D]; ids: [B, K] int32; weights: [B, K] -> [B, D].
+
+    out[b] = sum_k weights[b,k] * table[ids[b,k]]   (masked multi-hot bag).
+    """
+    rows = jnp.take(table, ids, axis=0)  # [B, K, D]
+    return (rows * weights[..., None].astype(rows.dtype)).sum(axis=1)

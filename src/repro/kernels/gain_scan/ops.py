@@ -1,0 +1,93 @@
+"""jit'd wrapper: kernel gain scan + host dominating-point stitching.
+
+``optimal_partitioning_blocked(gaps)`` reproduces the paper's exact
+partitioning (validated against core.partition.optimal_partitioning in
+tests) but evaluates all per-element costs in the vectorized kernel phase;
+only the O(1)-state decision machine stays scalar.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.costs import DEFAULT_F
+from repro.core.partition import optimal_partitioning
+
+from .kernel import BLOCK, gain_scan
+from .ref import gain_scan_ref
+
+
+def gain_prefix(gaps: np.ndarray, use_kernel: bool = True, interpret: bool = True):
+    """int32 range check: |g| is bounded by max(sum gaps, 40n) -- the paper's
+    regime (32-bit docIDs) always fits; reject anything wider up front."""
+    n = len(gaps)
+    if n and (int(np.sum(gaps, dtype=np.int64)) >= 2**31 or 40 * n >= 2**31):
+        raise ValueError(
+            "gain_scan kernel requires universe < 2^31 and n < 2^26 "
+            "(32-bit docID regime); split the sequence first"
+        )
+    n_pad = ((n + BLOCK - 1) // BLOCK) * BLOCK
+    gp = np.ones(n_pad, np.int32)  # pad gap=1 -> delta 7 (harmless, sliced off)
+    gp[:n] = gaps
+    if use_kernel:
+        g, mn, mx = gain_scan(jnp.asarray(gp), interpret=interpret)
+    else:
+        g, mn, mx = gain_scan_ref(jnp.asarray(gp), BLOCK)
+    return np.asarray(g)[:n], np.asarray(mn), np.asarray(mx)
+
+
+def optimal_partitioning_blocked(
+    gaps: np.ndarray, F: int = DEFAULT_F, use_kernel: bool = True
+) -> np.ndarray:
+    """Exact paper partitioning, gain phase on the kernel.
+
+    The decision machine consumes the precomputed absolute gain array (the
+    deltas are recovered as first differences), so the per-element cost
+    evaluation never runs on the host.
+    """
+    g, _mn, _mx = gain_prefix(np.asarray(gaps, np.int32), use_kernel=use_kernel)
+    deltas = np.diff(np.concatenate([[0], g.astype(np.int64)]))
+    return _state_machine(deltas, F, len(gaps))
+
+
+def _state_machine(deltas: np.ndarray, F: int, n: int) -> np.ndarray:
+    """The O(1)-space dominating-point machine over precomputed deltas."""
+    P: list[int] = []
+    T = F
+    i = j = 0
+    g = 0
+    mn = mx = 0
+    for k in range(n):
+        d = int(deltas[k])
+        g += d
+        if d >= 0:
+            if g > mx:
+                mx, i = g, k + 1
+            if mn < -T and mn - g < -2 * F:
+                P.append(j)
+                T, i, g = 2 * F, k + 1, g - mn
+                mn, mx = 0, g
+        else:
+            if g < mn:
+                mn, j = g, k + 1
+            if mx > T and mx - g > 2 * F:
+                P.append(i)
+                T, j, g = 2 * F, k + 1, g - mx
+                mx, mn = 0, g
+    if mx > F and mx - g > F:
+        P.append(i)
+        g, mn, mx = g - mx, g - mx, 0
+    if mn < -F and mn - g < -F:
+        P.append(j)
+        g, mx, mn = g - mn, g - mn, 0
+    P.append(n)
+    out, last = [], 0
+    for p in P:
+        if p > last:
+            out.append(p)
+            last = p
+    if not out or out[-1] != n:
+        out.append(n)
+    return np.asarray(out, dtype=np.int64)

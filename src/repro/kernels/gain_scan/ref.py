@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the gain-function scan (paper Definition 1)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def vbyte_cost_bits(values: jnp.ndarray) -> jnp.ndarray:
+    """8 * ceil(bits(v)/7) without clz: threshold comparisons (v < 2^31)."""
+    v = values
+    nbytes = (
+        1
+        + (v >= 128).astype(jnp.int32)
+        + (v >= 16384).astype(jnp.int32)
+        + (v >= 2097152).astype(jnp.int32)
+        + (v >= 268435456).astype(jnp.int32)
+    )
+    return 8 * nbytes
+
+
+def gain_scan_ref(gaps: jnp.ndarray, block: int = 1024):
+    """gaps: [n] int32 (n % block == 0).
+
+    Returns (g [n] int32 cumulative gain, block_min [nb], block_max [nb]),
+    where g(i) = sum_{k<=i} (E_k - B_k), E_k = vbyte bits of (gap_k - 1),
+    B_k = gap_k.
+    """
+    deltas = vbyte_cost_bits(jnp.maximum(gaps - 1, 0)) - gaps
+    g = jnp.cumsum(deltas.astype(jnp.int64)).astype(jnp.int32)
+    nb = gaps.shape[0] // block
+    gb = g.reshape(nb, block)
+    return g, gb.min(axis=1), gb.max(axis=1)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: block Stream-VByte decode.
+
+TPU adaptation of Masked-VByte / Stream-VByte (DESIGN.md section 3): the
+x86 decoder uses PSHUFB byte shuffles; TPUs have no byte-shuffle unit, so the
+variable-length gather is re-expressed as a ONE-HOT MATMUL on the MXU:
+
+    byte_j(i) = sum_d  data[d] * [d == start(i) + j]
+
+with ``start`` the in-block exclusive prefix sum of the 2-bit lengths.  Four
+such matmuls (j = 0..3) + shift-or reconstruct every integer of a 128-value
+block; everything is dense 8x128-lane arithmetic -- no per-lane control flow.
+
+Layout (produced by ops.pack_blocks): 128 values/block, data padded to 512
+bytes/block, so each grid step streams an (BM, 512) uint8 tile and an
+(BM, 128) int32 lens tile through VMEM (~5 KB/block -- far below VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_VALS = 128
+BLOCK_BYTES = 512
+BM = 8  # blocks per grid step: (8, 512) u8 + (8, 128) i32 tiles
+
+
+def _decode_kernel(lens_ref, data_ref, out_ref):
+    lens = lens_ref[...]  # [BM, 128] int32
+    data = data_ref[...].astype(jnp.float32)  # [BM, 512]
+    starts = jnp.cumsum(lens, axis=1) - lens  # [BM, 128]
+    d_iota = jax.lax.broadcasted_iota(jnp.int32, (BM, BLOCK_BYTES, BLOCK_VALS), 1)
+    out = jnp.zeros((BM, BLOCK_VALS), jnp.int32)
+    for j in range(4):
+        sel = (d_iota == (starts + j)[:, None, :]).astype(jnp.float32)
+        # MXU gather: [BM, 512] @ [BM, 512, 128] -> [BM, 128]
+        byte = jax.lax.dot_general(
+            data, sel, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        ).astype(jnp.int32)
+        out = out | jnp.where(lens > j, byte << (8 * j), 0)
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_blocks(lens: jnp.ndarray, data: jnp.ndarray, interpret: bool = True):
+    """lens: [nb, 128] int32; data: [nb, 512] uint8 -> [nb, 128] int32."""
+    nb = lens.shape[0]
+    assert nb % BM == 0, f"nb must be a multiple of {BM}"
+    grid = (nb // BM,)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BLOCK_VALS), lambda i: (i, 0)),
+            pl.BlockSpec((BM, BLOCK_BYTES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BM, BLOCK_VALS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, BLOCK_VALS), jnp.int32),
+        interpret=interpret,
+    )(lens, data)

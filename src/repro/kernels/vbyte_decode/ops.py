@@ -1,0 +1,54 @@
+"""jit'd wrappers + host-side packer for the block Stream-VByte decoder."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costs import bit_length_np
+
+from .kernel import BLOCK_BYTES, BLOCK_VALS, BM, decode_blocks
+from .ref import decode_blocks_ref
+
+
+def pack_blocks(values: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
+    """Encode uint32 values into the kernel's block layout.
+
+    Returns (lens [nb,128] int32, data [nb,512] uint8, n_values).  Blocks are
+    padded to a multiple of BM * BLOCK_VALS values (pad value 0 -> len 1).
+    """
+    values = np.asarray(values, dtype=np.uint32)
+    n = values.size
+    per_super = BM * BLOCK_VALS
+    n_pad = ((n + per_super - 1) // per_super) * per_super
+    v = np.zeros(n_pad, np.uint32)
+    v[:n] = values
+    lens = np.clip((bit_length_np(v) + 7) // 8, 1, 4).astype(np.int32)
+    lens = lens.reshape(-1, BLOCK_VALS)
+    nb = lens.shape[0]
+    data = np.zeros((nb, BLOCK_BYTES), np.uint8)
+    v = v.reshape(nb, BLOCK_VALS).astype(np.uint64)
+    ends = np.cumsum(lens, axis=1)
+    starts = ends - lens
+    for j in range(4):
+        sel = lens > j
+        rows, cols = np.nonzero(sel)
+        data[rows, starts[sel] + j] = ((v[sel] >> np.uint64(8 * j)) & np.uint64(0xFF)).astype(np.uint8)
+    return lens, data, n
+
+
+def decode(lens, data, n: int, use_kernel: bool = True, interpret: bool = True):
+    """Block-decode to values [n] (int32)."""
+    if use_kernel:
+        out = decode_blocks(jnp.asarray(lens), jnp.asarray(data), interpret=interpret)
+    else:
+        out = decode_blocks_ref(jnp.asarray(lens.astype(np.int32)), jnp.asarray(data))
+    return out.reshape(-1)[:n]
+
+
+def decode_sorted(lens, data, n: int, base: int = -1, **kw):
+    """Decode d-gap-encoded sorted ids (gap-1 convention, see core.costs)."""
+    gaps = decode(lens, data, n, **kw).astype(jnp.int64) + 1
+    return base + jnp.cumsum(gaps)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the block Stream-VByte decoder."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_blocks_ref(lens: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+    """lens: [nb, 128] int32 in 1..4; data: [nb, 512] uint8.
+
+    Value i of block b occupies data[b, s_i : s_i + lens_i] (little-endian),
+    where s_i is the exclusive prefix sum of lens within the block.
+    Returns [nb, 128] int32 (values < 2^31).
+    """
+    starts = jnp.cumsum(lens, axis=1) - lens  # [nb,128]
+    d = data.astype(jnp.int32)
+    out = jnp.zeros(lens.shape, jnp.int32)
+    for j in range(4):
+        byte = jnp.take_along_axis(d, starts + j, axis=1)
+        out = out | jnp.where(lens > j, byte << (8 * j), 0)
+    return out
+
+
+def decode_sorted_ref(lens, data, base: int = -1):
+    """Full d-gap decode: blocks -> gaps(+1 convention) -> absolute ids."""
+    gaps = decode_blocks_ref(lens, data).reshape(-1).astype(jnp.int64) + 1
+    return base + jnp.cumsum(gaps)

@@ -1,0 +1,157 @@
+"""Extract roofline terms from a compiled (dry-run) executable.
+
+ * ``compiled.cost_analysis()``  -> HLO FLOPs + bytes accessed (per device)
+ * ``compiled.memory_analysis()``-> per-device argument/temp/output bytes
+ * collective bytes: NOT in cost_analysis -- parsed from the optimized HLO
+   text by summing result-shape sizes of every all-gather / all-reduce /
+   reduce-scatter / all-to-all / collective-permute op.
+
+Per-op "bytes moved on the wire per participating device" uses standard ring
+algorithm factors (documented in EXPERIMENTS.md):
+   all-gather      result_bytes * (g-1)/g
+   all-reduce      2 * result_bytes * (g-1)/g
+   reduce-scatter  input_bytes  * (g-1)/g   (~= result_bytes * (g-1))
+   all-to-all      result_bytes * (g-1)/g
+   collective-permute  result_bytes
+where g = replica-group size of the op.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-reduce.1 = bf16[1024,8192]{1,0} all-reduce(%dot), replica_groups=[2,4]<=[8]
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?\s(all-gather|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute)(?:-start)?\(",
+)
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    result_bytes: dict = field(default_factory=dict)
+    wire_bytes_per_device: float = 0.0
+
+    def total_result_bytes(self) -> float:
+        return float(sum(self.result_bytes.values()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "all-" not in line and "reduce-scatter" not in line and "collective-permute" not in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        if "-done" in line:
+            continue
+        size = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        g = _group_size(line)
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.result_bytes[op] = stats.result_bytes.get(op, 0) + size
+        frac = (g - 1) / g if g > 1 else 0.0
+        if op == "all-reduce":
+            stats.wire_bytes_per_device += 2 * size * frac
+        elif op == "reduce-scatter":
+            stats.wire_bytes_per_device += size * (g - 1)
+        elif op == "collective-permute":
+            stats.wire_bytes_per_device += size
+        else:  # all-gather, all-to-all
+            stats.wire_bytes_per_device += size * frac
+    return stats
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def summarize_compiled(lowered, compiled, n_devices: int) -> dict:
+    """Roofline inputs from the compiled artifact.
+
+    FLOPs/bytes/collectives come from the trip-count-aware HLO walker
+    (``hlo_walker.walk``) because ``cost_analysis()`` counts ``while`` bodies
+    once (verified in tests/test_hlo_walker.py); the raw cost_analysis values
+    are kept as ``reported_*`` for reference.
+    """
+    from .hlo_walker import walk
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    st = walk(compiled.as_text())
+    return {
+        "n_devices": n_devices,
+        "flops_per_device": float(st.dot_flops),
+        "bytes_per_device": float(st.hbm_bytes_ideal),
+        "bytes_per_device_fusion_granularity": float(st.hbm_bytes),
+        "reported_flops_per_device": float(cost.get("flops", 0.0)),
+        "reported_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "mem_args_bytes": int(mem.argument_size_in_bytes),
+        "mem_output_bytes": int(mem.output_size_in_bytes),
+        "mem_temp_bytes": int(mem.temp_size_in_bytes),
+        "mem_code_bytes": int(mem.generated_code_size_in_bytes),
+        "while_trip_counts": st.while_trip_counts,
+        "collective_counts": st.coll_counts,
+        "collective_result_bytes": st.coll_result_bytes,
+        "collective_wire_bytes_per_device": st.coll_wire_bytes,
+    }
+
+
+def roofline_terms(summary: dict, model_flops_total: float = 0.0) -> dict:
+    """The three roofline times (seconds) + dominant term."""
+    from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+    t_compute = summary["flops_per_device"] / PEAK_FLOPS_BF16
+    t_memory = summary["bytes_per_device"] / HBM_BW
+    t_collective = summary["collective_wire_bytes_per_device"] / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    out = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "bound_step_time_s": max(t_compute, t_memory, t_collective),
+    }
+    if model_flops_total:
+        hlo_total = summary["flops_per_device"] * summary["n_devices"]
+        out["model_flops_total"] = model_flops_total
+        out["hlo_flops_total"] = hlo_total
+        out["useful_flops_ratio"] = model_flops_total / hlo_total if hlo_total else 0.0
+        # fraction of the compute roofline actually achieved if the step ran
+        # at the bound_step_time: useful FLOPs / (chips * peak * step_time)
+        denom = summary["n_devices"] * 197e12 * out["bound_step_time_s"]
+        out["roofline_fraction"] = model_flops_total / denom if denom else 0.0
+    return out

@@ -1,0 +1,557 @@
+"""Cell builder: (architecture x input shape x mesh) -> lowerable closure.
+
+A *cell* packages everything the dry-run, the roofline table and the perf
+loop need: the step function, ShapeDtypeStruct inputs (no allocation!),
+input/output shardings, and an analytic MODEL_FLOPS estimate.
+
+Sharding conventions (see DESIGN.md section 6):
+  LM    : batch -> (pod, data); heads/ffn/vocab -> model (Megatron TP);
+          MoE experts -> model (EP) when divisible, else TP inside experts;
+          decode KV cache: batch -> data axes; kv-heads -> model when
+          divisible, else *sequence* -> model (split-K / flash-decoding
+          style); batch==1 long-context shards the sequence over everything.
+  GNN   : edge arrays -> data axes; features/params replicated (GIN is tiny).
+  RecSys: embedding tables row-sharded -> model; batch -> data axes;
+          retrieval candidates -> data axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchBundle, ShapeSpec
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_lr
+
+from .mesh import data_axes, data_size, tp_size
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    mesh_name: str
+    fn: Callable
+    args: tuple  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any  # None => let XLA choose
+    model_flops: float  # analytic "useful" FLOPs per step (all devices)
+    meta: dict
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _opt_specs(param_spec_tree):
+    return {
+        "m": param_spec_tree,
+        "v": jax.tree_util.tree_map(lambda s: s, param_spec_tree),
+        "count": P(),
+    }
+
+
+def _zero1_specs(param_spec_tree, params_shape, mesh):
+    """ZeRO-1: shard AdamW moments over the data axes as well.
+
+    For each leaf, the first dimension that is unsharded in the param spec
+    and divisible by the data-axes product additionally gets the data axes.
+    The update stays elementwise; XLA turns the gradient sync into
+    reduce-scatter + the param refresh into all-gather (the ZeRO-1 pattern),
+    and optimizer memory drops by the data-parallel factor.
+    """
+    dsh = data_axes(mesh)
+    ds = data_size(mesh)
+
+    def shard_leaf(spec, shape):
+        entries = list(spec) + [None] * (len(shape.shape) - len(spec))
+        for i, (e, n) in enumerate(zip(entries, shape.shape)):
+            if e is None and n % ds == 0 and n > 0:
+                entries[i] = dsh
+                return P(*entries)
+        return P(*entries)
+
+    moments = jax.tree_util.tree_map(shard_leaf, param_spec_tree, params_shape)
+    return {
+        "m": moments,
+        "v": jax.tree_util.tree_map(lambda s: s, moments),
+        "count": P(),
+    }
+
+
+def make_train_step(loss_fn, cfg, base_lr: float = 1e-3, warmup: int = 10,
+                    total: int = 100_000):
+    """Generic loss -> grad -> clip -> AdamW step."""
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = cosine_lr(opt_state["count"] + 1, base_lr, warmup, total)
+        params, opt_state = adamw_update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+# ==========================================================================
+# LM cells
+# ==========================================================================
+
+def _lm_cell(bundle: ArchBundle, shape: ShapeSpec, mesh, mesh_name: str) -> Cell:
+    from repro.models import transformer as T
+
+    cfg = bundle.full
+    dsh = data_axes(mesh)
+    ds = data_size(mesh)
+    tp = tp_size(mesh)
+    if cfg.is_moe:
+        # GShard grouped dispatch (one capacity group per data shard) +
+        # explicit-collective shard_map MoE (see moe_ffn* + EXPERIMENTS.md)
+        cfg = dataclasses.replace(cfg, moe_groups=ds, moe_shard_map=True)
+    pspecs = T.param_specs(cfg, tp=tp)
+    params_shape = jax.eval_shape(partial(T.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+    N = cfg.param_count()
+    N_act = cfg.active_param_count()
+
+    if shape.kind == "train":
+        tokens_total = shape.seq_len * shape.batch
+
+        def loss(params, batch, cfg):
+            return T.lm_loss(params, batch["tokens"], batch["labels"], cfg)
+
+        step = make_train_step(loss, cfg)
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        batch_shape = {
+            "tokens": jax.ShapeDtypeStruct((shape.batch, shape.seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((shape.batch, shape.seq_len), jnp.int32),
+        }
+        bspec = {"tokens": P(dsh, None), "labels": P(dsh, None)}
+        ospecs = _zero1_specs(pspecs, params_shape, mesh)  # ZeRO-1 moments
+        in_sh = (pspecs, ospecs, bspec)
+        out_sh = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+        return Cell(
+            bundle.arch_id, shape.name, mesh_name, step,
+            (params_shape, opt_shape, batch_shape), in_sh, out_sh,
+            model_flops=6.0 * N_act * tokens_total,
+            meta={"params": N, "active_params": N_act, "tokens": tokens_total},
+        )
+
+    if shape.kind == "prefill":
+        def fn(params, tokens):
+            return T.prefill_step(params, tokens, cfg)
+
+        tok = jax.ShapeDtypeStruct((shape.batch, shape.seq_len), jnp.int32)
+        in_sh = (pspecs, P(dsh, None))
+        return Cell(
+            bundle.arch_id, shape.name, mesh_name, fn, (params_shape, tok),
+            in_sh, None,
+            model_flops=2.0 * N_act * shape.seq_len * shape.batch,
+            meta={"params": N, "active_params": N_act},
+        )
+
+    if shape.kind == "decode":
+        Sc = min(shape.seq_len, cfg.sliding_window) if cfg.sliding_window > 0 else shape.seq_len
+        cache_shape = jax.ShapeDtypeStruct(
+            (cfg.n_layers, 2, shape.batch, Sc, cfg.n_kv_heads, cfg.d_head),
+            cfg.compute_dtype,
+        )
+        tok = jax.ShapeDtypeStruct((shape.batch,), jnp.int32)
+        cpos = jax.ShapeDtypeStruct((), jnp.int32)
+
+        kv_ok = cfg.n_kv_heads % tp == 0
+        if shape.batch % ds == 0 and shape.batch >= ds:
+            if kv_ok:
+                cspec = P(None, None, dsh, None, "model", None)
+            else:  # split-K: shard the cache sequence over `model`
+                cspec = P(None, None, dsh, "model", None, None)
+            tspec = P(dsh)
+        else:  # tiny batch (long-context): shard sequence over everything
+            seq_axes = dsh if kv_ok else dsh + ("model",)
+            cspec = P(None, None, None, seq_axes, "model" if kv_ok else None, None)
+            tspec = P(None)
+
+        def fn(params, cache, token, cache_pos):
+            return T.serve_step(params, cache, token, cache_pos, cfg)
+
+        in_sh = (pspecs, cspec, tspec, P())
+        # KV-cache reads dominate decode; model_flops = matmul work only
+        return Cell(
+            bundle.arch_id, shape.name, mesh_name, fn,
+            (params_shape, cache_shape, tok, cpos), in_sh, None,
+            model_flops=2.0 * N_act * shape.batch,
+            meta={"params": N, "active_params": N_act, "cache_len": Sc,
+                  "cache_spec": str(cspec)},
+        )
+
+    raise ValueError(shape.kind)
+
+
+# ==========================================================================
+# GNN cells
+# ==========================================================================
+
+def _gin_flops(cfg, n_nodes: int, n_edges: int, train: bool) -> float:
+    f = 0.0
+    d_prev = cfg.d_in
+    for _ in range(cfg.n_layers):
+        f += 2.0 * n_edges * d_prev  # message gather+sum
+        f += 2.0 * n_nodes * (d_prev * cfg.d_hidden + cfg.d_hidden * cfg.d_hidden)
+        d_prev = cfg.d_hidden
+    f += 2.0 * n_nodes * cfg.d_hidden * cfg.n_classes
+    return f * (3.0 if train else 1.0)
+
+
+def _gnn_cell(bundle: ArchBundle, shape: ShapeSpec, mesh, mesh_name: str) -> Cell:
+    from repro.models import gnn as G
+
+    dsh = data_axes(mesh)
+    pad = 512  # divisible by every data-axes product we use (16, 32)
+
+    if shape.kind == "sampled":
+        # 2-hop neighbor-sampled subgraph (fanout 15-10); all GIN layers run
+        # on the induced subgraph.  Sizes are the sampler's static pads.
+        b = shape.batch
+        n_nodes = b * (1 + 15 + 150)
+        n_edges = b * (15 + 150)
+        d_feat = shape.d_feat
+        n_classes = 41
+    elif shape.kind == "molecule":
+        n_nodes = shape.batch * shape.n_nodes
+        n_edges = shape.batch * shape.n_edges
+        d_feat = shape.d_feat
+        n_classes = 2
+    else:  # fullbatch
+        n_nodes = shape.n_nodes
+        n_edges = shape.n_edges
+        d_feat = shape.d_feat
+        n_classes = 47 if shape.name == "ogb_products" else bundle.full.n_classes
+
+    cfg = dataclasses.replace(
+        bundle.full,
+        d_in=d_feat,
+        n_classes=n_classes,
+        graph_readout=(shape.kind == "molecule"),
+        message_dtype="bfloat16" if shape.kind == "fullbatch" else "float32",
+    )
+
+    # full-batch node classification uses the dst-aligned sharded path:
+    # nodes/edges sharded over EVERY mesh axis (see gnn.py + EXPERIMENTS.md)
+    dst_sharded = shape.kind == "fullbatch"
+    if dst_sharded:
+        import math as _math
+
+        all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        S = _math.prod(mesh.shape[a] for a in all_axes)
+        n_nodes = _pad_to(n_nodes, S)
+        n_edges_p = _pad_to(n_edges, S)
+        specs = G.input_specs(cfg, n_nodes, n_edges_p)
+        bspec = G.batch_specs_sharded(cfg, axes=all_axes)
+        loss = lambda p, b, c: G.loss_fn_dst_sharded(p, b, c)  # noqa: E731
+    else:
+        n_edges_p = _pad_to(n_edges, pad)
+        specs = G.input_specs(
+            cfg, n_nodes, n_edges_p,
+            n_graphs=shape.batch if shape.kind == "molecule" else 0,
+        )
+        bspec = G.batch_specs(cfg, data_axes=dsh)
+        loss = G.loss_fn
+    step = make_train_step(loss, cfg)
+    params_shape = jax.eval_shape(partial(G.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    pspecs = jax.tree_util.tree_map(lambda _: P(), params_shape)
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    in_sh = (pspecs, _opt_specs(pspecs), bspec)
+    out_sh = (pspecs, _opt_specs(pspecs), {"loss": P(), "grad_norm": P()})
+    return Cell(
+        bundle.arch_id, shape.name, mesh_name, step,
+        (params_shape, opt_shape, specs), in_sh, out_sh,
+        model_flops=_gin_flops(cfg, n_nodes, n_edges, train=True),
+        meta={"n_nodes": n_nodes, "n_edges": n_edges_p, "d_feat": d_feat},
+    )
+
+
+# ==========================================================================
+# RecSys cells
+# ==========================================================================
+
+def routed_table_update(table, acc, ids, g_emb, base_lr: float, mesh,
+                        table_axes: tuple, batch_axes: tuple, slack: float = 4.0):
+    """Owner-routed sparse table update (the DLRM butterfly, via shard_map).
+
+    The table (and its rowwise-Adagrad accumulator) is sharded over
+    ``table_axes`` (every mesh axis).  Each device buckets its local
+    (row_id, grad) pairs by owner shard and ships them with ONE capacity-
+    bounded all_to_all; owners apply a purely local scatter.  Wire =
+    activation-sized update rows, never table-sized.  Bucket overflow is
+    counted and returned (capacity = slack * fair share).
+    """
+    import numpy as np
+
+    S = int(np.prod([mesh.shape[a] for a in table_axes]))
+    rows_loc = table.shape[0] // S
+
+    def body(table_loc, acc_loc, ids_loc, g_loc):
+        n_loc = ids_loc.shape[0]
+        owner = ids_loc // rows_loc  # [n_loc] in [0, S)
+        onehot = (owner[:, None] == jnp.arange(S)[None, :]).astype(jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(n_loc), owner]
+        cap = max(8, int(math.ceil(n_loc / S * slack)))
+        keep = pos < cap
+        pos_c = jnp.where(keep, pos, cap - 1)
+        dropped = jnp.sum(1 - keep)
+        b_ids = jnp.full((S, cap), -1, jnp.int32)
+        b_ids = b_ids.at[owner, pos_c].set(jnp.where(keep, ids_loc % rows_loc, -1))
+        b_g = jnp.zeros((S, cap, g_loc.shape[-1]), g_loc.dtype)
+        b_g = b_g.at[owner, pos_c].add(jnp.where(keep[:, None], g_loc, 0))
+        # one hop: shard s receives every peer's bucket destined for s
+        r_ids = jax.lax.all_to_all(b_ids, table_axes, 0, 0)  # [S, cap]
+        r_g = jax.lax.all_to_all(b_g, table_axes, 0, 0)  # [S, cap, d]
+        valid = r_ids >= 0
+        rows = jnp.where(valid, r_ids, 0).reshape(-1)
+        g = jnp.where(valid[..., None], r_g, 0).reshape(-1, g_loc.shape[-1])
+        row_g2 = jnp.sum(g * g, axis=-1)
+        acc2 = acc_loc.at[rows].add(row_g2)
+        scale = (base_lr / jnp.sqrt(acc2[rows] + 1e-8)).astype(table_loc.dtype)
+        table2 = table_loc.at[rows].add(-scale[:, None] * g.astype(table_loc.dtype))
+        return table2, acc2, jax.lax.psum(dropped, table_axes + tuple(
+            a for a in batch_axes if a not in table_axes))
+
+    from jax.sharding import PartitionSpec as P2
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P2(table_axes, None), P2(table_axes), P2(batch_axes),
+                  P2(batch_axes, None)),
+        out_specs=(P2(table_axes, None), P2(table_axes), P2()),
+        check_vma=False,
+    )(table, acc, ids, g_emb)
+
+
+def routed_table_gather(table, ids, mesh, table_axes: tuple, batch_axes: tuple,
+                        slack: float = 4.0):
+    """Owner-routed embedding gather (forward half of the DLRM butterfly).
+
+    Without this, XLA assembles the [B, F, d] lookup from a 256-way-sharded
+    table by all-reducing the FULL activation tensor (each shard contributes
+    the rows it owns, zeros elsewhere).  Routing ships only id buckets out
+    (int32) and gathered rows back: wire ~ 2 x slack x fair-share rows."""
+    import numpy as np
+
+    S = int(np.prod([mesh.shape[a] for a in table_axes]))
+    rows_loc = table.shape[0] // S
+
+    def body(table_loc, ids_loc):
+        n_loc = ids_loc.shape[0]
+        owner = ids_loc // rows_loc
+        onehot = (owner[:, None] == jnp.arange(S)[None, :]).astype(jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(n_loc), owner]
+        cap = max(8, int(math.ceil(n_loc / S * slack)))
+        keep = pos < cap
+        pos_c = jnp.where(keep, pos, cap - 1)
+        b_ids = jnp.zeros((S, cap), jnp.int32)
+        b_ids = b_ids.at[owner, pos_c].set(jnp.where(keep, ids_loc % rows_loc, 0))
+        r_ids = jax.lax.all_to_all(b_ids, table_axes, 0, 0)  # [S, cap]
+        rows = jnp.take(table_loc, r_ids.reshape(-1), axis=0)
+        rows = rows.reshape(S, cap, table.shape[-1])
+        back = jax.lax.all_to_all(rows, table_axes, 0, 0)  # [S, cap, d]
+        emb = back[owner, pos_c] * keep[:, None].astype(back.dtype)
+        return emb
+
+    from jax.sharding import PartitionSpec as P2
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P2(table_axes, None), P2(batch_axes)),
+        out_specs=P2(batch_axes, None),
+        check_vma=False,
+    )(table, ids)
+
+
+def make_sparse_recsys_train_step(cfg, base_lr: float = 1e-2, mesh=None,
+                                  table_axes: tuple = (), batch_axes: tuple = ()):
+    """dcn/dlrm train step with SPARSE embedding updates (dlrm hillclimb).
+
+    The baseline AdamW step materializes a dense [26M, d] f32 table gradient
+    and all-reduces it over the data axes every step.  Real DLRM systems
+    never do that: the table is updated by rowwise-Adagrad SCATTER on the
+    touched rows only.  Here:
+      * grads are taken w.r.t. (mlp params, gathered embeddings);
+      * the table update is owner-routed over an all_to_all
+        (``routed_table_update``) when a mesh is given, else a plain local
+        scatter -- wire = activation-sized rows, never the table;
+      * optimizer state for the table is one f32 accumulator per ROW
+        (rowwise Adagrad), not 2 full AdamW moments.
+    """
+    from repro.models import recsys as R
+
+    def step(params, opt_state, batch):
+        table = params["table"]
+        other = {k: v for k, v in params.items() if k != "table"}
+        F = cfg.n_sparse
+        ids = batch["sparse"] + (jnp.arange(F) * cfg.rows_per_field)[None, :]
+        if mesh is not None and table_axes:
+            B = ids.shape[0]
+            emb = routed_table_gather(
+                table, ids.reshape(-1), mesh, table_axes, batch_axes
+            ).reshape(B, F, cfg.embed_dim)
+        else:
+            emb = jnp.take(table, ids, axis=0)  # [B, F, d]
+
+        def lf(other_p, emb_p):
+            logits = R.ctr_head(other_p, batch["dense"], emb_p, cfg).astype(jnp.float32)
+            y = batch["label"].astype(jnp.float32)
+            return jnp.mean(
+                jnp.maximum(logits, 0) - logits * y
+                + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+            )
+
+        loss, (g_other, g_emb) = jax.value_and_grad(lf, argnums=(0, 1))(other, emb)
+        g_other, gnorm = clip_by_global_norm(g_other, 1.0)
+        lr = cosine_lr(opt_state["mlp"]["count"] + 1, base_lr, 10, 100_000)
+        other2, mlp_opt2 = adamw_update(g_other, opt_state["mlp"], other, lr)
+
+        # rowwise Adagrad, scatter-only
+        flat_ids = ids.reshape(-1)
+        g_flat = g_emb.reshape(-1, cfg.embed_dim)
+        if mesh is not None and table_axes:
+            table2, acc2, dropped = routed_table_update(
+                table, opt_state["table_acc"], flat_ids, g_flat, base_lr,
+                mesh, table_axes, batch_axes,
+            )
+        else:
+            row_g2 = jnp.sum(g_flat * g_flat, axis=-1)
+            acc2 = opt_state["table_acc"].at[flat_ids].add(row_g2)
+            scale = (base_lr / jnp.sqrt(acc2[flat_ids] + 1e-8)).astype(table.dtype)
+            table2 = table.at[flat_ids].add(-scale[:, None] * g_flat.astype(table.dtype))
+
+        params2 = dict(other2)
+        params2["table"] = table2
+        return params2, {"mlp": mlp_opt2, "table_acc": acc2}, {
+            "loss": loss, "grad_norm": gnorm,
+        }
+
+    return step
+
+def _recsys_flops(cfg, batch: int, train: bool) -> float:
+    d = cfg.embed_dim
+    if cfg.kind == "dcn":
+        x0 = cfg.n_dense + cfg.n_sparse * d
+        per = cfg.n_cross_layers * 2 * x0 * x0
+        dims = (x0, *cfg.mlp, 1)
+        per += sum(2 * a * b for a, b in zip(dims, dims[1:]))
+    elif cfg.kind == "dlrm":
+        dims = (cfg.n_dense, *cfg.bot_mlp)
+        per = sum(2 * a * b for a, b in zip(dims, dims[1:]))
+        nv = cfg.n_sparse + 1
+        per += 2 * nv * nv * d
+        inter = nv * (nv - 1) // 2 + cfg.bot_mlp[-1]
+        dims = (inter, *cfg.top_mlp, 1)
+        per += sum(2 * a * b for a, b in zip(dims, dims[1:]))
+    elif cfg.kind == "din":
+        dims = (4 * d, *cfg.attn_mlp, 1)
+        per = cfg.seq_len * sum(2 * a * b for a, b in zip(dims, dims[1:]))
+        per += 2 * cfg.seq_len * d
+        dims = (3 * d, 200, 80, 1)
+        per += sum(2 * a * b for a, b in zip(dims, dims[1:]))
+    else:  # bst
+        L = cfg.seq_len + 1
+        per = cfg.n_blocks * (2 * L * (3 * d * d + d * d + 8 * d * d) + 2 * L * L * d * 2)
+        dims = (L * d, 1024, 512, 256, 1)
+        per += sum(2 * a * b for a, b in zip(dims, dims[1:]))
+    return float(per) * batch * (3.0 if train else 1.0)
+
+
+def _recsys_cell(bundle: ArchBundle, shape: ShapeSpec, mesh, mesh_name: str) -> Cell:
+    from repro.models import recsys as R
+
+    cfg = bundle.full
+    dsh = data_axes(mesh)
+    params_shape = jax.eval_shape(partial(R.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    pspecs = R.param_specs(cfg)
+
+    if shape.kind == "train":
+        specs = R.input_specs(cfg, "train", shape.batch)
+        if cfg.kind in ("dcn", "dlrm"):
+            # sparse-update path: batch sharded over EVERY axis (the small
+            # MLPs replicate; sharding batch over `model` too removes the
+            # tp-fold redundant compute); table row-sharded over EVERY axis
+            # with owner-routed updates (routed_table_update)
+            all_ax = dsh + ("model",)
+            table_axes = ("model",) + dsh  # table shard-major order
+            bspec = {"dense": P(all_ax), "sparse": P(all_ax), "label": P(all_ax)}
+            step = make_sparse_recsys_train_step(
+                cfg, mesh=mesh, table_axes=table_axes, batch_axes=all_ax
+            )
+            other_shape = {k: v for k, v in params_shape.items() if k != "table"}
+            opt_shape = {
+                "mlp": jax.eval_shape(adamw_init, other_shape),
+                "table_acc": jax.ShapeDtypeStruct((cfg.table_rows,), jnp.float32),
+            }
+            pspecs = dict(pspecs)
+            pspecs["table"] = P(table_axes, None)
+            other_specs = {k: v for k, v in pspecs.items() if k != "table"}
+            opt_specs = {"mlp": _opt_specs(other_specs), "table_acc": P(table_axes)}
+            in_sh = (pspecs, opt_specs, bspec)
+            out_sh = (pspecs, opt_specs, {"loss": P(), "grad_norm": P()})
+        else:
+            bspec = R.batch_specs(cfg, "train", data_axes=dsh)
+            step = make_train_step(R.loss_fn, cfg)
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            in_sh = (pspecs, _opt_specs(pspecs), bspec)
+            out_sh = (pspecs, _opt_specs(pspecs), {"loss": P(), "grad_norm": P()})
+        return Cell(
+            bundle.arch_id, shape.name, mesh_name, step,
+            (params_shape, opt_shape, specs), in_sh, out_sh,
+            model_flops=_recsys_flops(cfg, shape.batch, True),
+            meta={"params": cfg.param_count()},
+        )
+
+    if shape.kind == "serve":
+        def fn(params, batch):
+            return R.serve_score(params, batch, cfg)
+
+        specs = R.input_specs(cfg, "serve", shape.batch)
+        bspec = R.batch_specs(cfg, "serve", data_axes=dsh)
+        return Cell(
+            bundle.arch_id, shape.name, mesh_name, fn, (params_shape, specs),
+            (pspecs, bspec), None,
+            model_flops=_recsys_flops(cfg, shape.batch, False),
+            meta={},
+        )
+
+    if shape.kind == "retrieval":
+        def fn(params, batch):
+            return R.retrieval_step(params, batch, cfg)
+
+        specs = R.input_specs(cfg, "retrieval", shape.batch, shape.n_candidates)
+        bspec = R.batch_specs(cfg, "retrieval", data_axes=dsh)
+        return Cell(
+            bundle.arch_id, shape.name, mesh_name, fn, (params_shape, specs),
+            (pspecs, bspec), None,
+            model_flops=_recsys_flops(cfg, shape.n_candidates, False),
+            meta={"n_candidates": shape.n_candidates},
+        )
+
+    raise ValueError(shape.kind)
+
+
+# ==========================================================================
+# Entry point
+# ==========================================================================
+
+def build_cell(bundle: ArchBundle, shape: ShapeSpec, mesh, mesh_name: str) -> Cell:
+    if bundle.family == "lm":
+        return _lm_cell(bundle, shape, mesh, mesh_name)
+    if bundle.family == "gnn":
+        return _gnn_cell(bundle, shape, mesh, mesh_name)
+    if bundle.family == "recsys":
+        return _recsys_cell(bundle, shape, mesh, mesh_name)
+    raise ValueError(bundle.family)

@@ -1,0 +1,128 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes need 512 placeholder CPU devices.
+Do NOT set this flag globally -- smoke tests and benches must see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+Each cell writes one JSON file with memory_analysis(), cost_analysis() and
+the parsed collective schedule (EXPERIMENTS.md section Dry-run reads these).
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_arch_ids, get_arch
+from repro.launch.analysis import roofline_terms, summarize_compiled
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str, out_dir: pathlib.Path) -> dict:
+    bundle = get_arch(arch_id)
+    shape = next(s for s in bundle.shapes if s.name == shape_name)
+    tag = f"{arch_id}__{shape_name}__{mesh_name}"
+    out_path = out_dir / f"{tag}.json"
+
+    if shape.skip:
+        rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": shape.skip}
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] SKIP {tag}: {shape.skip}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    try:
+        cell = build_cell(bundle, shape, mesh, mesh_name)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+            )
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            summary = summarize_compiled(lowered, compiled, n_dev)
+            mem = compiled.memory_analysis()
+            print(compiled.memory_analysis())
+            cost = compiled.cost_analysis()
+            print({k: v for k, v in (cost[0] if isinstance(cost, list) else cost).items()
+                   if k in ("flops", "bytes accessed")})
+        terms = roofline_terms(summary, cell.model_flops)
+        rec = {
+            "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok", "t_lower_s": t_lower, "t_compile_s": t_compile,
+            "model_flops": cell.model_flops, "meta": cell.meta,
+            "summary": summary, "roofline": terms,
+        }
+    except Exception as e:  # noqa: BLE001 -- record the failure, keep going
+        rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        print(f"[dryrun] ERROR {tag}: {e}")
+    out_path.write_text(json.dumps(rec, indent=2, default=str))
+    dom = rec.get("roofline", {}).get("dominant", "-")
+    print(f"[dryrun] {rec['status']:7s} {tag} dominant={dom} "
+          f"({rec.get('t_compile_s', 0):.1f}s compile)")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    targets = []
+    if args.all:
+        for arch_id in all_arch_ids():
+            for s in get_arch(arch_id).shapes:
+                for m in meshes:
+                    targets.append((arch_id, s.name, m))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        for m in meshes:
+            targets.append((args.arch, args.shape, m))
+
+    n_ok = n_err = n_skip = 0
+    for arch_id, shape_name, mesh_name in targets:
+        tag = f"{arch_id}__{shape_name}__{mesh_name}"
+        if args.skip_existing and (out_dir / f"{tag}.json").exists():
+            prev = json.loads((out_dir / f"{tag}.json").read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[dryrun] cached  {tag}")
+                continue
+        rec = run_cell(arch_id, shape_name, mesh_name, out_dir)
+        n_ok += rec["status"] == "ok"
+        n_err += rec["status"] == "error"
+        n_skip += rec["status"] == "skipped"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,323 @@
+"""Trip-count-aware HLO cost walker.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any model
+using ``lax.scan`` (scan-over-layers, flash-attention kv scans, chunked CE)
+under-reports FLOPs/bytes by the trip count.  This walker parses the
+optimized HLO text and:
+
+  * splits it into computations,
+  * finds ``while`` ops, extracts the trip count from the loop-condition
+    computation's compare-against-constant,
+  * DFS-walks call/fusion/while edges from ``main`` accumulating a
+    multiplier = product of enclosing trip counts,
+  * per computation counts:
+      - dot FLOPs: 2 * prod(result_shape) * contraction_size,
+      - HBM byte traffic at fusion granularity: operand + result bytes of
+        every *materializing* top-level instruction (fusion boundaries are
+        the HBM round-trip boundaries in optimized HLO),
+      - collective wire bytes (ring-algorithm factors, see analysis.py).
+
+Validated in tests against cost_analysis() on scan-free graphs and against
+an unrolled scan reference (test_hlo_walker.py).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\s*\{")
+_CALLED_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)=\{?%?([\w.\-, %]+)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        b = _DTYPE_BYTES.get(m.group(1), 4)
+        for d in m.group(2).split(","):
+            if d:
+                b *= int(d)
+        total += b
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)  # name -> type_str
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        mc = _COMP_RE.match(stripped)
+        if mc and stripped.endswith("{"):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            # stay; nested braces inside instr lines don't start lines
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(stripped)
+        if mi:
+            name, type_str, op = mi.group(1), mi.group(2), mi.group(3)
+            cur.instrs.append(Instr(name, type_str, op, stripped))
+            cur.symbols[name] = type_str
+    return comps
+
+
+def _called(line: str) -> list[str]:
+    out = []
+    for key in ("calls=", "body=", "condition=", "to_apply="):
+        m = re.search(key + r"%?([\w.\-]+)", line)
+        if m:
+            out.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", line)
+    if m:
+        out += [s.strip().lstrip("%") for s in m.group(1).split(",")]
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Best-effort trip count: the largest integer constant compared in the
+    loop condition (jax counted loops compare an induction var < N)."""
+    best = 1
+    for ins in cond.instrs:
+        if "constant(" in ins.line and ins.op == "constant":
+            m = _CONST_RE.search(ins.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return max(best, 1)
+
+
+_COLL_FACTORS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                 "collective-permute")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]+?)\}")
+
+# ops that do not materialize HBM traffic of their own
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "custom-call-start",
+}
+
+
+def _operand_names(line: str) -> list[str]:
+    m = re.search(r"\b[\w\-]+\((.*)\)", line)
+    if not m:
+        return []
+    inner = m.group(1)
+    # cut at attribute list (", dimensions=", ", to_apply=" ...)
+    depth = 0
+    out = []
+    tok = ""
+    for ch in inner:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append(tok.strip())
+            tok = ""
+        else:
+            tok += ch
+    if tok.strip():
+        out.append(tok.strip())
+    names = []
+    for t in out:
+        if "=" in t and "%" not in t:
+            break
+        mm = re.match(r"%?([\w.\-]+)", t.lstrip("%"))
+        if mm and not re.match(r"^\d+$", mm.group(1)):
+            names.append(mm.group(1))
+    return names
+
+
+@dataclass
+class WalkStats:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0  # fusion-granularity (pessimistic on CPU backend)
+    hbm_bytes_ideal: float = 0.0  # dot/gather/scatter/DUS/collective only:
+    # assumes every elementwise chain is fused on-chip (TPU + flash model)
+    coll_wire_bytes: float = 0.0
+    coll_counts: dict = field(default_factory=dict)
+    coll_result_bytes: dict = field(default_factory=dict)
+    while_trip_counts: list = field(default_factory=list)
+
+
+# ops whose operands/results must stream through HBM even with perfect fusion
+_IDEAL_TRAFFIC_OPS = {
+    "dot", "convolution", "scatter", "gather", "dynamic-update-slice",
+    "sort", "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def _ideal_traffic(base: str, ins, comp, out_b: int, in_b: int) -> float:
+    """HBM bytes for one op under the perfect-fusion model.
+
+    gather reads only the gathered rows (output), not the source table;
+    scatter reads+writes the update rows (read-modify-write); DUS touches
+    only the inserted slice; collectives read+write their payload.
+    """
+    if base == "gather":
+        return 2.0 * out_b
+    if base == "scatter":
+        ops = _operand_names(ins.line)
+        upd_b = 0
+        if len(ops) >= 3:
+            t = comp.symbols.get(ops[2])
+            if t:
+                upd_b = _shape_bytes(t)
+        return 3.0 * (upd_b or out_b)
+    if base == "dynamic-update-slice":
+        ops = _operand_names(ins.line)
+        upd_b = 0
+        if len(ops) >= 2:
+            t = comp.symbols.get(ops[1])
+            if t:
+                upd_b = _shape_bytes(t)
+        return 2.0 * (upd_b or out_b)
+    if base in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"):
+        return 2.0 * out_b
+    return float(out_b + in_b)
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    _, rdims = _shape_dims(ins.type_str)
+    result = math.prod(rdims) if rdims else 1
+    ops = _operand_names(ins.line)
+    lhs_type = comp.symbols.get(ops[0]) if ops else None
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contraction = 1
+    if lhs_type and m and m.group(1):
+        _, ldims = _shape_dims(lhs_type)
+        for d in m.group(1).split(","):
+            di = int(d)
+            if di < len(ldims):
+                contraction *= ldims[di]
+    return 2.0 * result * contraction
+
+
+def walk(text: str, entry: str | None = None) -> WalkStats:
+    comps = parse_hlo(text)
+    if not comps:
+        return WalkStats()
+    if entry is None:
+        entry = next(
+            (n for n in comps if n.startswith("main") or ".main" in n),
+            list(comps)[0],
+        )
+    stats = WalkStats()
+    visiting: set[str] = set()
+
+    def comp_cost(name: str, mult: float) -> None:
+        comp = comps.get(name)
+        if comp is None or name in visiting:
+            return
+        visiting.add(name)
+        for ins in comp.instrs:
+            if ins.op == "while":
+                body, cond = None, None
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mcnd = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                if mb:
+                    body = mb.group(1)
+                if mcnd:
+                    cond = mcnd.group(1)
+                tc = _trip_count(comps[cond]) if cond and cond in comps else 1
+                stats.while_trip_counts.append(tc)
+                if body:
+                    comp_cost(body, mult * tc)
+                continue
+            if ins.op in ("call", "fusion", "conditional", "custom-call",
+                          "reduce", "sort", "scatter", "map", "reduce-window"):
+                for c in _called(ins.line):
+                    comp_cost(c, mult)
+            if ins.op == "dot":
+                stats.dot_flops += mult * _dot_flops(ins, comp)
+            if ins.op in _COLL_FACTORS or any(
+                ins.op == c + "-start" for c in _COLL_FACTORS
+            ):
+                base_op = ins.op.replace("-start", "")
+                size = _shape_bytes(ins.type_str)
+                if ins.op.endswith("-start"):
+                    size //= 2  # start op type is (operand, result) tuple
+                g = _coll_group(ins.line)
+                frac = (g - 1) / g if g > 1 else 0.0
+                stats.coll_counts[base_op] = stats.coll_counts.get(base_op, 0) + mult
+                stats.coll_result_bytes[base_op] = (
+                    stats.coll_result_bytes.get(base_op, 0) + mult * size
+                )
+                if base_op == "all-reduce":
+                    stats.coll_wire_bytes += mult * 2 * size * frac
+                elif base_op == "reduce-scatter":
+                    stats.coll_wire_bytes += mult * size * (g - 1)
+                elif base_op == "collective-permute":
+                    stats.coll_wire_bytes += mult * size
+                else:
+                    stats.coll_wire_bytes += mult * size * frac
+            # HBM traffic at fusion granularity (top-level materializing ops)
+            if ins.op not in _NO_TRAFFIC and not ins.op.endswith("-done"):
+                out_b = _shape_bytes(ins.type_str)
+                in_b = 0
+                for op_name in _operand_names(ins.line):
+                    t = comp.symbols.get(op_name)
+                    if t:
+                        in_b += _shape_bytes(t)
+                stats.hbm_bytes += mult * (out_b + in_b)
+                base = ins.op.replace("-start", "")
+                if base in _IDEAL_TRAFFIC_OPS:
+                    stats.hbm_bytes_ideal += mult * _ideal_traffic(
+                        base, ins, comp, out_b, in_b
+                    )
+        visiting.discard(name)
+
+    def _coll_group(line: str) -> int:
+        m = _GROUP_RE.search(line)
+        if m:
+            return int(m.group(2))
+        m = _GROUP_LIST_RE.search(line)
+        if m:
+            return len(m.group(1).split(","))
+        return 2
+
+    comp_cost(entry, 1.0)
+    return stats

@@ -1,0 +1,149 @@
+"""End-to-end training driver (runs on the host devices available).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --steps 50 --smoke                     # reduced config, CPU-runnable
+  PYTHONPATH=src python -m repro.launch.train --arch dcn-v2 --steps 100 --smoke
+
+Demonstrates the full production control flow at laptop scale: data pipeline
+(OptVB-compressed shard index), jit'd train step, checkpoint/restart with a
+simulated node failure, straggler watchdog, restart statistics.
+Use ``--model-scale`` to scale a smoke LM up to ~100M params
+(examples/train_lm.py uses this for the few-hundred-step run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch
+from repro.distributed import FaultTolerantRunner, SimulatedFailure
+from repro.launch.cells import make_train_step
+from repro.optim import adamw_init
+
+
+def _lm_setup(cfg, batch: int, seq_len: int, seed: int):
+    from repro.data.lm_data import ShardedBatchLoader, TokenStream
+    from repro.models import transformer as T
+
+    stream = TokenStream(cfg.vocab, length=seq_len * batch * 64 + 1, seed=seed)
+    loader = ShardedBatchLoader(stream, batch, seq_len, seed=seed)
+
+    def loss(params, b, cfg):
+        return T.lm_loss(params, jnp.asarray(b["tokens"]), jnp.asarray(b["labels"]), cfg)
+
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    return params, loss, loader.batch_at
+
+
+def _recsys_setup(cfg, batch: int, seed: int):
+    from repro.data.recsys_data import make_ctr_batch
+    from repro.models import recsys as R
+
+    rng = np.random.default_rng(seed)
+    params = R.init_params(jax.random.PRNGKey(seed), cfg)
+
+    def batches(step):
+        return make_ctr_batch(np.random.default_rng(seed + step), cfg, batch)
+
+    return params, R.loss_fn, batches
+
+
+def _gnn_setup(cfg, seed: int):
+    from repro.data.graph_data import CompressedGraphStore, make_powerlaw_graph
+    from repro.models import gnn as G
+
+    rng = np.random.default_rng(seed)
+    n, e_pad = 256, 2048
+    store = CompressedGraphStore(make_powerlaw_graph(rng, n, avg_degree=6))
+    feats = rng.normal(size=(n, cfg.d_in)).astype(np.float32)
+    labels = rng.integers(0, cfg.n_classes, n).astype(np.int32)
+
+    def batches(step):
+        r = np.random.default_rng(seed + step)
+        seeds = r.choice(n, size=32, replace=False)
+        nodes, edges = store.sample_subgraph(r, seeds, fanouts=(5, 5))
+        e = np.zeros((2, e_pad), np.int32)
+        m = np.zeros((e_pad,), bool)
+        k = min(edges.shape[1], e_pad)
+        e[:, :k] = edges[:, :k]
+        m[:k] = True
+        lm = np.zeros((n,), bool)
+        lm[nodes[: len(seeds)]] = True
+        return {"feats": feats, "edges": e, "edge_mask": m,
+                "labels": labels, "label_mask": lm}
+
+    params = G.init_params(jax.random.PRNGKey(seed), cfg)
+    return params, G.loss_fn, batches
+
+
+def build_training(arch: str, smoke: bool, batch: int, seq_len: int,
+                   model_scale: int = 1, seed: int = 0):
+    bundle = get_arch(arch)
+    cfg = bundle.smoke if smoke else bundle.full
+    if bundle.family == "lm" and model_scale > 1:
+        cfg = dataclasses.replace(
+            cfg,
+            n_layers=cfg.n_layers * 2,
+            d_model=cfg.d_model * model_scale,
+            d_ff=cfg.d_ff * model_scale,
+            n_heads=cfg.n_heads,
+            d_head=cfg.d_head * model_scale,
+            vocab=32768,
+        )
+    if bundle.family == "lm":
+        params, loss, batches = _lm_setup(cfg, batch, seq_len, seed)
+    elif bundle.family == "recsys":
+        params, loss, batches = _recsys_setup(cfg, batch, seed)
+    else:
+        params, loss, batches = _gnn_setup(cfg, seed)
+    step_fn = jax.jit(make_train_step(loss, cfg))
+    opt = adamw_init(params)
+
+    def step(state, b):
+        params, opt = state
+        params, opt, metrics = step_fn(params, opt, b)
+        return (params, opt), metrics
+
+    return (params, opt), step, batches, cfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--model-scale", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    state, step, batches, cfg = build_training(
+        args.arch, args.smoke, args.batch, args.seq_len, args.model_scale
+    )
+    from repro.models.common import tree_size
+
+    print(f"[train] arch={args.arch} params={tree_size(state[0]):,}")
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro-ckpt-")
+    manager = CheckpointManager(ckpt_dir, keep=2)
+    runner = FaultTolerantRunner(step, manager, save_every=args.save_every)
+    failure = SimulatedFailure(at_steps=tuple(args.fail_at)) if args.fail_at else None
+    state = runner.run(state, batches, args.steps, failure=failure,
+                       log_every=args.log_every)
+    print(f"[train] done: {runner.stats}")
+
+
+if __name__ == "__main__":
+    main()

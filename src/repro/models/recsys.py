@@ -1,0 +1,309 @@
+"""RecSys models: DCN-v2, DLRM, DIN, BST (pure JAX).
+
+The embedding lookup is the hot path.  JAX has no native EmbeddingBag: we
+implement it with ``jnp.take`` (+ ``segment_sum`` for multi-hot bags in the
+data pipeline); a Pallas kernel version lives in
+``repro.kernels.embedding_bag``.  All sparse tables are stored as ONE flat
+``[n_sparse * rows_per_field, embed_dim]`` array (row-sharded over the
+``model`` mesh axis), with per-field offsets baked into the lookup indices --
+the standard DLRM trick that makes the gather a single op.
+
+Four entry points: ``forward`` (CTR logit), ``loss_fn`` (binary logloss),
+``serve_score`` (forward without loss) and ``retrieval_step`` (one user vs.
+``n_candidates`` items, vectorized -- NOT a loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import dense_init, rms_norm, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str = "recsys"
+    kind: str = "dcn"  # dcn | dlrm | din | bst
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    rows_per_field: int = 1_000_000
+    # dcn
+    n_cross_layers: int = 3
+    mlp: tuple = (1024, 1024, 512)
+    # dlrm
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 512, 256)
+    # din / bst (sequential)
+    seq_len: int = 0
+    attn_mlp: tuple = (80, 40)
+    n_blocks: int = 1
+    n_heads: int = 8
+    item_vocab: int = 2_000_000
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def table_rows(self) -> int:
+        return self.n_sparse * self.rows_per_field
+
+    def param_count(self) -> int:
+        import numpy as np
+
+        tree = jax.eval_shape(lambda k: init_params(k, self), jax.random.PRNGKey(0))
+        return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+def _mlp_init(key, dims, name):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {"w": dense_init(ks[i], (dims[i], dims[i + 1])), "b": jnp.zeros((dims[i + 1],))}
+        for i in range(len(dims) - 1)
+    ]
+
+
+def _mlp_apply(layers, x, act=jax.nn.relu, last_act=True):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if last_act or i + 1 < len(layers):
+            x = act(x)
+    return x
+
+
+def init_params(key, cfg: RecsysConfig):
+    ks = split_keys(key, ["table", "item", "cross", "mlp", "bot", "top", "attn", "blk", "out", "pos"])
+    p: dict[str, Any] = {}
+    d = cfg.embed_dim
+    if cfg.kind in ("dcn", "dlrm"):
+        p["table"] = dense_init(ks["table"], (cfg.table_rows, d), scale=0.01)
+    else:
+        p["item_table"] = dense_init(ks["item"], (cfg.item_vocab, d), scale=0.01)
+
+    if cfg.kind == "dcn":
+        x0_dim = cfg.n_dense + cfg.n_sparse * d
+        kc = jax.random.split(ks["cross"], cfg.n_cross_layers)
+        p["cross"] = [
+            {"w": dense_init(kc[i], (x0_dim, x0_dim)), "b": jnp.zeros((x0_dim,))}
+            for i in range(cfg.n_cross_layers)
+        ]
+        p["mlp"] = _mlp_init(ks["mlp"], (x0_dim, *cfg.mlp), "mlp")
+        p["out"] = dense_init(ks["out"], (cfg.mlp[-1], 1))
+    elif cfg.kind == "dlrm":
+        p["bot"] = _mlp_init(ks["bot"], (cfg.n_dense, *cfg.bot_mlp), "bot")
+        nvec = cfg.n_sparse + 1
+        inter_dim = nvec * (nvec - 1) // 2 + cfg.bot_mlp[-1]
+        p["top"] = _mlp_init(ks["top"], (inter_dim, *cfg.top_mlp), "top")
+        p["out"] = dense_init(ks["out"], (cfg.top_mlp[-1], 1))
+    elif cfg.kind == "din":
+        p["attn"] = _mlp_init(ks["attn"], (4 * d, *cfg.attn_mlp, 1), "attn")
+        p["mlp"] = _mlp_init(ks["mlp"], (3 * d, 200, 80), "mlp")
+        p["out"] = dense_init(ks["out"], (80, 1))
+    elif cfg.kind == "bst":
+        L = cfg.seq_len + 1
+        p["pos"] = dense_init(ks["pos"], (L, d), scale=0.02)
+        kb = jax.random.split(ks["blk"], cfg.n_blocks)
+        p["blocks"] = []
+        for i in range(cfg.n_blocks):
+            k1, k2, k3, k4 = jax.random.split(kb[i], 4)
+            p["blocks"].append(
+                {
+                    "wqkv": dense_init(k1, (d, 3 * d)),
+                    "wo": dense_init(k2, (d, d)),
+                    "ln1": jnp.ones((d,)),
+                    "ln2": jnp.ones((d,)),
+                    "ff1": dense_init(k3, (d, 4 * d)),
+                    "ff2": dense_init(k4, (4 * d, d)),
+                }
+            )
+        p["mlp"] = _mlp_init(ks["mlp"], (L * d, 1024, 512, 256), "mlp")
+        p["out"] = dense_init(ks["out"], (256, 1))
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def param_specs(cfg: RecsysConfig, model_axis: str = "model"):
+    tree = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = jax.tree_util.tree_map(lambda _: P(), tree)
+    if cfg.kind in ("dcn", "dlrm"):
+        specs["table"] = P(model_axis, None)
+    else:
+        specs["item_table"] = P(model_axis, None)
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Embedding lookup (take-based; see repro.kernels.embedding_bag for Pallas)
+# --------------------------------------------------------------------------
+
+def embed_fields(table, sparse_ids, rows_per_field):
+    """sparse_ids: [B, F] per-field ids -> [B, F, d] (ids offset per field)."""
+    F = sparse_ids.shape[1]
+    offs = (jnp.arange(F) * rows_per_field)[None, :]
+    return jnp.take(table, sparse_ids + offs, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Forward per model kind
+# --------------------------------------------------------------------------
+
+def ctr_head(params, dense, emb, cfg: RecsysConfig):
+    """dcn/dlrm logits from a precomputed embedding block [B, F, d].
+
+    Split out of ``forward`` so the sparse-update train step (cells.py)
+    can differentiate w.r.t. ``emb`` instead of the full table."""
+    if cfg.kind == "dcn":
+        x0 = jnp.concatenate([dense, emb.reshape(emb.shape[0], -1)], -1)
+        x = x0
+        for l in params["cross"]:
+            x = x0 * (x @ l["w"] + l["b"]) + x  # DCN-v2 cross
+        h = _mlp_apply(params["mlp"], x)
+        return (h @ params["out"])[:, 0]
+    dv = _mlp_apply(params["bot"], dense)  # [B, 64]
+    vecs = jnp.concatenate([dv[:, None, :], emb], axis=1)  # [B, 27, d]
+    gram = jnp.einsum("bnd,bmd->bnm", vecs, vecs)
+    n = vecs.shape[1]
+    iu = jnp.triu_indices(n, k=1)
+    inter = gram[:, iu[0], iu[1]]  # [B, n(n-1)/2]
+    h = _mlp_apply(params["top"], jnp.concatenate([dv, inter], -1))
+    return (h @ params["out"])[:, 0]
+
+
+def forward(params, batch, cfg: RecsysConfig):
+    if cfg.kind in ("dcn", "dlrm"):
+        emb = embed_fields(params["table"], batch["sparse"], cfg.rows_per_field)
+        return ctr_head(params, batch["dense"], emb, cfg)
+    if cfg.kind == "din":
+        hist = jnp.take(params["item_table"], batch["history"], axis=0)  # [B,L,d]
+        tgt = jnp.take(params["item_table"], batch["target"], axis=0)  # [B,d]
+        return _din_head(params, hist, batch["hist_mask"], tgt, cfg)
+    if cfg.kind == "bst":
+        hist = jnp.take(params["item_table"], batch["history"], axis=0)
+        tgt = jnp.take(params["item_table"], batch["target"], axis=0)
+        return _bst_head(params, hist, batch["hist_mask"], tgt, cfg)
+    raise ValueError(cfg.kind)
+
+
+def _din_head(params, hist, hist_mask, tgt, cfg):
+    """hist: [B,L,d], tgt: [B,d] -> logits [B]."""
+    B, L, d = hist.shape
+    t = jnp.broadcast_to(tgt[:, None, :], hist.shape)
+    a_in = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)  # [B,L,4d]
+    scores = _mlp_apply(params["attn"], a_in, act=jax.nn.sigmoid, last_act=False)[..., 0]
+    scores = jnp.where(hist_mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    user = jnp.einsum("bl,bld->bd", w, hist)
+    h = _mlp_apply(params["mlp"], jnp.concatenate([user, tgt, user * tgt], -1))
+    return (h @ params["out"])[:, 0]
+
+
+def _bst_head(params, hist, hist_mask, tgt, cfg):
+    B, L, d = hist.shape
+    x = jnp.concatenate([hist, tgt[:, None, :]], axis=1) + params["pos"][None]
+    mask = jnp.concatenate([hist_mask, jnp.ones((B, 1), bool)], axis=1)  # [B,L+1]
+    H = cfg.n_heads
+    dh = d // H
+    for blk in params["blocks"]:
+        h = rms_norm(x, blk["ln1"])
+        qkv = h @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, L + 1, H, dh)
+        k = k.reshape(B, L + 1, H, dh)
+        v = v.reshape(B, L + 1, H, dh)
+        s = jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(dh)
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        p_attn = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhst,bthd->bshd", p_attn, v).reshape(B, L + 1, d)
+        x = x + o @ blk["wo"]
+        h = rms_norm(x, blk["ln2"])
+        x = x + jax.nn.relu(h @ blk["ff1"]) @ blk["ff2"]
+    h = _mlp_apply(params["mlp"], x.reshape(B, -1))
+    return (h @ params["out"])[:, 0]
+
+
+def loss_fn(params, batch, cfg: RecsysConfig):
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def serve_score(params, batch, cfg: RecsysConfig):
+    return forward(params, batch, cfg)
+
+
+def retrieval_step(params, batch, cfg: RecsysConfig):
+    """One user, n_candidates items: broadcast user features, vary the item.
+
+    For dcn/dlrm the candidate replaces sparse field 0; for din/bst it is the
+    attention target.  Vectorized over candidates (a batched-dot / batched
+    model apply -- not a loop).
+    """
+    cand = batch["candidates"]  # [C]
+    C = cand.shape[0]
+    if cfg.kind in ("dcn", "dlrm"):
+        sparse = jnp.broadcast_to(batch["sparse"], (C, cfg.n_sparse))
+        sparse = sparse.at[:, 0].set(cand)
+        dense = jnp.broadcast_to(batch["dense"], (C, cfg.n_dense))
+        return forward(params, {"dense": dense, "sparse": sparse}, cfg)
+    hist = jnp.take(params["item_table"], batch["history"], axis=0)  # [1,L,d]
+    hist = jnp.broadcast_to(hist, (C, *hist.shape[1:]))
+    mask = jnp.broadcast_to(batch["hist_mask"], (C, batch["hist_mask"].shape[1]))
+    tgt = jnp.take(params["item_table"], cand, axis=0)  # [C,d]
+    head = _din_head if cfg.kind == "din" else _bst_head
+    return head(params, hist, mask, tgt, cfg)
+
+
+# --------------------------------------------------------------------------
+# Dry-run input specs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: RecsysConfig, kind: str, batch: int, n_candidates: int = 0):
+    f32, i32 = jnp.float32, jnp.int32
+    if kind == "retrieval":
+        spec = {"candidates": jax.ShapeDtypeStruct((n_candidates,), i32)}
+        if cfg.kind in ("dcn", "dlrm"):
+            spec["dense"] = jax.ShapeDtypeStruct((1, cfg.n_dense), f32)
+            spec["sparse"] = jax.ShapeDtypeStruct((1, cfg.n_sparse), i32)
+        else:
+            spec["history"] = jax.ShapeDtypeStruct((1, cfg.seq_len), i32)
+            spec["hist_mask"] = jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.bool_)
+        return spec
+    if cfg.kind in ("dcn", "dlrm"):
+        spec = {
+            "dense": jax.ShapeDtypeStruct((batch, cfg.n_dense), f32),
+            "sparse": jax.ShapeDtypeStruct((batch, cfg.n_sparse), i32),
+        }
+    else:
+        spec = {
+            "history": jax.ShapeDtypeStruct((batch, cfg.seq_len), i32),
+            "hist_mask": jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.bool_),
+            "target": jax.ShapeDtypeStruct((batch,), i32),
+        }
+    if kind == "train":
+        spec["label"] = jax.ShapeDtypeStruct((batch,), f32)
+    return spec
+
+
+def batch_specs(cfg: RecsysConfig, kind: str, data_axes=("pod", "data")):
+    d = data_axes
+    if kind == "retrieval":
+        spec = {"candidates": P(d)}
+        if cfg.kind in ("dcn", "dlrm"):
+            spec.update({"dense": P(), "sparse": P()})
+        else:
+            spec.update({"history": P(), "hist_mask": P()})
+        return spec
+    if cfg.kind in ("dcn", "dlrm"):
+        spec = {"dense": P(d), "sparse": P(d)}
+    else:
+        spec = {"history": P(d), "hist_mask": P(d), "target": P(d)}
+    if kind == "train":
+        spec["label"] = P(d)
+    return spec

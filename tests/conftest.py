@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests see the default device count (1 CPU device) -- the 512-device override
+# belongs ONLY to repro.launch.dryrun (see its module header).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,87 @@
+"""Codec roundtrips + cost-function invariants (VByte family, bit-vector)."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bitvector import (
+    bitvector_decode,
+    bitvector_encode,
+    bitvector_next_geq,
+)
+from repro.core.costs import bit_length_np, elem_costs_np, vbyte_cost_bits_np
+from repro.core.vbyte import (
+    streamvbyte_cost_bytes,
+    streamvbyte_decode,
+    streamvbyte_encode,
+    varint_g8iu_cost_bytes,
+    vbyte_cost_bytes,
+    vbyte_decode,
+    vbyte_encode,
+)
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=0, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_vbyte_roundtrip(values):
+    v = np.asarray(values, dtype=np.uint64)
+    stream = vbyte_encode(v)
+    assert stream.size == vbyte_cost_bytes(v)
+    out = vbyte_decode(stream, len(values))
+    assert np.array_equal(out, v)
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=0, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_streamvbyte_roundtrip(values):
+    v = np.asarray(values, dtype=np.uint32)
+    control, data = streamvbyte_encode(v)
+    out = streamvbyte_decode(control, data, len(values))
+    assert np.array_equal(out.astype(np.uint32), v)
+    assert control.size + data.size == streamvbyte_cost_bytes(v)
+
+
+def test_vbyte_cost_paper_example():
+    # paper: 65790 encodes in 3 bytes (10000100 10000001 01111110)
+    assert vbyte_cost_bits_np(np.array([65790]))[0] == 24
+    assert vbyte_cost_bits_np(np.array([0]))[0] == 8
+    assert vbyte_cost_bits_np(np.array([127]))[0] == 8
+    assert vbyte_cost_bits_np(np.array([128]))[0] == 16
+
+
+def test_bit_length_boundaries():
+    vals = np.array([0, 1, 2, 3, 127, 128, 255, 256, 2**20 - 1, 2**20, 2**31 - 1, 2**40])
+    want = np.array([1, 1, 2, 2, 7, 8, 8, 9, 20, 21, 31, 41])
+    assert np.array_equal(bit_length_np(vals), want)
+
+
+def test_g8iu_grouping():
+    # 8 single-byte values fit one 9-byte group
+    assert varint_g8iu_cost_bytes(np.arange(8)) == 9
+    # a 4-byte value after 6 single bytes forces a new group
+    vals = np.array([1] * 6 + [2**30])
+    assert varint_g8iu_cost_bytes(vals) == 18
+
+
+@given(st.sets(st.integers(0, 499), min_size=1))
+@settings(max_examples=40, deadline=None)
+def test_bitvector_roundtrip_and_nextgeq(values):
+    vals = np.asarray(sorted(values), dtype=np.int64)
+    universe = int(vals[-1]) + 1
+    payload = bitvector_encode(vals, universe)
+    assert np.array_equal(bitvector_decode(payload, universe), vals)
+    for x in (0, int(vals[0]), int(vals[-1]), universe - 1, universe + 5):
+        got = bitvector_next_geq(payload, universe, x)
+        later = vals[vals >= x]
+        want = int(later[0]) if later.size else -1
+        assert got == want
+
+
+def test_elem_costs_match_encoders():
+    """E_k must equal the actual VByte bytes of (gap-1) * 8."""
+    rng = np.random.default_rng(0)
+    gaps = rng.integers(1, 2**28, 500).astype(np.int64)
+    e, b = elem_costs_np(gaps)
+    for g, ek in zip(gaps[:64], e[:64]):
+        assert ek == vbyte_encode(np.array([g - 1], np.uint64)).size * 8
+    assert np.array_equal(b, gaps)

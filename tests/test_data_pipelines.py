@@ -1,0 +1,85 @@
+"""Data pipelines: clustered postings, compressed shard index, graph store."""
+
+import numpy as np
+
+from repro.data.graph_data import CompressedGraphStore, make_powerlaw_graph
+from repro.data.lm_data import ShardedBatchLoader, TokenStream
+from repro.data.postings import make_corpus, make_posting_list, make_queries
+from repro.data.recsys_data import (
+    decode_multihot_batch,
+    make_ctr_batch,
+    make_multihot_store,
+)
+
+
+def test_posting_list_properties():
+    rng = np.random.default_rng(0)
+    seq = make_posting_list(rng, 10_000)
+    assert (np.diff(seq) > 0).all()
+    # clustered: mean gap far below the sparse mean, many unit gaps
+    gaps = np.diff(seq)
+    assert (gaps == 1).mean() > 0.3
+
+
+def test_corpus_and_queries():
+    rng = np.random.default_rng(1)
+    corpus = make_corpus(rng, n_lists=8, min_len=100, max_len=2000)
+    assert len(corpus) == 8
+    qs = make_queries(rng, 8, n_queries=5, arity=2)
+    assert all(len(set(q)) == 2 for q in qs)
+
+
+def test_lm_loader_deterministic_and_compressed():
+    stream = TokenStream(vocab=512, length=20_000, seed=3)
+    loader = ShardedBatchLoader(stream, batch=4, seq_len=64, seed=3)
+    b1 = loader.batch_at(2)
+    b2 = loader.batch_at(2)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 64)
+    # labels are next-token shifted
+    assert np.array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert loader.compressed_index_bytes < loader.offsets().size * 8
+
+
+def test_lm_loader_prefetch_iterator():
+    stream = TokenStream(vocab=128, length=10_000, seed=0)
+    loader = ShardedBatchLoader(stream, batch=2, seq_len=32, seed=0, prefetch=2)
+    batches = list(loader)
+    assert len(batches) == loader.n_batches
+
+
+def test_recsys_batches():
+    from repro.configs import get_arch
+
+    rng = np.random.default_rng(0)
+    for arch in ("dcn-v2", "din"):
+        cfg = get_arch(arch).smoke
+        b = make_ctr_batch(rng, cfg, 16)
+        assert b["label"].shape == (16,)
+
+
+def test_multihot_store_roundtrip():
+    rng = np.random.default_rng(0)
+    store = make_multihot_store(rng, n_users=20, vocab=5000, mean_items=40)
+    ids, mask = decode_multihot_batch(store, [0, 3, 7], pad_to=64)
+    assert ids.shape == (3, 64)
+    assert mask.any(axis=1).all()
+    for i, u in enumerate([0, 3, 7]):
+        want = store.decode_list(u)[:64]
+        assert np.array_equal(ids[i, : want.size], want)
+
+
+def test_graph_store_and_sampler():
+    rng = np.random.default_rng(0)
+    adj = make_powerlaw_graph(rng, n_nodes=200, avg_degree=5)
+    store = CompressedGraphStore(adj)
+    assert store.compressed_bytes < store.raw_bytes
+    for u in (0, 13, 199):
+        assert np.array_equal(store.neighbors(u), adj[u])
+    seeds = rng.choice(200, size=8, replace=False)
+    nodes, edges = store.sample_subgraph(rng, seeds, fanouts=(4, 3))
+    assert edges.max() < nodes.size
+    # every sampled edge endpoint is a real graph edge
+    for s, d in edges.T[:20]:
+        u, v = int(nodes[d]), int(nodes[s])
+        assert v in set(adj[u]) or u in set(adj[v])

@@ -1,0 +1,98 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs ref.py oracles."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.ops import multi_hot_embed
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.gain_scan.ops import gain_prefix, optimal_partitioning_blocked
+from repro.kernels.gain_scan.ref import gain_scan_ref
+from repro.kernels.vbyte_decode.ops import decode, decode_sorted, pack_blocks
+from repro.kernels.vbyte_decode.ref import decode_blocks_ref
+
+
+# ------------------------------ vbyte_decode ------------------------------
+
+@pytest.mark.parametrize("n,hi", [
+    (100, 2**7), (1024, 2**14), (3000, 2**21), (2048, 2**30), (1, 2**31 - 1),
+])
+def test_vbyte_decode_sweep(n, hi):
+    rng = np.random.default_rng(n)
+    vals = rng.integers(0, hi, n).astype(np.uint32)
+    lens, data, n_out = pack_blocks(vals)
+    out_kernel = np.asarray(decode(lens, data, n_out, use_kernel=True))
+    out_ref = np.asarray(
+        decode_blocks_ref(jnp.asarray(lens), jnp.asarray(data))
+    ).reshape(-1)[:n_out]
+    np.testing.assert_array_equal(out_kernel, vals)
+    np.testing.assert_array_equal(out_ref, vals)
+
+
+def test_vbyte_decode_sorted_ids():
+    rng = np.random.default_rng(3)
+    seq = np.cumsum(rng.integers(1, 5000, 4000)) - 1
+    gaps = np.diff(np.concatenate([[-1], seq]))
+    lens, data, n = pack_blocks((gaps - 1).astype(np.uint32))
+    dec = np.asarray(decode_sorted(lens, data, n))
+    np.testing.assert_array_equal(dec, seq)
+
+
+# ------------------------------ gain_scan ---------------------------------
+
+@pytest.mark.parametrize("n", [1024, 2048, 4096, 5000])
+@pytest.mark.parametrize("dense_frac", [0.0, 0.5, 0.95])
+def test_gain_scan_sweep(n, dense_frac):
+    rng = np.random.default_rng(n + int(dense_frac * 10))
+    # universe stays < 2^31 (32-bit docIDs, the kernel's documented regime)
+    gaps = np.where(
+        rng.random(n) < dense_frac, rng.integers(1, 3, n), rng.integers(1, 10**5, n)
+    ).astype(np.int64)
+    from repro.core.costs import gain_deltas_np
+
+    want = np.cumsum(gain_deltas_np(gaps))
+    g, mn, mx = gain_prefix(gaps, use_kernel=True)
+    np.testing.assert_array_equal(g, want)
+    # jnp oracle agrees
+    n_pad = ((n + 1023) // 1024) * 1024
+    gp = np.ones(n_pad, np.int32)
+    gp[:n] = gaps
+    gr, mnr, mxr = gain_scan_ref(jnp.asarray(gp))
+    np.testing.assert_array_equal(np.asarray(gr)[:n], want)
+    np.testing.assert_array_equal(mn, np.asarray(mnr))
+    np.testing.assert_array_equal(mx, np.asarray(mxr))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_blocked_partitioner_exact(seed):
+    from repro.core.partition import dp_optimal, optimal_partitioning, partitioning_cost
+
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(50, 3000))
+    gaps = np.where(
+        rng.random(n) < 0.8, rng.integers(1, 3, n), rng.integers(1, 10**5, n)
+    ).astype(np.int64)
+    P_paper = optimal_partitioning(gaps)
+    P_blocked = optimal_partitioning_blocked(gaps)
+    np.testing.assert_array_equal(P_paper, P_blocked)
+    c_dp, _ = dp_optimal(gaps) if n <= 400 else (None, None)
+    if c_dp is not None:
+        assert partitioning_cost(gaps, P_blocked) == c_dp
+
+
+# ------------------------------ embedding_bag -----------------------------
+
+@pytest.mark.parametrize("B,K,V,D", [
+    (4, 3, 64, 128), (16, 8, 1024, 128), (8, 16, 256, 256), (1, 1, 8, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_sweep(B, K, V, D, dtype):
+    rng = np.random.default_rng(B * K)
+    table = jnp.asarray(rng.normal(size=(V, D)), dtype)
+    ids = jnp.asarray(rng.integers(0, V, (B, K)), jnp.int32)
+    mask = jnp.asarray(rng.random((B, K)) < 0.7)
+    out_k = multi_hot_embed(table, ids, mask, use_kernel=True)
+    out_r = embedding_bag_ref(table, ids, mask.astype(jnp.float32)).astype(jnp.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=tol, atol=tol)

@@ -1,0 +1,110 @@
+"""The paper's core claim: the linear-time algorithm is EXACT (Lemma 1/2).
+
+Every test validates against the O(n^2) DP oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.partition import (
+    dp_optimal,
+    eps_optimal,
+    optimal_partitioning,
+    optimal_partitioning_via_scan,
+    partitioning_cost,
+    uniform_partitioning,
+    unpartitioned_cost,
+)
+
+
+def _random_gaps(rng, n, dense_frac=0.7, max_sparse=5000):
+    return np.where(
+        rng.random(n) < dense_frac,
+        rng.integers(1, 3, n),
+        rng.integers(1, max_sparse, n),
+    ).astype(np.int64)
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("F", [16, 64, 256])
+def test_optimal_matches_dp_oracle(seed, F):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 250))
+    gaps = _random_gaps(rng, n)
+    c_dp, _ = dp_optimal(gaps, F)
+    P = optimal_partitioning(gaps, F)
+    assert partitioning_cost(gaps, P, F) == c_dp
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_lax_scan_version_matches_python(seed):
+    rng = np.random.default_rng(100 + seed)
+    gaps = _random_gaps(rng, int(rng.integers(1, 400)))
+    P1 = optimal_partitioning(gaps, 64)
+    P2 = optimal_partitioning_via_scan(gaps, 64)
+    assert np.array_equal(P1, P2)
+
+
+@given(
+    gaps=st.lists(
+        st.one_of(st.integers(1, 2), st.integers(1, 100_000)), min_size=1, max_size=120
+    ),
+    F=st.sampled_from([8, 64, 128]),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_optimality(gaps, F):
+    gaps = np.asarray(gaps, dtype=np.int64)
+    c_dp, _ = dp_optimal(gaps, F)
+    P = optimal_partitioning(gaps, F)
+    cost = partitioning_cost(gaps, P, F)
+    assert cost == c_dp
+    # strictly increasing endpoints, last == n
+    assert (np.diff(P) > 0).all() or len(P) == 1
+    assert P[-1] == len(gaps)
+
+
+@given(
+    gaps=st.lists(st.integers(1, 10_000), min_size=1, max_size=150),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_hierarchy(gaps):
+    """opt <= eps-opt <= uniform(128) and opt <= un-partitioned."""
+    gaps = np.asarray(gaps, dtype=np.int64)
+    c_opt = partitioning_cost(gaps, optimal_partitioning(gaps, 64), 64)
+    c_eps = partitioning_cost(gaps, eps_optimal(gaps, 64), 64)
+    c_uni = partitioning_cost(gaps, uniform_partitioning(len(gaps), 128), 64)
+    assert c_opt <= c_eps <= max(c_uni, c_eps)
+    assert c_opt <= c_uni
+    assert c_opt <= unpartitioned_cost(gaps, 64)
+
+
+def test_edge_cases():
+    for gaps in (
+        np.array([1]),
+        np.array([10**9]),
+        np.ones(1000, dtype=np.int64),
+        np.full(1000, 10**6, dtype=np.int64),
+        np.array([1, 1, 1, 10**6, 1, 1, 1]),
+    ):
+        for F in (8, 64):
+            c_dp, _ = dp_optimal(gaps, F)
+            P = optimal_partitioning(gaps, F)
+            assert partitioning_cost(gaps, P, F) == c_dp
+
+
+def test_alternating_encoders():
+    """Adjacent partitions must use different encoders (paper section 3.2)."""
+    from repro.core.partition import partition_payload_costs
+
+    rng = np.random.default_rng(5)
+    # strongly clustered: long dense runs then sparse bursts
+    gaps = np.concatenate(
+        [np.ones(500, np.int64), rng.integers(10**4, 10**6, 50),
+         np.ones(700, np.int64), rng.integers(10**4, 10**6, 80)]
+    )
+    P = optimal_partitioning(gaps, 64)
+    pe, pb = partition_payload_costs(gaps, P)
+    encoders = (pe <= pb).astype(int)  # 1 = VByte wins
+    assert len(P) >= 3
+    assert (np.diff(encoders) != 0).all(), encoders

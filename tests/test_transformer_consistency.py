@@ -1,0 +1,99 @@
+"""Numerical consistency of the attention paths (the serving correctness
+story): chunked flash == full attention; decode == teacher-forced prefill;
+sliding-window masking."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (
+    TransformerConfig,
+    forward,
+    init_cache,
+    init_params,
+    prefill_step,
+    serve_step,
+)
+
+BASE = dict(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_head=8,
+            d_ff=64, vocab=97, compute_dtype=jnp.float32)
+
+
+def _params_tokens(cfg, B=2, S=16):
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    return params, tok
+
+
+def test_chunked_equals_full():
+    cfg_full = TransformerConfig(attn_chunk=10**6, **BASE)
+    cfg_chunk = TransformerConfig(attn_chunk=4, **BASE)
+    params, tok = _params_tokens(cfg_full)
+    h1, _ = forward(params, tok, cfg_full)
+    h2, _ = forward(params, tok, cfg_chunk)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_equals_full_swa():
+    cfg_full = TransformerConfig(attn_chunk=10**6, sliding_window=8, **BASE)
+    cfg_chunk = TransformerConfig(attn_chunk=4, sliding_window=8, **BASE)
+    params, tok = _params_tokens(cfg_full)
+    h1, _ = forward(params, tok, cfg_full)
+    h2, _ = forward(params, tok, cfg_chunk)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_decode_matches_prefill(window):
+    cfg = TransformerConfig(sliding_window=window, attn_chunk=10**6, **BASE)
+    params, tok = _params_tokens(cfg)
+    B, S = tok.shape
+    logits_pf, _ = prefill_step(params, tok, cfg)
+    cache = init_cache(cfg, B, S)
+    for i in range(S):
+        lg, cache = serve_step(params, cache, tok[:, i], jnp.int32(i), cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_pf), rtol=1e-4, atol=1e-4)
+
+
+def test_swa_ring_buffer_beyond_window():
+    """Decoding past the window must equal full recompute with SWA mask."""
+    cfg = TransformerConfig(sliding_window=8, attn_chunk=10**6, **BASE)
+    params, tok = _params_tokens(cfg, S=16)
+    B, S = tok.shape
+    # decode all 16 tokens through the ring cache (cache holds last 8)
+    cache = init_cache(cfg, B, S)
+    assert cache.shape[3] == 8  # ring buffer is window-sized
+    for i in range(S):
+        lg, cache = serve_step(params, cache, tok[:, i], jnp.int32(i), cfg)
+    logits_pf, _ = prefill_step(params, tok, cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_pf), rtol=1e-4, atol=1e-4)
+
+
+def test_sliding_window_ignores_distant_past():
+    """Changing tokens older than the window must not change the last logits
+    (with a single layer; deeper stacks propagate beyond the window)."""
+    cfg = TransformerConfig(**{**BASE, "n_layers": 1, "sliding_window": 4,
+                               "attn_chunk": 10**6})
+    params, tok = _params_tokens(cfg, S=12)
+    h1, _ = forward(params, tok, cfg)
+    tok2 = tok.at[:, 0:4].set((tok[:, 0:4] + 1) % cfg.vocab)
+    h2, _ = forward(params, tok2, cfg)
+    np.testing.assert_allclose(
+        np.asarray(h1[:, -1]), np.asarray(h2[:, -1]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_moe_routes_and_trains():
+    cfg = TransformerConfig(n_experts=4, top_k=2, **BASE)
+    params, tok = _params_tokens(cfg)
+    def loss(p):
+        from repro.models.transformer import lm_loss
+        return lm_loss(p, tok, tok, cfg)
+    l, g = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(l))
+    # every expert receives gradient signal (w1 grads nonzero per expert)
+    g1 = np.asarray(g["layers"]["w1"])  # [L, E, d, ff]
+    per_expert = np.abs(g1).sum(axis=(0, 2, 3))
+    assert (per_expert > 0).all()
