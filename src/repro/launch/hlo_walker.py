@@ -143,14 +143,15 @@ def _operand_names(line: str) -> list[str]:
     if not m:
         return []
     inner = m.group(1)
-    # cut at attribute list (", dimensions=", ", to_apply=" ...)
+    # split at top-level commas; operand types carry commas inside [] / {} /
+    # () (e.g. "f32[256,128]{1,0} %Arg_0.1"), so track all three bracket kinds
     depth = 0
     out = []
     tok = ""
     for ch in inner:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
+        elif ch in ")]}":
             depth -= 1
         if ch == "," and depth == 0:
             out.append(tok.strip())
@@ -161,9 +162,12 @@ def _operand_names(line: str) -> list[str]:
         out.append(tok.strip())
     names = []
     for t in out:
-        if "=" in t and "%" not in t:
-            break
-        mm = re.match(r"%?([\w.\-]+)", t.lstrip("%"))
+        if re.match(r"^[\w\-]+=", t):
+            break  # attribute list reached ("dimensions={...}", "metadata=...")
+        # an operand is "<type> %name" (typed form) or bare "%name" / "name";
+        # the reference is always the last whitespace-separated field
+        last = t.split()[-1] if t.split() else ""
+        mm = re.match(r"^%?([\w.\-]+)$", last)
         if mm and not re.match(r"^\d+$", mm.group(1)):
             names.append(mm.group(1))
     return names

@@ -1,11 +1,14 @@
 """Index serving: the paper's own application as a batched query service.
 
-  PYTHONPATH=src python -m repro.launch.serve --n-lists 64 --queries 200
+  PYTHONPATH=src python -m repro.launch.serve --n-lists 64 --queries 512
 
 Builds an optimally-partitioned VByte index over a synthetic clustered
-corpus, then serves batched boolean-AND queries, reporting space vs. the
-un-partitioned baseline and per-query latency -- the end-to-end behaviour
-the paper's Tables 3/5 measure.
+corpus, then serves boolean-AND queries through the batched
+``repro.core.query_engine.QueryEngine`` (vectorized partition location +
+Stream-VByte block decode + LRU partition cache), reporting space vs. the
+un-partitioned baseline, throughput, and per-batch latency percentiles.
+``--compare-scalar`` also times the per-query NextGEQ loop and verifies the
+batched results against it.
 """
 
 from __future__ import annotations
@@ -16,7 +19,27 @@ import time
 import numpy as np
 
 from repro.core import build_partitioned_index, build_unpartitioned_index
+from repro.core.query_engine import QueryEngine
 from repro.data.postings import make_corpus, make_queries
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def serve_batches(
+    engine: QueryEngine, queries: list[list[int]], batch: int
+) -> tuple[list[np.ndarray], list[float]]:
+    """Run all queries through the engine in batches; returns (results,
+    per-batch wall latencies in seconds)."""
+    results: list[np.ndarray] = []
+    latencies: list[float] = []
+    for i in range(0, len(queries), batch):
+        chunk = queries[i : i + batch]
+        t0 = time.perf_counter()
+        results.extend(engine.intersect_batch(chunk))
+        latencies.append(time.perf_counter() - t0)
+    return results, latencies
 
 
 def main() -> None:
@@ -24,8 +47,14 @@ def main() -> None:
     ap.add_argument("--n-lists", type=int, default=64)
     ap.add_argument("--min-len", type=int, default=1_000)
     ap.add_argument("--max-len", type=int, default=100_000)
-    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--arity", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "numpy", "ref", "pallas"])
+    ap.add_argument("--compare-scalar", action="store_true",
+                    help="also time the per-query NextGEQ loop and verify "
+                         "the batched results against it")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -47,14 +76,42 @@ def main() -> None:
           f"({base.bits_per_int()/idx.bits_per_int():.2f}x); "
           f"build {n_postings/max(t_build,1e-9)/1e6:.1f} M ints/s")
 
-    queries = make_queries(rng, args.n_lists, args.queries, args.arity)
+    queries = [
+        [int(t) for t in q]
+        for q in make_queries(rng, args.n_lists, args.queries, args.arity)
+    ]
+    engine = QueryEngine(idx, backend=args.backend)
+    # warm-up batch: triggers the one-time arena transcode + jit on device
+    engine.intersect_batch(queries[: args.batch])
+
     t0 = time.perf_counter()
-    n_results = 0
-    for q in queries:
-        n_results += idx.intersect(q).size
-    dt = (time.perf_counter() - t0) / len(queries)
-    print(f"[serve] AND queries: {dt*1e3:.2f} ms/query avg, "
+    results, lat = serve_batches(engine, queries, args.batch)
+    wall = time.perf_counter() - t0
+    n_results = sum(r.size for r in results)
+    sizes = [len(queries[i : i + args.batch])
+             for i in range(0, len(queries), args.batch)]
+    per_q = [l / max(s, 1) for l, s in zip(lat, sizes)]
+    print(f"[serve] batched AND ({engine.backend}, batch={args.batch}): "
+          f"{len(queries)/wall:,.0f} q/s, "
+          f"{wall/len(queries)*1e3:.3f} ms/query avg, "
           f"{n_results:,} results total")
+    print(f"[serve] batch latency: p50 {_percentile(lat, 50)*1e3:.2f} ms  "
+          f"p90 {_percentile(lat, 90)*1e3:.2f} ms  "
+          f"p99 {_percentile(lat, 99)*1e3:.2f} ms  "
+          f"(per-query p50 {_percentile(per_q, 50)*1e3:.3f} ms)")
+    print(f"[serve] engine stats: {engine.stats}")
+
+    if args.compare_scalar:
+        n_check = min(len(queries), 128)
+        t0 = time.perf_counter()
+        scalar = [idx.intersect_scalar(q) for q in queries[:n_check]]
+        dt = time.perf_counter() - t0
+        for q, got, want in zip(queries[:n_check], results[:n_check], scalar):
+            assert np.array_equal(got, want), f"mismatch on query {q}"
+        speedup = (dt / n_check) / (wall / len(queries))
+        print(f"[serve] scalar loop: {dt/n_check*1e3:.2f} ms/query over "
+              f"{n_check} queries -> batched speedup {speedup:.1f}x, "
+              f"results identical")
 
 
 if __name__ == "__main__":

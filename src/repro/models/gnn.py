@@ -162,7 +162,7 @@ def forward_dst_sharded(params, feats_loc, edges_loc, edge_mask_loc, cfg: GINCon
 def loss_fn_dst_sharded(params, batch, cfg: GINConfig, mesh=None):
     """batch: feats [N,d], edges [2,E] dst-grouped, edge_mask, labels,
     label_mask -- all sharded over every mesh axis (see batch_specs_sharded)."""
-    from jax.sharding import get_abstract_mesh
+    from repro.compat import get_abstract_mesh
 
     mesh = mesh or get_abstract_mesh()
     if mesh is None or not mesh.axis_names:

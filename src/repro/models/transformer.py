@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh
+
 from .common import dense_init, rms_norm, split_keys
 
 
@@ -33,7 +35,7 @@ def maybe_shard(x: jnp.ndarray, spec: P) -> jnp.ndarray:
     same model code runs under the single-pod mesh (no "pod" axis), the
     multi-pod mesh, and un-meshed CPU smoke tests.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     names = set(mesh.axis_names)
@@ -464,8 +466,6 @@ def moe_ffn_shard_map(x, router, w1, w3, w2, cfg: TransformerConfig):
 
     Falls back to the pjit ``moe_ffn`` when no mesh is active.
     """
-    from jax.sharding import get_abstract_mesh
-
     mesh = get_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return moe_ffn(x, router, w1, w3, w2, cfg)

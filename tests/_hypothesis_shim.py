@@ -1,0 +1,107 @@
+"""Minimal stand-in for the slice of the `hypothesis` API this suite uses.
+
+The container may not ship `hypothesis`; rather than losing the property
+tests (codecs / index / partitioning roundtrips vs the DP oracle), conftest
+installs this shim into ``sys.modules`` when the real package is absent.
+
+It is NOT hypothesis: no shrinking, no database, no adaptive generation --
+just deterministic seeded random examples, enough to exercise the same
+assertions on every machine.  Supported surface:
+
+  given(*strategies, **strategies), settings(max_examples=, deadline=),
+  strategies.integers / lists / sets / sampled_from / one_of.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def one_of(*strategies) -> _Strategy:
+    return _Strategy(lambda rng: strategies[rng.randrange(len(strategies))].draw(rng))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int | None = None) -> _Strategy:
+    def draw(rng):
+        hi = max_size if max_size is not None else min_size + 25
+        return [elements.draw(rng) for _ in range(rng.randint(min_size, hi))]
+
+    return _Strategy(draw)
+
+
+def sets(elements: _Strategy, min_size: int = 0, max_size: int | None = None) -> _Strategy:
+    def draw(rng):
+        hi = max_size if max_size is not None else min_size + 25
+        want = rng.randint(min_size, hi)
+        out: set = set()
+        for _ in range(50 * (want + 1)):
+            if len(out) >= want:
+                break
+            out.add(elements.draw(rng))
+        if len(out) < min_size:  # element domain smaller than min_size
+            raise ValueError(
+                f"sets(): could not draw {min_size} distinct elements"
+            )
+        return out
+
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        # zero-arg wrapper on purpose: pytest must not mistake the strategy
+        # parameters for fixtures (real hypothesis hides them the same way)
+        def wrapper():
+            n = getattr(fn, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+            for _ in range(n):
+                args = [s.draw(rng) for s in arg_strategies]
+                kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register the shim as the `hypothesis` package in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "lists", "sets", "sampled_from", "one_of"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,167 @@
+"""Batched query engine vs the scalar NextGEQ loop and numpy oracles.
+
+Covers the ISSUE-1 acceptance surface: randomized clustered corpora (mixing
+bit-vector and VByte partitions), empty intersections, multi-term queries,
+the LRU decoded-partition cache, and backend agreement (numpy / jnp-ref /
+Pallas-interpret block decode)."""
+
+import numpy as np
+import pytest
+
+from repro.core.index import (
+    TAG_BITVECTOR,
+    build_partitioned_index,
+    build_unpartitioned_index,
+)
+from repro.core.query_engine import QueryEngine
+from repro.data.postings import make_corpus, make_queries
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    # Gov2-like clustering so the optimal index mixes both partition codecs
+    return make_corpus(rng, n_lists=10, min_len=500, max_len=6000,
+                       mean_dense_gap=2.13, frac_dense=0.8)
+
+
+@pytest.fixture(scope="module", params=["optimal", "uniform"])
+def index(request, corpus):
+    idx = build_partitioned_index(corpus, request.param)
+    if request.param == "optimal":
+        assert (idx.tags == TAG_BITVECTOR).any(), "want bit-vector coverage"
+    return idx
+
+
+def _oracle(corpus, q):
+    want = corpus[q[0]]
+    for t in q[1:]:
+        want = np.intersect1d(want, corpus[t])
+    return want
+
+
+def test_batched_equals_scalar_and_oracle(index, corpus):
+    rng = np.random.default_rng(0)
+    queries = [
+        [int(t) for t in q]
+        for arity in (2, 3, 4)
+        for q in make_queries(rng, len(corpus), 8, arity)
+    ]
+    batched = index.engine.intersect_batch(queries)
+    assert len(batched) == len(queries)
+    for q, got in zip(queries, batched):
+        assert np.array_equal(got, index.intersect_scalar(q)), q
+        assert np.array_equal(got, _oracle(corpus, q)), q
+
+
+def test_empty_intersection_and_degenerate_queries(index, corpus):
+    # disjoint ranges: list over [0, 10k) vs list over [10M, ...)
+    lists = [np.arange(0, 10_000, 2, dtype=np.int64),
+             np.arange(10_000_000, 10_005_000, dtype=np.int64),
+             np.arange(1, 10_000, 2, dtype=np.int64)]  # odd vs even: empty too
+    idx = build_partitioned_index(lists, "optimal")
+    out = idx.engine.intersect_batch([[0, 1], [0, 2], [1, 2], [0], [2, 2], []])
+    assert out[0].size == 0 and out[1].size == 0 and out[2].size == 0
+    assert np.array_equal(out[3], lists[0])  # single-term = full list
+    assert np.array_equal(out[4], lists[2])  # duplicated term = identity
+    assert out[5].size == 0  # empty query
+    # empties interleaved with non-empty results in one batch
+    mixed = idx.engine.intersect_batch([[0, 1], [0], [1, 2]])
+    assert mixed[0].size == 0 and mixed[2].size == 0
+    assert np.array_equal(mixed[1], lists[0])
+
+
+def test_thin_wrapper_delegates(index, corpus):
+    """PartitionedIndex.intersect is the batched engine, single query."""
+    rng = np.random.default_rng(3)
+    for q in make_queries(rng, len(corpus), 6, 2):
+        q = [int(t) for t in q]
+        assert np.array_equal(index.intersect(q), index.intersect_scalar(q))
+
+
+def test_next_geq_batch_oracle(index, corpus):
+    rng = np.random.default_rng(1)
+    terms, probes, want = [], [], []
+    for t, seq in enumerate(corpus):
+        xs = np.concatenate([
+            rng.integers(0, int(seq[-1]) + 10, 50), seq[:3], seq[-3:],
+            [0, int(seq[-1]), int(seq[-1]) + 1],
+        ])
+        ks = np.searchsorted(seq, xs, "left")
+        terms.append(np.full(len(xs), t))
+        probes.append(xs)
+        want.append(np.where(ks < len(seq), seq[np.minimum(ks, len(seq) - 1)], -1))
+    got = index.engine.next_geq_batch(
+        np.concatenate(terms), np.concatenate(probes)
+    )
+    assert np.array_equal(got, np.concatenate(want))
+
+
+def test_member_batch(index, corpus):
+    rng = np.random.default_rng(2)
+    for t, seq in enumerate(corpus[:4]):
+        xs = np.concatenate([seq[::7], rng.integers(0, int(seq[-1]) + 5, 100)])
+        got = index.engine.member_batch(np.full(len(xs), t), xs)
+        want = np.isin(xs, seq)
+        assert np.array_equal(got, want), t
+
+
+def test_unpartitioned_container_also_served(corpus):
+    """The blocked-VByte baseline rides the same engine (all-VByte tags)."""
+    idx = build_unpartitioned_index(corpus)
+    q = [0, 1]
+    assert np.array_equal(idx.intersect(q), _oracle(corpus, q))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "ref", "pallas"])
+def test_backends_agree(backend):
+    rng = np.random.default_rng(11)
+    small = make_corpus(rng, n_lists=4, min_len=300, max_len=1500,
+                        mean_dense_gap=2.13, frac_dense=0.8)
+    idx = build_partitioned_index(small, "optimal")
+    engine = QueryEngine(idx, backend=backend)
+    queries = [[0, 1], [2, 3], [0, 3], [1, 2], [0, 1, 2]]
+    got = engine.intersect_batch(queries)
+    for q, g in zip(queries, got):
+        assert np.array_equal(g, _oracle(small, q)), (backend, q)
+
+
+def test_lru_cache_eviction_stays_correct():
+    rng = np.random.default_rng(5)
+    lists = [np.sort(rng.choice(200_000, 3000, replace=False)) for _ in range(6)]
+    idx = build_partitioned_index(lists, "optimal")
+    engine = QueryEngine(idx, cache_parts=4)  # tiny: constant thrash
+    for q in ([0, 1], [2, 3], [4, 5], [0, 5], [1, 4]):
+        got = engine.intersect_batch([list(q)])[0]
+        assert np.array_equal(got, _oracle(lists, q)), q
+        assert len(engine._cache) <= 4
+    # decode under eviction still exact
+    for t, seq in enumerate(lists):
+        assert np.array_equal(engine.decode_list(t), seq)
+
+
+def test_working_set_larger_than_cache():
+    """A single batch touching far more partitions than cache_parts must
+    still answer correctly (the in-flight working set is pinned, only the
+    cache is bounded)."""
+    rng = np.random.default_rng(9)
+    corpus = make_corpus(rng, n_lists=8, min_len=2_000, max_len=8_000,
+                         mean_dense_gap=2.13, frac_dense=0.8)
+    idx = build_partitioned_index(corpus, "optimal")
+    assert len(idx.endpoints) > 8
+    engine = QueryEngine(idx, cache_parts=4, backend="numpy")
+    queries = [[0, 1], [2, 3], [4, 5], [6, 7], [0, 7]]
+    got = engine.intersect_batch(queries)
+    for q, g in zip(queries, got):
+        assert np.array_equal(g, _oracle(corpus, q)), q
+    assert len(engine._cache) <= 4
+
+
+def test_cache_reuse_across_batches(corpus):
+    idx = build_partitioned_index(corpus, "optimal")
+    engine = QueryEngine(idx, backend="numpy")
+    engine.intersect_batch([[0, 1]])
+    decoded_first = engine.stats["decoded_parts"]
+    engine.intersect_batch([[0, 1], [1, 0]])
+    assert engine.stats["decoded_parts"] == decoded_first  # all hits
+    assert engine.stats["cache_hits"] > 0
