@@ -10,7 +10,7 @@ import numpy as np
 from .common import emit, gov2_like_corpus, timeit
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, smoke: bool = False) -> None:
     from repro.core.costs import gaps_from_sorted
     from repro.core.partition import (
         eps_optimal,
@@ -21,7 +21,7 @@ def run(quick: bool = True) -> None:
     from repro.kernels.gain_scan.ops import optimal_partitioning_blocked
 
     rng = np.random.default_rng(0)
-    n = 100_000 if quick else 2_000_000
+    n = 4_000 if smoke else (100_000 if quick else 2_000_000)
     seq = gov2_like_corpus(rng, 1, n)[0]
     gaps = gaps_from_sorted(seq)
 
@@ -43,4 +43,6 @@ def run(quick: bool = True) -> None:
 
 
 if __name__ == "__main__":
-    run(False)
+    from .common import cli_main
+
+    cli_main(run)

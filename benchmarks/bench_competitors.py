@@ -10,7 +10,7 @@ import numpy as np
 from .common import emit, freqs_like, gov2_like_corpus, timeit
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, smoke: bool = False) -> None:
     from repro.core.competitors import (
         ans_cost_bits,
         bic_cost_bits,
@@ -27,7 +27,7 @@ def run(quick: bool = True) -> None:
     )
 
     rng = np.random.default_rng(0)
-    n = 30_000 if quick else 300_000
+    n = 3_000 if smoke else (30_000 if quick else 300_000)
     for kind, seq in (
         ("docs", gov2_like_corpus(rng, 1, n)[0]),
         ("freqs", freqs_like(rng, n)),
@@ -55,4 +55,6 @@ def run(quick: bool = True) -> None:
 
 
 if __name__ == "__main__":
-    run(False)
+    from .common import cli_main
+
+    cli_main(run)

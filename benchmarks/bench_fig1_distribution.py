@@ -23,9 +23,13 @@ def dense_fraction(seq: np.ndarray, block: int = 128) -> float:
     return float((bb <= eb).mean())
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, smoke: bool = False) -> None:
     rng = np.random.default_rng(0)
-    sizes = {"short": 5_000, "medium": 50_000, "long": 200_000 if not quick else 80_000}
+    if smoke:
+        sizes = {"short": 1_000, "medium": 3_000, "long": 6_000}
+    else:
+        sizes = {"short": 5_000, "medium": 50_000,
+                 "long": 200_000 if not quick else 80_000}
     for cat, n in sizes.items():
         seq = gov2_like_corpus(rng, n_lists=1, n=n)[0]
         dt, frac = timeit(dense_fraction, seq, repeat=1)
@@ -33,4 +37,6 @@ def run(quick: bool = True) -> None:
 
 
 if __name__ == "__main__":
-    run(False)
+    from .common import cli_main
+
+    cli_main(run)

@@ -6,39 +6,73 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import emit, timeit
+from .common import emit, latency_fields, timeit, timeit_samples
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, smoke: bool = False) -> None:
     import jax.numpy as jnp
 
     from repro.kernels.embedding_bag.ops import multi_hot_embed
     from repro.kernels.embedding_bag.ref import embedding_bag_ref
     from repro.kernels.gain_scan.ops import gain_prefix
-    from repro.kernels.vbyte_decode.ops import decode, pack_blocks
+    from repro.kernels.vbyte_decode.ops import decode, decode_search, pack_blocks
 
     rng = np.random.default_rng(0)
-    n = 20_000 if quick else 200_000
+    n = 2_048 if smoke else (20_000 if quick else 200_000)
 
     vals = rng.integers(0, 2**20, n).astype(np.uint32)
     lens, data, n_out = pack_blocks(vals)
     dt, out = timeit(lambda: np.asarray(decode(lens, data, n_out)), repeat=1)
     ok = np.array_equal(out, vals)
-    emit("kernel_vbyte_decode", dt * 1e6, f"mints_per_s={n/dt/1e6:.2f};oracle_ok={ok}")
+    emit("kernel_vbyte_decode", dt * 1e6, f"mints_per_s={n/dt/1e6:.2f};oracle_ok={ok}",
+         ops_per_sec=n / dt)
+
+    # fused decode+NextGEQ over gathered arena rows: every backend vs the
+    # numpy mirror.  Rows hold sorted values: value = base + cumsum(gap+1).
+    nb = max(n // 128, 8)
+    step = rng.integers(1, 64, (nb, 128)).astype(np.int64)  # gaps >= 1
+    base = np.full(nb, -1, np.int64)
+    vals_mat = np.cumsum(step, axis=1) - 1
+    s_lens, s_data, _ = pack_blocks((step - 1).astype(np.uint32).reshape(-1))
+    n_cursors = 4 * nb
+    rows = rng.integers(0, nb, n_cursors)
+    probes = vals_mat[rows, rng.integers(0, 128, n_cursors)].astype(np.int64)
+    want_v, want_r = decode_search(
+        s_lens, s_data, base, rows, probes, backend="numpy"
+    )
+    for backend in ("numpy", "ref") + (() if smoke else ("pallas",)):
+        lat, (v, r) = timeit_samples(
+            lambda b=backend: decode_search(
+                s_lens, s_data, base, rows, probes, backend=b
+            ),
+            repeat=2 if smoke else 3,
+        )
+        ok = np.array_equal(v, want_v) and np.array_equal(r, want_r)
+        dt_k = min(lat)
+        emit(f"kernel_decode_search_{backend}", dt_k * 1e6,
+             f"cursors_per_s={n_cursors/dt_k/1e3:.0f}k;oracle_ok={ok}",
+             **latency_fields(lat, per=n_cursors))
+        assert ok, backend
 
     gaps = rng.integers(1, 1000, n).astype(np.int64)
     dt, (g, mn, mx) = timeit(lambda: gain_prefix(gaps), repeat=1)
-    emit("kernel_gain_scan", dt * 1e6, f"mints_per_s={n/dt/1e6:.2f}")
+    emit("kernel_gain_scan", dt * 1e6, f"mints_per_s={n/dt/1e6:.2f}",
+         ops_per_sec=n / dt)
 
-    B, K, V, D = (64, 8, 10_000, 128) if quick else (512, 16, 100_000, 128)
+    B, K, V, D = (8, 4, 512, 128) if smoke else (
+        (64, 8, 10_000, 128) if quick else (512, 16, 100_000, 128)
+    )
     table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
     ids = jnp.asarray(rng.integers(0, V, (B, K)), jnp.int32)
     mask = jnp.asarray(rng.random((B, K)) < 0.8)
     dt, out = timeit(lambda: np.asarray(multi_hot_embed(table, ids, mask)), repeat=1)
     ref = np.asarray(embedding_bag_ref(table, ids, mask.astype(jnp.float32)))
     ok = bool(np.allclose(out, ref, atol=1e-5))
-    emit("kernel_embedding_bag", dt * 1e6, f"bags_per_s={B/dt:.0f};oracle_ok={ok}")
+    emit("kernel_embedding_bag", dt * 1e6, f"bags_per_s={B/dt:.0f};oracle_ok={ok}",
+         ops_per_sec=B / dt)
 
 
 if __name__ == "__main__":
-    run(False)
+    from .common import cli_main
+
+    cli_main(run)

@@ -2,23 +2,26 @@
 
 Reproduces the paper's explanation of why partitioned VByte is not slower:
 bit-vector partitions win on the short jumps that dominate AND queries.
-Also times the batched engine's ``next_geq_batch`` (one vectorized pass over
-all probes) against the scalar cursor loop."""
+Also times ``next_geq_batch`` (one vectorized pass over all probes) through
+BOTH batched engines -- the PR-1 partition-LRU path and the fused
+block-arena path -- against the scalar cursor loop."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from .common import emit, timeit
+from .common import emit, latency_fields, timeit, timeit_samples
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, smoke: bool = False) -> None:
     from repro.core.index import build_partitioned_index
     from repro.core.query_engine import QueryEngine
     from repro.data.postings import make_posting_list
 
     rng = np.random.default_rng(0)
-    n = 100_000 if quick else 1_000_000
+    n = 20_000 if smoke else (100_000 if quick else 1_000_000)
+    n_probes = 100 if smoke else 400
+    jumps = (1, 256) if smoke else ((1, 16, 256) if quick else (1, 4, 16, 64, 256, 1024))
     cases = {
         # avg gap 2.5 (the paper's dense case) / 1850 (sparse case)
         "dense": make_posting_list(rng, n, mean_dense_gap=2.5, frac_dense=1.0),
@@ -26,9 +29,10 @@ def run(quick: bool = True) -> None:
     }
     for case, seq in cases.items():
         idx = build_partitioned_index([seq], "optimal")
-        engine = QueryEngine(idx, backend="numpy")
-        for jump in (1, 16, 256) if quick else (1, 4, 16, 64, 256, 1024):
-            probes = seq[np.arange(0, n - jump - 1, jump)][:400]
+        pr1 = QueryEngine(idx, backend="numpy", fused=False)
+        fused = QueryEngine(idx, backend="numpy", fused=True)
+        for jump in jumps:
+            probes = seq[np.arange(0, n - jump - 1, jump)][:n_probes]
 
             def run_probes():
                 cur = None
@@ -43,15 +47,19 @@ def run(quick: bool = True) -> None:
                  f"ns_per_nextgeq={dt/len(probes)*1e9:.0f}")
 
             terms = np.zeros(len(probes), np.int64)
+            for label, engine in (("pr1", pr1), ("fused", fused)):
+                def run_batched(e=engine):
+                    return int(e.next_geq_batch(terms, probes + 1).sum())
 
-            def run_batched():
-                return int(engine.next_geq_batch(terms, probes + 1).sum())
-
-            dt_b, s_batched = timeit(run_batched, repeat=3)
-            assert s_batched == s_scalar
-            emit(f"fig7_{case}_jump{jump}_batched", dt_b / len(probes) * 1e6,
-                 f"ns_per_nextgeq={dt_b/len(probes)*1e9:.0f}")
+                lat, s_batched = timeit_samples(run_batched, repeat=3)
+                assert s_batched == s_scalar
+                emit(f"fig7_{case}_jump{jump}_{label}",
+                     min(lat) / len(probes) * 1e6,
+                     f"ns_per_nextgeq={min(lat)/len(probes)*1e9:.0f}",
+                     **latency_fields(lat, per=len(probes)))
 
 
 if __name__ == "__main__":
-    run(False)
+    from .common import cli_main
+
+    cli_main(run)

@@ -9,7 +9,7 @@ import numpy as np
 from .common import emit, freqs_like, gov2_like_corpus, timeit
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, smoke: bool = False) -> None:
     from repro.core.costs import gaps_from_sorted
     from repro.core.partition import (
         eps_optimal,
@@ -20,7 +20,7 @@ def run(quick: bool = True) -> None:
     from repro.core.index import build_unpartitioned_index
 
     rng = np.random.default_rng(0)
-    n = 40_000 if quick else 400_000
+    n = 4_000 if smoke else (40_000 if quick else 400_000)
 
     for kind, seq in (
         ("docs", gov2_like_corpus(rng, 1, n)[0]),
@@ -42,4 +42,6 @@ def run(quick: bool = True) -> None:
 
 
 if __name__ == "__main__":
-    run(False)
+    from .common import cli_main
+
+    cli_main(run)

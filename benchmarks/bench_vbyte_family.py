@@ -7,7 +7,7 @@ import numpy as np
 from .common import emit, freqs_like, gov2_like_corpus, timeit
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, smoke: bool = False) -> None:
     from repro.core.costs import gaps_from_sorted
     from repro.core.vbyte import (
         streamvbyte_cost_bytes,
@@ -20,7 +20,7 @@ def run(quick: bool = True) -> None:
     )
 
     rng = np.random.default_rng(0)
-    n = 50_000 if quick else 500_000
+    n = 5_000 if smoke else (50_000 if quick else 500_000)
     docs = gov2_like_corpus(rng, 1, n)[0]
     gaps = gaps_from_sorted(docs) - 1
 
@@ -45,4 +45,6 @@ def run(quick: bool = True) -> None:
 
 
 if __name__ == "__main__":
-    run(False)
+    from .common import cli_main
+
+    cli_main(run)

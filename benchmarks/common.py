@@ -1,4 +1,5 @@
-"""Shared benchmark helpers: calibrated synthetic datasets + timing."""
+"""Shared benchmark helpers: calibrated synthetic datasets, timing, and the
+machine-readable result registry behind ``benchmarks.run --json``."""
 
 from __future__ import annotations
 
@@ -10,6 +11,14 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.data.postings import make_posting_list  # noqa: E402
+
+# every emit() lands here; benchmarks.run snapshots it per module to write
+# BENCH_*.json files tracking the perf trajectory across PRs
+RESULTS: list[dict] = []
+
+
+def reset_results() -> None:
+    RESULTS.clear()
 
 
 def gov2_like_corpus(rng, n_lists=8, n=40_000):
@@ -38,5 +47,54 @@ def timeit(fn, *args, repeat=3, number=1):
     return best, out
 
 
-def emit(name: str, us_per_call: float, derived: str):
+def timeit_samples(fn, *args, repeat=5):
+    """All per-call wall times (seconds) plus the last output -- the raw
+    samples behind the p50/p99 fields of the JSON records."""
+    samples = []
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        samples.append(time.perf_counter() - t0)
+    return samples, out
+
+
+def cli_main(run_fn) -> None:
+    """Shared ``__main__`` entry for bench modules: --smoke / --full."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args()
+    run_fn(quick=not a.full, smoke=a.smoke)
+
+
+def emit(name: str, us_per_call: float, derived: str, **extra) -> None:
+    """Print the CSV line and register the record for --json.
+
+    extra carries machine-readable fields (ops_per_sec, p50_us, p99_us,
+    speedup, ...) that do not fit the human CSV.
+    """
     print(f"{name},{us_per_call:.2f},{derived}")
+    rec = {"name": name, "us_per_call": round(float(us_per_call), 3),
+           "derived": derived}
+    rec.update({k: (round(float(v), 4) if isinstance(v, float) else v)
+                for k, v in extra.items()})
+    RESULTS.append(rec)
+
+
+def latency_fields(samples: list[float], per: int = 1) -> dict:
+    """ops_per_sec + p50/p99 extras from per-call second samples.
+
+    ``per`` = operations per timed call (e.g. queries per batch), so
+    ops_per_sec is per operation while percentiles describe the CALL.
+    """
+    xs = np.asarray(samples, dtype=np.float64)
+    best = float(xs.min())
+    return {
+        "ops_per_sec": per / best if best > 0 else 0.0,
+        "p50_us": float(np.percentile(xs, 50)) * 1e6,
+        "p99_us": float(np.percentile(xs, 99)) * 1e6,
+        "calls": len(samples),
+    }

@@ -39,7 +39,7 @@ def fmt_row(r):
     }
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, smoke: bool = False) -> None:
     rows = [fmt_row(r) for r in load()]
     rows = [r for r in rows if r]
     for r in rows:

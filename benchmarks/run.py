@@ -1,14 +1,19 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines.  Default is the quick profile
-(CI-sized datasets); ``--full`` uses paper-scale list lengths.
+(CI-sized datasets); ``--full`` uses paper-scale list lengths and ``--smoke``
+tiny corpora (seconds total -- the tier-1 drift check).  ``--json`` also
+writes machine-readable ``BENCH_queries.json`` / ``BENCH_kernels.json``
+(ops/sec + latency percentiles per record) so the perf trajectory is tracked
+across PRs.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only tableN]
+  PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only tableN] [--json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -23,6 +28,7 @@ from . import (
     bench_vbyte_family,
     roofline,
 )
+from .common import RESULTS, reset_results
 
 MODULES = {
     "fig1": bench_fig1_distribution,
@@ -36,23 +42,54 @@ MODULES = {
     "roofline": roofline,
 }
 
+# module key -> BENCH_<group>.json the records belong to
+JSON_GROUPS = {
+    "table5": "queries",
+    "fig7": "queries",
+    "kernels": "kernels",
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpora; assertions that need real timing "
+                         "spreads are skipped")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_queries.json / BENCH_kernels.json")
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
+    profile = "full" if args.full else ("smoke" if args.smoke else "quick")
     print("name,us_per_call,derived")
+    groups: dict[str, list[dict]] = {}
     for name, mod in MODULES.items():
         if args.only and args.only != name:
             continue
+        reset_results()
         t0 = time.time()
         try:
-            mod.run(quick=not args.full)
+            mod.run(quick=not args.full, smoke=args.smoke)
         except Exception as e:  # noqa: BLE001
             print(f"{name}_FAILED,0.00,{type(e).__name__}: {e}", file=sys.stdout)
             raise
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        group = JSON_GROUPS.get(name)
+        if group:
+            groups.setdefault(group, []).extend(
+                {**rec, "module": name} for rec in RESULTS
+            )
+    if args.json:
+        for group, records in groups.items():
+            path = f"BENCH_{group}.json"
+            with open(path, "w") as fh:
+                json.dump(
+                    {"profile": profile, "records": records}, fh, indent=1
+                )
+                fh.write("\n")
+            print(f"# wrote {path} ({len(records)} records)", file=sys.stderr)
 
 
 if __name__ == "__main__":

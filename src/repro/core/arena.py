@@ -1,0 +1,175 @@
+"""Block-aligned device arena over a ``PartitionedIndex`` (DESIGN.md §2).
+
+The on-disk/paper layout of the index (plain-VByte or bit-vector payloads,
+byte offsets) is great for space but hostile to a device hot path: payloads
+are variable-length, partitions start mid-byte-stream, and bit-vectors need a
+different decoder.  The arena is the *query-time* representation: every
+partition -- VByte AND bit-vector -- is transcoded ONCE at build into the
+fixed-block Stream-VByte layout consumed by ``repro.kernels.vbyte_decode``:
+
+  * 128 values / 512 data bytes per block (``BLOCK_VALS`` / ``BLOCK_BYTES``),
+  * each partition padded to WHOLE blocks (pad gap-1 = 0, so padded lanes
+    keep ascending past the partition endpoint -- they can never win a
+    NextGEQ whose probe is <= the endpoint),
+  * blocks of one partition are consecutive rows, partitions of one list are
+    consecutive runs, lists are laid out in id order.
+
+Per-block sidecars make every block self-decoding and directly searchable:
+
+  * ``block_base[b]``  -- absolute docID preceding the block's first value,
+    so ``values = block_base + cumsum(gaps + 1)`` needs no cross-block scan;
+  * ``block_keys[b]``  -- ``last_real_value + list_of_block * stride`` with
+    ``stride > max docID + 1``: globally non-decreasing, so ONE searchsorted
+    over all blocks locates the unique block holding NextGEQ(term, probe)
+    for every cursor of a batch at once (the partition-level trick of PR 1,
+    pushed down to block granularity);
+  * ``lane_valid[b, i]`` -- mask of real (non-padding) lanes.
+
+``dev`` uploads the arrays to the default jax device once, int32-narrowed;
+``device_ok`` says whether the int32 key space is wide enough (it is unless
+``n_lists * stride`` overflows 31 bits -- then the numpy path serves).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
+
+TAG_VBYTE = 0
+
+
+@dataclass
+class DeviceArena:
+    # per block (lens/data are padded by pack_blocks to a multiple of BM rows;
+    # the sidecars below cover only the n_blocks real rows)
+    lens: np.ndarray          # [nb_padded, 128] int32  control lengths
+    data: np.ndarray          # [nb_padded, 512] uint8  data bytes
+    block_base: np.ndarray    # [n_blocks] int64  docID before the block
+    block_keys: np.ndarray    # [n_blocks] int64  last real value + list*stride
+    lane_valid: np.ndarray    # [n_blocks, 128] bool  real-lane mask
+    part_of_block: np.ndarray  # [n_blocks] int64
+    # per partition
+    first_blk: np.ndarray     # [n_parts] int64
+    n_blk: np.ndarray         # [n_parts] int64
+    sizes: np.ndarray         # [n_parts] int64  (values per partition)
+    bases: np.ndarray         # [n_parts] int64  docID before the partition
+    part_list: np.ndarray     # [n_parts] int64  owning list
+    # per list
+    list_blk_offsets: np.ndarray  # [n_lists + 1] int64
+    stride: int = 0
+    n_blocks: int = 0
+    device_ok: bool = True
+    _dev: object = field(default=None, repr=False, compare=False)
+
+    @property
+    def dev(self):
+        """jnp copies of the arena, uploaded once (int32-narrowed keys)."""
+        if self._dev is None:
+            import jax.numpy as jnp
+            from types import SimpleNamespace
+
+            self._dev = SimpleNamespace(
+                lens=jnp.asarray(self.lens),
+                data=jnp.asarray(self.data),
+                block_base=jnp.asarray(self.block_base.astype(np.int32)),
+                block_keys=jnp.asarray(self.block_keys.astype(np.int32)),
+                part_of_block=jnp.asarray(self.part_of_block.astype(np.int32)),
+                first_blk=jnp.asarray(self.first_blk.astype(np.int32)),
+                list_blk_offsets=jnp.asarray(
+                    self.list_blk_offsets.astype(np.int32)
+                ),
+            )
+        return self._dev
+
+    def nbytes(self) -> int:
+        return int(
+            self.lens.nbytes + self.data.nbytes + self.block_base.nbytes
+            + self.block_keys.nbytes + self.lane_valid.nbytes
+        )
+
+
+def build_arena(index) -> DeviceArena:
+    """Transcode every partition of ``index`` into the block arena."""
+    from repro.core.bitvector import bitvector_decode
+    from repro.core.vbyte import vbyte_decode
+    from repro.kernels.vbyte_decode.ops import pack_blocks
+
+    n_parts = len(index.endpoints)
+    sizes = index.sizes.astype(np.int64)
+    part_counts = np.diff(index.list_part_offsets)
+    part_list = np.repeat(np.arange(index.n_lists, dtype=np.int64), part_counts)
+    # base docID per partition: endpoint of the previous partition of the
+    # SAME list, -1 for the first partition of each list
+    bases = np.empty(n_parts, np.int64)
+    if n_parts:
+        bases[0] = -1
+        bases[1:] = index.endpoints[:-1]
+        bases[index.list_part_offsets[:-1][part_counts > 0]] = -1
+
+    n_blk = (sizes + BLOCK_VALS - 1) // BLOCK_VALS
+    first_blk = np.zeros(n_parts, np.int64)
+    if n_parts:
+        first_blk[1:] = np.cumsum(n_blk)[:-1]
+    nb = int(n_blk.sum())
+
+    gaps_m1 = np.zeros(nb * BLOCK_VALS, np.uint32)
+    block_base = np.zeros(nb, np.int64)
+    block_last = np.zeros(nb, np.int64)
+    lane_valid = np.zeros((nb, BLOCK_VALS), bool)
+    payload_end = index.offsets[1:].tolist() + [index.payload.size]
+    for p in range(n_parts):
+        off, end = int(index.offsets[p]), int(payload_end[p])
+        size, base = int(sizes[p]), int(bases[p])
+        if index.tags[p] == TAG_VBYTE:
+            g = vbyte_decode(index.payload[off:end], size).astype(np.int64)
+            vals = base + np.cumsum(g + 1)
+        else:
+            universe = int(index.endpoints[p]) - base
+            vals = bitvector_decode(index.payload[off:end], universe) + base + 1
+            g = np.diff(vals, prepend=base) - 1
+        b0, k = int(first_blk[p]), int(n_blk[p])
+        s = b0 * BLOCK_VALS
+        gaps_m1[s : s + size] = g
+        block_base[b0] = base
+        block_base[b0 + 1 : b0 + k] = vals[BLOCK_VALS - 1 :: BLOCK_VALS][: k - 1]
+        block_last[b0 : b0 + k] = vals[
+            np.minimum(np.arange(1, k + 1) * BLOCK_VALS, size) - 1
+        ]
+        lv = lane_valid[b0 : b0 + k].reshape(-1)
+        lv[:size] = True
+
+    lens, data, _ = pack_blocks(gaps_m1)
+
+    stride = int(index.endpoints.max()) + 2 if n_parts else 2
+    block_keys = block_last + part_list[
+        np.repeat(np.arange(n_parts, dtype=np.int64), n_blk)
+    ] * stride
+    part_of_block = np.repeat(np.arange(n_parts, dtype=np.int64), n_blk)
+    list_blk_offsets = np.zeros(index.n_lists + 1, np.int64)
+    if n_parts:
+        list_blk_offsets[:] = np.concatenate(
+            [first_blk, [nb]]
+        )[index.list_part_offsets]
+    # int32 device keys must hold probe + term*stride and value + 128
+    device_ok = (index.n_lists + 1) * stride < 2**31 - BLOCK_VALS - 2
+
+    return DeviceArena(
+        lens=lens,
+        data=data,
+        block_base=block_base,
+        block_keys=block_keys,
+        lane_valid=lane_valid,
+        part_of_block=part_of_block,
+        first_blk=first_blk,
+        n_blk=n_blk,
+        sizes=sizes,
+        bases=bases,
+        part_list=part_list,
+        list_blk_offsets=list_blk_offsets,
+        stride=stride,
+        n_blocks=nb,
+        device_ok=bool(device_ok),
+    )

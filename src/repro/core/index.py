@@ -14,8 +14,9 @@ values over ``universe = sum(gaps)`` bits.
 
 Query ops: ``decode_list``, ``next_geq`` and ``intersect`` (boolean AND, the
 paper's Tables 5/8 workload).  They delegate to the batched
-``repro.core.query_engine.QueryEngine`` (vectorized partition location,
-kernel-layout block decode, LRU decoded-partition cache); the original
+``repro.core.query_engine.QueryEngine``, whose default path is the FUSED
+device pipeline over the block arena exposed by ``.arena`` (one locate
+searchsorted + in-register decode+NextGEQ, DESIGN.md §4); the original
 per-query NextGEQ loop survives as ``intersect_scalar`` -- the reference the
 engine is tested and benchmarked against.
 
@@ -55,6 +56,7 @@ class PartitionedIndex:
     payload: np.ndarray = field(default_factory=lambda: np.zeros(0, np.uint8))
     F: int = DEFAULT_F
     _engine: object = field(default=None, repr=False, compare=False)
+    _arena: object = field(default=None, repr=False, compare=False)
 
     @property
     def engine(self):
@@ -64,6 +66,21 @@ class PartitionedIndex:
 
             self._engine = QueryEngine(self)
         return self._engine
+
+    @property
+    def arena(self):
+        """Block-aligned device arena (built once, shared by all engines).
+
+        Every partition transcoded into the fixed 512-byte Stream-VByte
+        tiles of ``repro.kernels.vbyte_decode`` plus the per-block sidecars
+        (base docIDs, rebased endpoint keys) the fused device query path
+        searches over -- see ``repro.core.arena``.
+        """
+        if self._arena is None:
+            from .arena import build_arena
+
+            self._arena = build_arena(self)
+        return self._arena
 
     # ---------------- stats ----------------
     def space_bits(self) -> int:

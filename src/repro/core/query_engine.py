@@ -1,29 +1,36 @@
-"""Batched query engine over the flat arena of a ``PartitionedIndex``.
+"""Batched query engine over the block arena of a ``PartitionedIndex``.
 
 The scalar path in ``index.py`` answers one query at a time with a Python
 NextGEQ loop -- faithful to the paper, but nothing like a servable hot path.
-This engine evaluates MANY boolean-AND queries per call with three ideas:
+This engine evaluates MANY boolean-AND queries per call.  Two generations of
+the batched path coexist (``fused=`` selects; both are exact):
 
-1. **One searchsorted for all cursors.**  Partition endpoints are per-list
-   increasing and the arena stores lists in id order, so
-   ``endpoints + list_id * stride`` (stride > the global maximum docID + 1)
-   is globally non-decreasing.  A single ``np.searchsorted`` over that key
-   array locates the partition for every (term, probe) pair of the batch at
-   once; a second searchsorted over the rebased concatenation of decoded
-   partitions resolves every in-partition probe at once.
+**Fused path (default, PR 2).**  The index's ``DeviceArena`` (see
+``core.arena``) stores every partition as whole 512-byte Stream-VByte tiles
+with per-block sidecars: ``block_base`` (docID before the block) and
+``block_keys`` (last value + owning-list * stride, globally non-decreasing).
+NextGEQ for a whole batch is then:
 
-2. **Block decode through the Stream-VByte kernel layout.**  At engine build
-   time the VByte partitions are transcoded once into the fixed-block
-   Stream-VByte arena consumed by ``repro.kernels.vbyte_decode`` (128 values
-   / 512 data bytes per block).  Touched partitions are decoded per batch by
-   gathering their block rows and running ONE decode over the gathered tile:
-   the Pallas MXU kernel on TPU, its jnp oracle, or the vectorized numpy
-   mirror off-accelerator (backend="auto" picks per ``jax.default_backend``).
+1. **locate** -- ONE searchsorted over ``block_keys`` finds, for every
+   (term, probe) cursor at once, the unique arena row holding its answer;
+2. **fuse**   -- the ``decode_search`` kernel decodes each located row and
+   resolves the probe IN-REGISTER (``values = block_base + cumsum(gap+1)``,
+   masked min + rank), emitting only (next_geq_value, local_rank) per
+   cursor -- decoded partitions never materialize to HBM;
+3. **gather** -- results are masked for past-the-end cursors.
 
-3. **LRU decoded-partition cache.**  Hot partitions (stopword-ish lists, the
-   head of every Zipf workload) are decoded once and re-used across queries
-   and batches; the scalar ``PartitionedIndex.next_geq`` wrapper shares the
-   same cache.
+On ``backend="ref"``/``"pallas"`` the whole locate->fuse->gather pipeline is
+one jitted device program over the once-uploaded arena (cursor counts are
+bucketed to powers of two so jit traces are reused); there is no host
+round-trip between stages.  On ``backend="numpy"`` the same pipeline runs
+vectorized on the host, with decoded 128-value rows cached in a dense
+byte-bounded row cache (decode each hot block once, then pure compares).
+
+**Partition-LRU path (``fused=False``, PR 1).**  Partition-level location
+plus an LRU cache of decoded partitions; kept as the oracle the fused path
+is validated and benchmarked against, and as the conservative fallback.
+The LRU is bounded by decoded BYTES (``cache_bytes``) as well as entry
+count (``cache_parts``); evictions are counted in ``stats``.
 
 Batched AND uses membership filtering: candidates are the smallest list of
 each query, then every other term (in ascending size) filters the surviving
@@ -37,7 +44,12 @@ from collections import OrderedDict
 
 import numpy as np
 
-from .bitvector import bitvector_decode
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
+from repro.kernels.vbyte_decode.ops import (
+    decode_block_rows,
+    default_backend,
+    default_interpret,
+)
 
 TAG_VBYTE = 0
 TAG_BITVECTOR = 1
@@ -61,99 +73,81 @@ def _concat_aranges(counts: np.ndarray) -> np.ndarray:
     return out
 
 
-def default_backend() -> str:
-    """"pallas" on an accelerator, vectorized numpy otherwise."""
-    try:
-        import jax
-
-        if jax.default_backend() in ("tpu", "gpu"):
-            return "pallas"
-    except Exception:
-        pass
-    return "numpy"
-
-
 class QueryEngine:
     """Batched NextGEQ / AND evaluation over one ``PartitionedIndex``.
 
     Parameters
     ----------
     index: the (immutable) PartitionedIndex to serve.
-    backend: "auto" | "numpy" | "ref" | "pallas" -- decode path for VByte
-        partitions (see ``repro.kernels.vbyte_decode.ops.decode_block_rows``).
-    cache_parts: LRU capacity in decoded partitions.
+    backend: "auto" | "numpy" | "ref" | "pallas" -- decode path.  "auto"
+        resolves via the shared ``default_backend()`` (compiled pallas on
+        TPU/GPU, numpy on CPU).
+    cache_parts: LRU capacity in entries (decoded partitions / lists).
+    cache_bytes: LRU capacity in decoded-value BYTES; also budgets the fused
+        path's dense row cache.  Big partitions no longer count the same as
+        tiny ones.
+    fused: serve NextGEQ/membership through the fused locate->decode_search
+        pipeline (default).  False selects the PR-1 partition-LRU path.
     """
 
-    def __init__(self, index, backend: str = "auto", cache_parts: int = 32_768):
+    def __init__(
+        self,
+        index,
+        backend: str = "auto",
+        cache_parts: int = 32_768,
+        cache_bytes: int = 256 << 20,
+        fused: bool = True,
+    ):
         self.index = index
         self.backend = default_backend() if backend == "auto" else backend
         # interpret mode only off-accelerator: on TPU/GPU the pallas backend
         # must COMPILE the kernel, not emulate it
-        self.interpret = True
-        if self.backend == "pallas":
-            try:
-                import jax
-
-                self.interpret = jax.default_backend() not in ("tpu", "gpu")
-            except Exception:
-                pass
+        self.interpret = default_interpret()
         self.cache_parts = int(cache_parts)
-        self._cache: OrderedDict[int, np.ndarray] = OrderedDict()
-        self.stats = {"decoded_parts": 0, "cache_hits": 0, "kernel_calls": 0}
+        self.cache_bytes = int(cache_bytes)
+        self.fused = bool(fused)
+        self.arena = index.arena
+        self._cache: OrderedDict = OrderedDict()
+        self._cache_nbytes = 0
+        # fused-numpy flat cache: decoded lane values + global lane keys
+        self._flat_vals: np.ndarray | None = None
+        self._flat_keys: np.ndarray | None = None
+        self._lane_end: np.ndarray | None = None
+        self._flat_ok = None  # None = undecided, False = budget refused
+        self._jax_fn = None
+        self.stats = {
+            "decoded_parts": 0,
+            "decoded_rows": 0,
+            "cache_hits": 0,
+            "kernel_calls": 0,
+            "evictions": 0,
+            "fused_batches": 0,
+        }
 
-        n_parts = len(index.endpoints)
-        part_counts = np.diff(index.list_part_offsets)
-        # owning list id per partition
-        self.part_list = np.repeat(
-            np.arange(index.n_lists, dtype=np.int64), part_counts
-        )
-        # base docID per partition: endpoint of the previous partition of the
-        # SAME list, -1 for the first partition of each list
-        bases = np.empty(n_parts, np.int64)
-        if n_parts:
-            bases[0] = -1
-            bases[1:] = index.endpoints[:-1]
-            bases[index.list_part_offsets[:-1][part_counts > 0]] = -1
-        self.bases = bases
-        # globally non-decreasing location keys (idea 1)
-        self.stride = int(index.endpoints.max()) + 2 if n_parts else 2
-        self._keys = index.endpoints + self.part_list * self.stride
-
-        # Stream-VByte block arena over all VByte partitions (idea 2): the
-        # plain-VByte payloads are decoded once host-side at build time and
-        # re-packed into the kernel's fixed-block layout.
-        from repro.kernels.vbyte_decode.ops import pack_blocks
-
-        is_vb = index.tags == TAG_VBYTE
-        sizes = index.sizes.astype(np.int64)
-        self.val_start = np.zeros(n_parts, np.int64)
-        if n_parts:
-            vb_sizes = np.where(is_vb, sizes, 0)
-            self.val_start[1:] = np.cumsum(vb_sizes)[:-1]
-        n_vals = int(sizes[is_vb].sum()) if n_parts else 0
-        if n_vals:
-            gaps_m1 = np.empty(n_vals, np.uint32)
-            from .vbyte import vbyte_decode
-
-            for p in np.flatnonzero(is_vb):
-                off = int(index.offsets[p])
-                end = (
-                    int(index.offsets[p + 1])
-                    if p + 1 < n_parts
-                    else index.payload.size
-                )
-                s = int(self.val_start[p])
-                gaps_m1[s : s + int(sizes[p])] = vbyte_decode(
-                    index.payload[off:end], int(sizes[p])
-                ).astype(np.uint32)
-            self._lens, self._data, _ = pack_blocks(gaps_m1)
-        else:
-            self._lens = np.zeros((0, 128), np.int32)
-            self._data = np.zeros((0, 512), np.uint8)
+        a = self.arena
+        self.stride = a.stride
+        self.bases = a.bases
+        self.part_list = a.part_list
+        # partition-level location keys (PR-1 path)
+        self._keys = index.endpoints + a.part_list * a.stride
 
     # ------------------------------------------------------------------
-    # decoded-partition cache (idea 3)
+    # LRU cache (decoded partitions / lists), byte- and count-bounded
     # ------------------------------------------------------------------
+    def _cache_put(self, key, arr: np.ndarray) -> None:
+        old = self._cache.pop(key, None)
+        if old is not None:
+            self._cache_nbytes -= old.nbytes
+        self._cache[key] = arr
+        self._cache_nbytes += arr.nbytes
+        while self._cache and (
+            len(self._cache) > self.cache_parts
+            or self._cache_nbytes > self.cache_bytes
+        ):
+            _, ev = self._cache.popitem(last=False)
+            self._cache_nbytes -= ev.nbytes
+            self.stats["evictions"] += 1
+
     def partition_values(self, p: int) -> np.ndarray:
         """Absolute docIDs of partition p (decoded through the LRU cache)."""
         return self._fetch(np.asarray([p], dtype=np.int64))[int(p)]
@@ -180,63 +174,247 @@ class QueryEngine:
             out.update(self._decode_into_cache(np.asarray(missing, np.int64)))
         return out
 
-    def _evict(self) -> None:
-        while len(self._cache) > self.cache_parts:
-            self._cache.popitem(last=False)
-
     def _decode_into_cache(self, parts: np.ndarray) -> dict[int, np.ndarray]:
-        """Decode the given (unique, sorted) partitions; cache and return."""
-        idx = self.index
-        tags = idx.tags[parts]
-        vb = parts[tags == TAG_VBYTE]
-        self.stats["decoded_parts"] += len(parts)
-        dec: dict[int, np.ndarray] = {}
-        if vb.size:
-            from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
-            from repro.kernels.vbyte_decode.ops import decode_block_rows
+        """Decode the given (unique, sorted) partitions from the arena.
 
-            starts = self.val_start[vb]
-            sizes = idx.sizes[vb].astype(np.int64)
-            ends = starts + sizes
-            first_blk = starts // BLOCK_VALS
-            n_blk = (ends + BLOCK_VALS - 1) // BLOCK_VALS - first_blk
-            blocks = np.repeat(first_blk, n_blk) + _concat_aranges(n_blk)
-            ublk = np.unique(blocks)
-            flat = decode_block_rows(
-                self._lens[ublk], self._data[ublk], backend=self.backend,
-                interpret=self.interpret,
-            ).reshape(-1)
-            self.stats["kernel_calls"] += 1
-            # a partition's blocks are consecutive ids, hence consecutive in
-            # the sorted-unique gather -> its values are one contiguous slice
-            row_of_first = np.searchsorted(ublk, first_blk)
-            pos = row_of_first * BLOCK_VALS + (starts % BLOCK_VALS)
-            # segmented gap -> docID reconstruction in one pass
-            gsel = flat[np.repeat(pos, sizes) + _concat_aranges(sizes)] + 1
-            csum = np.cumsum(gsel)
-            seg_off = np.concatenate([[0], np.cumsum(sizes)[:-1]])
-            prior = np.where(seg_off > 0, csum[seg_off - 1], 0)
-            ids = csum - np.repeat(prior, sizes) + np.repeat(self.bases[vb], sizes)
-            for k, p in enumerate(vb):
-                s = int(seg_off[k])
-                dec[int(p)] = ids[s : s + int(sizes[k])]
-        for p in parts[tags == TAG_BITVECTOR]:
-            off = int(idx.offsets[p])
-            end = (
-                int(idx.offsets[p + 1])
-                if p + 1 < len(idx.offsets)
-                else idx.payload.size
-            )
-            base = int(self.bases[p])
-            universe = int(idx.endpoints[p]) - base
-            rebased = bitvector_decode(idx.payload[off:end], universe)
-            dec[int(p)] = rebased + base + 1
-        self._cache.update(dec)
-        self._evict()
+        One kernel call over the union of their block rows; every partition
+        is then a contiguous slice of the decoded tile (its blocks are
+        consecutive rows and padding sits only at the tail).
+        """
+        a = self.arena
+        nblk = a.n_blk[parts]
+        rows = np.repeat(a.first_blk[parts], nblk) + _concat_aranges(nblk)
+        urows = np.unique(rows)
+        gaps = decode_block_rows(
+            a.lens[urows], a.data[urows], backend=self.backend,
+            interpret=self.interpret,
+        )
+        self.stats["kernel_calls"] += 1
+        self.stats["decoded_parts"] += len(parts)
+        vals = a.block_base[urows][:, None] + np.cumsum(gaps + 1, axis=1)
+        flat = vals.reshape(-1)
+        row0 = np.searchsorted(urows, a.first_blk[parts])
+        dec: dict[int, np.ndarray] = {}
+        for j, p in enumerate(parts):
+            s = int(row0[j]) * BLOCK_VALS
+            dec[int(p)] = flat[s : s + int(a.sizes[p])]
+        for key, arr in dec.items():
+            self._cache_put(key, arr)
         return dec
 
     # ------------------------------------------------------------------
-    # vectorized partition location (idea 1)
+    # fused locate -> decode_search -> gather (PR-2 hot path)
+    # ------------------------------------------------------------------
+    def _flat_init(self) -> bool:
+        """Decode the arena once into flat (values, lane keys) -- CPU path.
+
+        The lane keys extend the arena's block keys to lane granularity:
+        ``min(value, block_last) + owning_list * stride``, list-major and
+        globally non-decreasing (padding lanes clamp to their block's last
+        real value, so they tie with it instead of overtaking the next
+        partition).  One searchsorted over this array then subsumes BOTH
+        locate steps -- it finds the exact lane of NextGEQ(term, probe) for
+        every cursor of a batch, and a tied padding lane can never precede
+        the real hit.  Gated on ``cache_bytes`` (2 x 1 KiB per block).
+        """
+        if self._flat_keys is None and self._flat_ok is None:
+            a = self.arena
+            if 2 * a.n_blocks * BLOCK_VALS * 8 > self.cache_bytes:
+                self._flat_ok = False  # budget refused: per-call decode
+                return False
+            gaps = decode_block_rows(
+                a.lens[: a.n_blocks], a.data[: a.n_blocks],
+                backend=self.backend, interpret=self.interpret,
+            )
+            self.stats["kernel_calls"] += 1
+            self.stats["decoded_rows"] += a.n_blocks
+            vals = a.block_base[:, None] + np.cumsum(gaps + 1, axis=1)
+            # one sentinel lane so a past-the-end searchsorted result is
+            # still a valid gather index (masked via _lane_end afterwards)
+            self._flat_vals = np.append(vals.reshape(-1), -1)
+            list_of_block = a.part_list[a.part_of_block]
+            self._flat_keys = np.append(
+                np.minimum(
+                    vals + (list_of_block * a.stride)[:, None],
+                    a.block_keys[:, None],
+                ).reshape(-1),
+                np.iinfo(np.int64).max,
+            )
+            self._lane_end = a.list_blk_offsets * BLOCK_VALS
+            # the flat arrays spend part of the decoded-bytes budget: LRU
+            # entries (decoded candidate lists) only get the remainder
+            self._cache_nbytes += (
+                self._flat_vals.nbytes + self._flat_keys.nbytes
+            )
+            self._flat_ok = True
+        return bool(self._flat_ok)
+
+    def _rows_values(self, rows: np.ndarray) -> np.ndarray:
+        """[len(rows), 128] absolute docIDs of the given (unique) rows."""
+        a = self.arena
+        if self._flat_init():
+            return self._flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows]
+        gaps = decode_block_rows(
+            a.lens[rows], a.data[rows], backend=self.backend,
+            interpret=self.interpret,
+        )
+        self.stats["kernel_calls"] += 1
+        self.stats["decoded_rows"] += len(rows)
+        return a.block_base[rows][:, None] + np.cumsum(gaps + 1, axis=1)
+
+    def _search_np(self, terms, probes, with_rank: bool = True,
+                   trusted: bool = False):
+        """Host (numpy) fused pipeline: one searchsorted per batch.
+
+        Returns UNMASKED (value, rank, past): callers apply their own mask
+        (-1 fill for NextGEQ, ``& ~past`` for membership) so the membership
+        hot loop skips the rank arithmetic entirely (``with_rank=False``).
+        ``trusted`` skips the probe clip for probes that are known decoded
+        docIDs (the AND filter feeds candidates straight back in).
+
+        With the flat lane keys resident, locate AND in-partition resolve
+        collapse into a single searchsorted plus O(1) gathers per cursor.
+        Without them (arena over the byte budget), a two-level variant
+        locates blocks first and decodes only the unique touched rows.
+        """
+        a = self.arena
+        pc = probes if trusted else np.clip(probes, 0, a.stride - 1)
+        pk = pc + terms * a.stride
+        if self._flat_init():
+            self.stats["cache_hits"] += len(terms)
+            pos = np.searchsorted(self._flat_keys, pk, side="left")
+            past = pos >= self._lane_end[terms + 1]
+            value = self._flat_vals[pos]  # sentinel lane keeps pos in range
+            rank = None
+            if with_rank:
+                rows = np.minimum(pos, len(self._flat_keys) - 2) >> 7
+                rank = pos - (a.first_blk[a.part_of_block[rows]] << 7)
+            return value, rank, past
+        k = np.searchsorted(a.block_keys, pk, side="left")
+        past = k >= a.list_blk_offsets[terms + 1]
+        rows = np.minimum(k, a.n_blocks - 1)
+        pe = np.where(past, 0, pc)
+        urows, inv = np.unique(rows, return_inverse=True)
+        vals_u = self._rows_values(urows)  # [U, 128]
+        base_u = a.block_base[urows]
+        # rebased lane values are in [1, stride + 127]; stride2 clears them
+        stride2 = a.stride + BLOCK_VALS + 2
+        lane_keys = (
+            vals_u - base_u[:, None]
+            + np.arange(len(urows), dtype=np.int64)[:, None] * stride2
+        ).reshape(-1)
+        probe_keys = np.maximum(pe - base_u[inv], 1) + inv * stride2
+        pos = np.searchsorted(lane_keys, probe_keys, side="left")
+        value = vals_u.reshape(-1)[pos]
+        rank = None
+        if with_rank:
+            rank_in = pos - inv * BLOCK_VALS
+            part = a.part_of_block[rows]
+            rank = (rows - a.first_blk[part]) * BLOCK_VALS + rank_in
+        return value, rank, past
+
+    def _build_jax_fn(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.vbyte_decode.kernel import (
+            META_BASE,
+            META_PROBE,
+            decode_search_blocks,
+        )
+        from repro.kernels.vbyte_decode.ref import decode_search_ref
+
+        a = self.arena
+        dev = a.dev
+        stride, nb = a.stride, a.n_blocks
+        backend, interpret = self.backend, self.interpret
+
+        def fn(terms, probes):
+            pc = jnp.clip(probes, 0, stride - 1)
+            k = jnp.searchsorted(
+                dev.block_keys, pc + terms * stride, side="left"
+            ).astype(jnp.int32)
+            past = k >= dev.list_blk_offsets[terms + 1]
+            rows = jnp.minimum(k, nb - 1)
+            pe = jnp.where(past, 0, pc)
+            lens_g, data_g = dev.lens[rows], dev.data[rows]
+            base_g = dev.block_base[rows]
+            if backend == "pallas":
+                meta = jnp.zeros((terms.shape[0], BLOCK_VALS), jnp.int32)
+                meta = meta.at[:, META_BASE].set(base_g)
+                meta = meta.at[:, META_PROBE].set(pe)
+                out = decode_search_blocks(
+                    lens_g, data_g, meta, interpret=interpret
+                )
+                value, rank_in = out[:, 0], out[:, 1]
+            else:
+                value, rank_in = decode_search_ref(lens_g, data_g, base_g, pe)
+            part = dev.part_of_block[rows]
+            rank = (rows - dev.first_blk[part]) * BLOCK_VALS + rank_in
+            return jnp.where(past, -1, value), jnp.where(past, -1, rank)
+
+        return jax.jit(fn)
+
+    def _search_jax(self, terms, probes):
+        """Device fused pipeline, jitted end-to-end over the resident arena.
+
+        Cursor counts are padded to power-of-two buckets so jit traces are
+        reused across batches; padding cursors probe list 0 at docID 0 and
+        are sliced away.  One host sync at the end (the result fetch).
+        """
+        import jax.numpy as jnp
+
+        n = len(terms)
+        bucket = max(BM, 1 << (max(n, 1) - 1).bit_length())
+        tp = np.zeros(bucket, np.int32)
+        pp = np.zeros(bucket, np.int32)
+        tp[:n] = terms
+        # clip BEFORE the int32 staging cast: an int64 probe >= 2^31 must
+        # resolve as past-the-end, not wrap negative and clip to probe 0
+        pp[:n] = np.clip(probes, 0, self.arena.stride - 1)
+        if self._jax_fn is None:
+            self._jax_fn = self._build_jax_fn()
+        value, rank = self._jax_fn(jnp.asarray(tp), jnp.asarray(pp))
+        return (
+            np.asarray(value)[:n].astype(np.int64),
+            np.asarray(rank)[:n].astype(np.int64),
+        )
+
+    @property
+    def _use_device(self) -> bool:
+        return self.backend in ("ref", "pallas") and self.arena.device_ok
+
+    def _fused_raw(self, terms, probes, with_rank: bool = True,
+                   trusted: bool = False):
+        """One fused dispatch for every entry point: (value, rank, past).
+
+        value/rank are meaningful only where ``~past`` (the device pipeline
+        pre-masks them to -1, which is equivalent for every caller).
+        """
+        n = len(terms)
+        if n == 0 or self.arena.n_blocks == 0:
+            full = np.full(n, -1, np.int64)
+            return full, full.copy(), np.ones(n, bool)
+        self.stats["fused_batches"] += 1
+        if self._use_device:
+            value, rank = self._search_jax(terms, probes)
+            return value, rank, value < 0
+        return self._search_np(terms, probes, with_rank, trusted)
+
+    def search_batch(self, terms, probes) -> tuple[np.ndarray, np.ndarray]:
+        """Fused NextGEQ: (values, local ranks) per (term, probe) cursor.
+
+        values[i] = smallest element of list terms[i] >= probes[i] (-1 past
+        the end); ranks[i] = its index within the OWNING PARTITION (-1 past
+        the end).  Always uses the fused pipeline, whatever ``self.fused``.
+        """
+        terms = np.asarray(terms, dtype=np.int64)
+        probes = np.asarray(probes, dtype=np.int64)
+        value, rank, past = self._fused_raw(terms, probes)
+        return np.where(past, -1, value), np.where(past, -1, rank)
+
+    # ------------------------------------------------------------------
+    # vectorized partition location (PR-1 path)
     # ------------------------------------------------------------------
     def locate(self, terms: np.ndarray, probes: np.ndarray) -> np.ndarray:
         """Partition holding NextGEQ(term, probe) per pair; -1 = past end."""
@@ -276,6 +454,9 @@ class QueryEngine:
         """Vectorized NextGEQ over (term, probe) pairs; -1 past the end."""
         terms = np.asarray(terms, dtype=np.int64)
         probes = np.asarray(probes, dtype=np.int64)
+        if self.fused:
+            value, _, past = self._fused_raw(terms, probes, with_rank=False)
+            return np.where(past, -1, value)
         p = self.locate(terms, probes)
         ok = p >= 0
         out = np.full(len(terms), -1, dtype=np.int64)
@@ -288,6 +469,9 @@ class QueryEngine:
         """Vectorized membership test: probe in list(term)."""
         terms = np.asarray(terms, dtype=np.int64)
         probes = np.asarray(probes, dtype=np.int64)
+        if self.fused:
+            value, _, past = self._fused_raw(terms, probes, with_rank=False)
+            return (value == probes) & ~past
         p = self.locate(terms, probes)
         ok = p >= 0
         member = np.zeros(len(terms), bool)
@@ -302,7 +486,33 @@ class QueryEngine:
                 member[inner] = exact
         return member
 
+    def _member_in(self, terms: np.ndarray, probes: np.ndarray) -> np.ndarray:
+        """Membership for the AND filter: probes are decoded docIDs."""
+        if not self.fused:
+            return self.member_batch(terms, probes)
+        value, _, past = self._fused_raw(
+            terms, probes, with_rank=False, trusted=True
+        )
+        return (value == probes) & ~past
+
     def decode_list(self, t: int) -> np.ndarray:
+        if self.fused:
+            key = ("list", int(t))
+            got = self._cache.get(key)
+            if got is not None:
+                self._cache.move_to_end(key)
+                self.stats["cache_hits"] += 1
+                return got
+            a = self.arena
+            r0 = int(a.list_blk_offsets[t])
+            r1 = int(a.list_blk_offsets[t + 1])
+            if r0 == r1:
+                return np.zeros(0, np.int64)
+            rows = np.arange(r0, r1, dtype=np.int64)
+            vals = self._rows_values(rows)
+            out = vals.reshape(-1)[a.lane_valid[r0:r1].reshape(-1)]
+            self._cache_put(key, out)
+            return out
         sl = slice(
             int(self.index.list_part_offsets[t]),
             int(self.index.list_part_offsets[t + 1]),
@@ -341,8 +551,11 @@ class QueryEngine:
             sel = t >= 0
             if not sel.any():
                 continue
-            keep = np.ones(len(cand), bool)
-            keep[sel] = self.member_batch(t[sel], cand[sel])
+            if sel.all():
+                keep = self._member_in(t, cand)
+            else:
+                keep = np.ones(len(cand), bool)
+                keep[sel] = self._member_in(t[sel], cand[sel])
             cand, qid = cand[keep], qid[keep]
         # qid stays sorted (boolean masking is stable) -> split by run
         cuts = np.searchsorted(qid, np.arange(nq + 1))

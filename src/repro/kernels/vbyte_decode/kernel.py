@@ -1,7 +1,7 @@
-"""Pallas TPU kernel: block Stream-VByte decode.
+"""Pallas TPU kernels: block Stream-VByte decode, plain and fused-with-search.
 
-TPU adaptation of Masked-VByte / Stream-VByte (DESIGN.md section 3): the
-x86 decoder uses PSHUFB byte shuffles; TPUs have no byte-shuffle unit, so the
+TPU adaptation of Masked-VByte / Stream-VByte (DESIGN.md §3): the x86 decoder
+uses PSHUFB byte shuffles; TPUs have no byte-shuffle unit, so the
 variable-length gather is re-expressed as a ONE-HOT MATMUL on the MXU:
 
     byte_j(i) = sum_d  data[d] * [d == start(i) + j]
@@ -13,6 +13,15 @@ block; everything is dense 8x128-lane arithmetic -- no per-lane control flow.
 Layout (produced by ops.pack_blocks): 128 values/block, data padded to 512
 bytes/block, so each grid step streams an (BM, 512) uint8 tile and an
 (BM, 128) int32 lens tile through VMEM (~5 KB/block -- far below VMEM).
+
+Two kernels share the decode tile:
+
+  * ``decode_blocks``       -- decode to values in HBM (the PR-1 path).
+  * ``decode_search_blocks``-- the FUSED query kernel (DESIGN.md §4): decode
+    a tile of gathered blocks, rebuild absolute docIDs in-register
+    (``block_base + cumsum(gap+1)``), compare against each row's probe and
+    emit only (next_geq_value, in_block_rank) per row.  Decoded values never
+    touch HBM; the output is 2 useful lanes per 128-value block.
 """
 
 from __future__ import annotations
@@ -27,10 +36,15 @@ BLOCK_VALS = 128
 BLOCK_BYTES = 512
 BM = 8  # blocks per grid step: (8, 512) u8 + (8, 128) i32 tiles
 
+# decode_search_blocks meta lanes: [:, META_BASE] = block_base of the row,
+# [:, META_PROBE] = probe; remaining lanes ignored (kept 128-wide for tiling)
+META_BASE = 0
+META_PROBE = 1
+_I32_MAX = 2**31 - 1  # python int: jnp constants would be captured by pallas
 
-def _decode_kernel(lens_ref, data_ref, out_ref):
-    lens = lens_ref[...]  # [BM, 128] int32
-    data = data_ref[...].astype(jnp.float32)  # [BM, 512]
+
+def _decode_tile(lens, data_f32):
+    """[BM,128] i32 lens + [BM,512] f32 bytes -> [BM,128] i32 values."""
     starts = jnp.cumsum(lens, axis=1) - lens  # [BM, 128]
     d_iota = jax.lax.broadcasted_iota(jnp.int32, (BM, BLOCK_BYTES, BLOCK_VALS), 1)
     out = jnp.zeros((BM, BLOCK_VALS), jnp.int32)
@@ -38,11 +52,15 @@ def _decode_kernel(lens_ref, data_ref, out_ref):
         sel = (d_iota == (starts + j)[:, None, :]).astype(jnp.float32)
         # MXU gather: [BM, 512] @ [BM, 512, 128] -> [BM, 128]
         byte = jax.lax.dot_general(
-            data, sel, (((1,), (1,)), ((0,), (0,))),
+            data_f32, sel, (((1,), (1,)), ((0,), (0,))),
             preferred_element_type=jnp.float32,
         ).astype(jnp.int32)
         out = out | jnp.where(lens > j, byte << (8 * j), 0)
-    out_ref[...] = out
+    return out
+
+
+def _decode_kernel(lens_ref, data_ref, out_ref):
+    out_ref[...] = _decode_tile(lens_ref[...], data_ref[...].astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -62,3 +80,53 @@ def decode_blocks(lens: jnp.ndarray, data: jnp.ndarray, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((nb, BLOCK_VALS), jnp.int32),
         interpret=interpret,
     )(lens, data)
+
+
+def _search_kernel(lens_ref, data_ref, meta_ref, out_ref):
+    gaps = _decode_tile(lens_ref[...], data_ref[...].astype(jnp.float32))
+    base = meta_ref[:, META_BASE : META_BASE + 1]    # [BM, 1]
+    probe = meta_ref[:, META_PROBE : META_PROBE + 1]  # [BM, 1]
+    # absolute docIDs of the row, ascending (padding lanes keep ascending)
+    vals = base + jnp.cumsum(gaps + 1, axis=1)
+    below = vals < probe
+    value = jnp.min(
+        jnp.where(below, _I32_MAX, vals), axis=1, keepdims=True
+    )
+    rank = jnp.sum(below.astype(jnp.int32), axis=1, keepdims=True)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (BM, BLOCK_VALS), 1)
+    out_ref[...] = jnp.where(
+        lane == 0, value, jnp.where(lane == 1, rank, 0)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_search_blocks(
+    lens: jnp.ndarray, data: jnp.ndarray, meta: jnp.ndarray,
+    interpret: bool = True,
+):
+    """Fused decode + in-register NextGEQ over gathered block rows.
+
+    lens: [nr, 128] int32; data: [nr, 512] uint8 -- one GATHERED arena row
+    per cursor (the block ``locate`` found).  meta: [nr, 128] int32 carrying
+    per row: lane META_BASE = block_base, lane META_PROBE = probe.
+
+    Returns [nr, 128] int32: lane 0 = smallest value >= probe within the row
+    (2^31-1 if none), lane 1 = count of row values < probe (0..128).  The
+    caller guarantees probe <= the row's partition endpoint, so lane 0 is
+    always a real (non-padding) value and lane 1 a real rank.
+    """
+    nr = lens.shape[0]
+    assert nr % BM == 0, f"rows must be a multiple of {BM}"
+    grid = (nr // BM,)
+    return pl.pallas_call(
+        _search_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BLOCK_VALS), lambda i: (i, 0)),
+            pl.BlockSpec((BM, BLOCK_BYTES), lambda i: (i, 0)),
+            pl.BlockSpec((BM, BLOCK_VALS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BM, BLOCK_VALS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, BLOCK_VALS), jnp.int32),
+        interpret=interpret,
+    )(lens, data, meta)

@@ -1,4 +1,11 @@
-"""jit'd wrappers + host-side packer for the block Stream-VByte decoder."""
+"""jit'd wrappers + host-side packer for the block Stream-VByte decoder.
+
+Backend policy lives here (shared by these ops and ``core.query_engine``):
+``default_backend()`` picks the compiled Pallas kernel on TPU/GPU and the
+vectorized-numpy mirror on CPU; ``default_interpret()`` only emulates the
+Pallas kernel (interpret mode) when no accelerator is present.  Passing
+``interpret=None`` anywhere means "resolve via ``default_interpret()``".
+"""
 
 from __future__ import annotations
 
@@ -9,8 +16,38 @@ import jax.numpy as jnp
 
 from repro.core.costs import bit_length_np
 
-from .kernel import BLOCK_BYTES, BLOCK_VALS, BM, decode_blocks
-from .ref import decode_blocks_ref
+from .kernel import (
+    BLOCK_BYTES,
+    BLOCK_VALS,
+    BM,
+    META_BASE,
+    META_PROBE,
+    decode_blocks,
+    decode_search_blocks,
+)
+from .ref import decode_blocks_ref, decode_search_ref
+
+
+def default_backend() -> str:
+    """"pallas" (compiled) on an accelerator, vectorized numpy otherwise."""
+    try:
+        if jax.default_backend() in ("tpu", "gpu"):
+            return "pallas"
+    except Exception:
+        pass
+    return "numpy"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode only off-accelerator: TPU/GPU must COMPILE."""
+    try:
+        return jax.default_backend() not in ("tpu", "gpu")
+    except Exception:
+        return True
+
+
+def _resolve_interpret(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def pack_blocks(values: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
@@ -62,14 +99,14 @@ def decode_block_rows(
     lens_rows: np.ndarray,
     data_rows: np.ndarray,
     backend: str = "numpy",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> np.ndarray:
     """Decode a gathered set of block rows with the chosen backend.
 
     backend: "numpy" (vectorized host decode), "ref" (jnp oracle), or
-    "pallas" (the MXU one-hot-matmul kernel; interpret=True off-TPU).
-    Rows need not be a multiple of BM -- the pallas path pads internally.
-    Returns [n_rows, 128] int64 values.
+    "pallas" (the MXU one-hot-matmul kernel; interpret=None auto-selects
+    compiled off the default jax backend).  Rows need not be a multiple of
+    BM -- the pallas path pads internally.  Returns [n_rows, 128] int64.
     """
     if backend == "numpy":
         return decode_blocks_np(lens_rows, data_rows)
@@ -91,16 +128,18 @@ def decode_block_rows(
         out = decode_blocks(
             jnp.asarray(np.asarray(lens_rows, np.int32)),
             jnp.asarray(data_rows),
-            interpret=interpret,
+            interpret=_resolve_interpret(interpret),
         )
         return np.asarray(out)[:n_rows].astype(np.int64)
     raise ValueError(f"unknown backend {backend!r}")
 
 
-def decode(lens, data, n: int, use_kernel: bool = True, interpret: bool = True):
+def decode(lens, data, n: int, use_kernel: bool = True,
+           interpret: bool | None = None):
     """Block-decode to values [n] (int32)."""
     if use_kernel:
-        out = decode_blocks(jnp.asarray(lens), jnp.asarray(data), interpret=interpret)
+        out = decode_blocks(jnp.asarray(lens), jnp.asarray(data),
+                            interpret=_resolve_interpret(interpret))
     else:
         out = decode_blocks_ref(jnp.asarray(lens.astype(np.int32)), jnp.asarray(data))
     return out.reshape(-1)[:n]
@@ -110,3 +149,82 @@ def decode_sorted(lens, data, n: int, base: int = -1, **kw):
     """Decode d-gap-encoded sorted ids (gap-1 convention, see core.costs)."""
     gaps = decode(lens, data, n, **kw).astype(jnp.int64) + 1
     return base + jnp.cumsum(gaps)
+
+
+# --------------------------------------------------------------------------
+# Fused decode + NextGEQ over arena rows (DESIGN.md §4)
+# --------------------------------------------------------------------------
+
+def decode_search_np(
+    lens: np.ndarray, data: np.ndarray, block_base: np.ndarray,
+    rows: np.ndarray, probes: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized-numpy fused search: decode each cursor's arena row and
+    resolve NextGEQ in one pass.  Duplicate rows are decoded once.
+
+    Returns (value [C] int64, rank [C] int64): smallest in-row value >=
+    probe (value of the LAST lane when none qualifies) and the count of
+    in-row values < probe (0..128).
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    probes = np.asarray(probes, dtype=np.int64)
+    urows, inv = np.unique(rows, return_inverse=True)
+    gaps = decode_blocks_np(lens[urows], data[urows])
+    uvals = np.asarray(block_base, np.int64)[urows][:, None] + np.cumsum(
+        gaps + 1, axis=1
+    )
+    vals = uvals[inv]  # [C, 128]
+    rank = (vals < probes[:, None]).sum(axis=1)
+    value = vals[np.arange(len(rows)), np.minimum(rank, BLOCK_VALS - 1)]
+    return value, rank
+
+
+def decode_search(
+    lens, data, block_base, rows, probes,
+    backend: str = "numpy", interpret: bool | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fused decode+NextGEQ over arena rows; numpy in/out, all backends.
+
+    lens [nb,128] int32 / data [nb,512] uint8 / block_base [nb]: the block
+    arena (see ``repro.core.arena``).  rows [C]: the arena row located for
+    each cursor.  probes [C]: absolute probe docIDs; each must be <= the
+    last real value of its row for the result to be meaningful (callers
+    mask out-of-range cursors -- the engine clamps them to probe 0).
+
+    Returns (value [C] int64, rank [C] int64) as ``decode_search_np``.
+    This convenience wrapper ships the gathered rows host->device per call;
+    the QueryEngine's jitted pipeline keeps everything resident instead.
+    """
+    if backend == "numpy":
+        return decode_search_np(lens, data, block_base, rows, probes)
+    if backend not in ("ref", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    rows = np.asarray(rows, dtype=np.int64)
+    n = len(rows)
+    if n == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    pad = (-n) % BM
+    rows_p = np.concatenate([rows, np.zeros(pad, np.int64)]) if pad else rows
+    probes_p = np.zeros(n + pad, np.int64)
+    probes_p[:n] = np.asarray(probes, dtype=np.int64)
+    lens_g = jnp.asarray(np.asarray(lens, np.int32)[rows_p])
+    data_g = jnp.asarray(np.asarray(data, np.uint8)[rows_p])
+    bases_g = np.asarray(block_base, np.int64)[rows_p].astype(np.int32)
+    probes_i = probes_p.astype(np.int32)
+    if backend == "ref":
+        value, rank = decode_search_ref(
+            lens_g, data_g, jnp.asarray(bases_g), jnp.asarray(probes_i)
+        )
+    else:
+        meta = np.zeros((n + pad, BLOCK_VALS), np.int32)
+        meta[:, META_BASE] = bases_g
+        meta[:, META_PROBE] = probes_i
+        out = decode_search_blocks(
+            lens_g, data_g, jnp.asarray(meta),
+            interpret=_resolve_interpret(interpret),
+        )
+        value, rank = out[:, 0], out[:, 1]
+    return (
+        np.asarray(value)[:n].astype(np.int64),
+        np.asarray(rank)[:n].astype(np.int64),
+    )

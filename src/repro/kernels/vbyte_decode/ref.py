@@ -25,3 +25,19 @@ def decode_sorted_ref(lens, data, base: int = -1):
     """Full d-gap decode: blocks -> gaps(+1 convention) -> absolute ids."""
     gaps = decode_blocks_ref(lens, data).reshape(-1).astype(jnp.int64) + 1
     return base + jnp.cumsum(gaps)
+
+
+def decode_search_ref(lens_rows, data_rows, bases, probes):
+    """jnp oracle of the fused decode+NextGEQ kernel (DESIGN.md §4).
+
+    lens_rows: [nr, 128] int32; data_rows: [nr, 512] uint8 -- gathered arena
+    rows, one per cursor.  bases / probes: [nr] int32 (block_base and probe
+    per row).  Returns (value [nr] int32, rank [nr] int32): the smallest
+    in-row value >= probe (2^31-1 if none) and the count of values < probe.
+    """
+    gaps = decode_blocks_ref(lens_rows, data_rows)
+    vals = bases[:, None] + jnp.cumsum(gaps + 1, axis=1)
+    below = vals < probes[:, None]
+    value = jnp.min(jnp.where(below, jnp.int32(2**31 - 1), vals), axis=1)
+    rank = jnp.sum(below.astype(jnp.int32), axis=1)
+    return value, rank

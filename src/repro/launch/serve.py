@@ -4,11 +4,13 @@
 
 Builds an optimally-partitioned VByte index over a synthetic clustered
 corpus, then serves boolean-AND queries through the batched
-``repro.core.query_engine.QueryEngine`` (vectorized partition location +
-Stream-VByte block decode + LRU partition cache), reporting space vs. the
-un-partitioned baseline, throughput, and per-batch latency percentiles.
-``--compare-scalar`` also times the per-query NextGEQ loop and verifies the
-batched results against it.
+``repro.core.query_engine.QueryEngine``.  The default path is the FUSED
+device-resident pipeline (one locate searchsorted + the decode_search
+kernel over the block arena, jitted end-to-end on ``ref``/``pallas``
+backends); ``--no-fused`` selects the PR-1 partition-LRU engine instead.
+Reports space vs. the un-partitioned baseline, throughput, and per-batch
+latency percentiles.  ``--compare-scalar`` also times the per-query NextGEQ
+loop and verifies the batched results against it.
 """
 
 from __future__ import annotations
@@ -52,6 +54,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "numpy", "ref", "pallas"])
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    help="serve through the PR-1 partition-LRU engine "
+                         "instead of the fused device pipeline")
     ap.add_argument("--compare-scalar", action="store_true",
                     help="also time the per-query NextGEQ loop and verify "
                          "the batched results against it")
@@ -80,7 +85,7 @@ def main() -> None:
         [int(t) for t in q]
         for q in make_queries(rng, args.n_lists, args.queries, args.arity)
     ]
-    engine = QueryEngine(idx, backend=args.backend)
+    engine = QueryEngine(idx, backend=args.backend, fused=args.fused)
     # warm-up batch: triggers the one-time arena transcode + jit on device
     engine.intersect_batch(queries[: args.batch])
 
@@ -91,7 +96,8 @@ def main() -> None:
     sizes = [len(queries[i : i + args.batch])
              for i in range(0, len(queries), args.batch)]
     per_q = [l / max(s, 1) for l, s in zip(lat, sizes)]
-    print(f"[serve] batched AND ({engine.backend}, batch={args.batch}): "
+    path = "fused" if engine.fused else "partition-lru"
+    print(f"[serve] batched AND ({engine.backend}/{path}, batch={args.batch}): "
           f"{len(queries)/wall:,.0f} q/s, "
           f"{wall/len(queries)*1e3:.3f} ms/query avg, "
           f"{n_results:,} results total")

@@ -1,0 +1,80 @@
+"""Smoke-run every benchmark module on tiny corpora (ISSUE-2 satellite).
+
+Benchmark drift used to rot silently until someone ran ``benchmarks.run`` by
+hand; here each module executes its --smoke profile inside the tier-1 suite,
+and the --json plumbing is exercised end-to-end.  Timing ASSERTIONS inside
+the benchmarks are relaxed in smoke mode (tiny corpora time unreliably);
+correctness assertions (identical results vs oracles) still run.
+"""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+# repo root: `benchmarks` is a plain package next to src/ and tests/
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import (  # noqa: E402
+    bench_build_time,
+    bench_competitors,
+    bench_fig1_distribution,
+    bench_kernels,
+    bench_nextgeq,
+    bench_partition_space,
+    bench_queries,
+    bench_vbyte_family,
+    roofline,
+)
+from benchmarks.common import RESULTS, reset_results  # noqa: E402
+
+MODULES = {
+    "bench_fig1_distribution": bench_fig1_distribution,
+    "bench_vbyte_family": bench_vbyte_family,
+    "bench_partition_space": bench_partition_space,
+    "bench_build_time": bench_build_time,
+    "bench_queries": bench_queries,
+    "bench_competitors": bench_competitors,
+    "bench_nextgeq": bench_nextgeq,
+    "bench_kernels": bench_kernels,
+    "roofline": roofline,
+}
+
+
+@pytest.mark.parametrize("name", sorted(MODULES))
+def test_benchmark_smoke(name, capsys):
+    reset_results()
+    MODULES[name].run(quick=True, smoke=True)
+    out = capsys.readouterr().out
+    if name == "roofline":  # table generator: silent without dryrun JSONs
+        return
+    assert out.strip(), f"{name} emitted nothing"
+    # every emitted line is well-formed CSV and registered for --json
+    lines = [l for l in out.strip().splitlines() if "," in l]
+    assert len(lines) == len(RESULTS) > 0
+    for line in lines:
+        _, us, _ = line.split(",", 2)
+        assert float(us) >= 0.0
+
+
+def test_run_json_writes_bench_files(tmp_path, monkeypatch, capsys):
+    """--json lands BENCH_queries.json / BENCH_kernels.json with ops + p50/p99."""
+    from benchmarks import run as bench_run
+
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(
+        sys, "argv",
+        ["benchmarks.run", "--smoke", "--json", "--only", "table5"],
+    )
+    bench_run.main()
+    capsys.readouterr()
+    data = json.loads((tmp_path / "BENCH_queries.json").read_text())
+    assert data["profile"] == "smoke"
+    recs = {r["name"]: r for r in data["records"]}
+    fused = recs["table5_and_fused_vbyte_opt"]
+    assert fused["module"] == "table5"
+    for field in ("ops_per_sec", "p50_us", "p99_us", "speedup_vs_pr1"):
+        assert field in fused, field
+    assert fused["ops_per_sec"] > 0
+    assert fused["p99_us"] >= fused["p50_us"] > 0

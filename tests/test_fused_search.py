@@ -1,0 +1,223 @@
+"""Property tests for the fused decode_search path (ISSUE-2 tentpole).
+
+The fused block-arena pipeline (locate over block keys + in-register
+decode+NextGEQ) must match the scalar per-partition NextGEQ loop and
+``intersect_scalar`` exactly -- on random clustered corpora, across all
+three kernel backends, including partition-boundary and out-of-range
+probes.  Runs under real hypothesis or the seeded shim in
+``tests/_hypothesis_shim.py``."""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.index import build_partitioned_index
+from repro.core.query_engine import QueryEngine
+from repro.data.postings import make_corpus, make_queries
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
+from repro.kernels.vbyte_decode.ops import decode_search, pack_blocks
+
+
+def _mk_corpus(seed, n_lists, max_len):
+    rng = np.random.default_rng(seed)
+    return make_corpus(
+        rng, n_lists=n_lists, min_len=60, max_len=max_len,
+        mean_dense_gap=2.13, frac_dense=0.8,
+    )
+
+
+def _boundary_probes(rng, idx, corpus, t):
+    """Probes hammering the fused path's edge cases for one list."""
+    seq = corpus[t]
+    sl = slice(int(idx.list_part_offsets[t]), int(idx.list_part_offsets[t + 1]))
+    eps = idx.endpoints[sl.start : sl.stop].astype(np.int64)
+    return np.unique(np.concatenate([
+        rng.integers(0, int(seq[-1]) + 3, 40),      # uniform incl. gaps
+        seq[rng.integers(0, len(seq), 20)],          # exact members
+        eps, eps + 1, np.maximum(eps - 1, 0),        # partition boundaries
+        [0, int(seq[-1]), int(seq[-1]) + 1,          # list boundaries
+         int(seq[-1]) + 12345],                      # far out of range
+    ]))
+
+
+def _scalar_oracle(seq, probes):
+    ks = np.searchsorted(seq, probes, "left")
+    return np.where(ks < len(seq), seq[np.minimum(ks, len(seq) - 1)], -1)
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_lists=st.integers(min_value=2, max_value=5),
+    max_len=st.integers(min_value=200, max_value=2_500),
+    strategy=st.sampled_from(["optimal", "uniform"]),
+)
+def test_fused_matches_scalar_next_geq_all_backends(
+    seed, n_lists, max_len, strategy
+):
+    corpus = _mk_corpus(seed, n_lists, max_len)
+    idx = build_partitioned_index(corpus, strategy)
+    rng = np.random.default_rng(seed + 1)
+    terms_l, probes_l, want_l = [], [], []
+    for t, seq in enumerate(corpus):
+        xs = _boundary_probes(rng, idx, corpus, t)
+        terms_l.append(np.full(len(xs), t, np.int64))
+        probes_l.append(xs)
+        want_l.append(_scalar_oracle(seq, xs))
+    terms = np.concatenate(terms_l)
+    probes = np.concatenate(probes_l)
+    want = np.concatenate(want_l)
+    for backend in ("numpy", "ref", "pallas"):
+        engine = QueryEngine(idx, backend=backend, fused=True)
+        got, ranks = engine.search_batch(terms, probes)
+        assert np.array_equal(got, want), (backend, strategy)
+        # ranks point back into the owning partition
+        ok = got >= 0
+        for i in np.flatnonzero(ok)[:: max(1, ok.sum() // 50)]:
+            t = int(terms[i])
+            seq = corpus[t]
+            k = int(np.searchsorted(seq, probes[i], "left"))
+            sl = slice(int(idx.list_part_offsets[t]),
+                       int(idx.list_part_offsets[t + 1]))
+            sizes = idx.sizes[sl.start : sl.stop].astype(np.int64)
+            p_local = int(np.searchsorted(np.cumsum(sizes), k, "right"))
+            local_rank = k - int(np.concatenate([[0], np.cumsum(sizes)])[p_local])
+            assert ranks[i] == local_rank, (backend, i)
+        # membership agrees with the raw sequences
+        member = engine.member_batch(terms, probes)
+        want_member = np.concatenate(
+            [np.isin(p, corpus[int(t)]) for t, p in
+             zip(range(len(corpus)), probes_l)]
+        )
+        assert np.array_equal(member, want_member), backend
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    arity=st.integers(min_value=2, max_value=4),
+)
+def test_fused_intersect_matches_intersect_scalar(seed, arity):
+    corpus = _mk_corpus(seed, 5, 1_500)
+    idx = build_partitioned_index(corpus, "optimal")
+    rng = np.random.default_rng(seed)
+    queries = [
+        [int(t) for t in q]
+        for q in make_queries(rng, len(corpus), 6, arity)
+    ]
+    for backend in ("numpy", "ref"):
+        engine = QueryEngine(idx, backend=backend, fused=True)
+        got = engine.intersect_batch(queries)
+        for q, g in zip(queries, got):
+            assert np.array_equal(g, idx.intersect_scalar(q)), (backend, q)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    nb=st.integers(min_value=1, max_value=9),
+)
+def test_decode_search_op_backends_agree(seed, nb):
+    """Op-level contract: the three decode_search backends are bit-equal."""
+    rng = np.random.default_rng(seed)
+    step = rng.integers(1, 1 << rng.integers(1, 20), (nb, BLOCK_VALS))
+    base = rng.integers(-1, 100, nb)
+    vals = base[:, None] + np.cumsum(step, axis=1)
+    lens, data, _ = pack_blocks((step - 1).astype(np.uint32).reshape(-1))
+    n_cursors = 4 * nb + 3
+    rows = rng.integers(0, nb, n_cursors)
+    # probes in [first value of row, last value of row]: always resolvable
+    lane = rng.integers(0, BLOCK_VALS, n_cursors)
+    probes = vals[rows, lane] - rng.integers(0, 2, n_cursors)
+    probes = np.maximum(probes, vals[rows, 0])
+    want_v, want_r = decode_search(lens, data, base, rows, probes,
+                                   backend="numpy")
+    # the numpy mirror vs direct per-row searchsorted
+    for i in range(n_cursors):
+        k = int(np.searchsorted(vals[rows[i]], probes[i], "left"))
+        assert want_r[i] == k
+        assert want_v[i] == vals[rows[i], k]
+    for backend in ("ref", "pallas"):
+        v, r = decode_search(lens, data, base, rows, probes, backend=backend)
+        assert np.array_equal(v, want_v), backend
+        assert np.array_equal(r, want_r), backend
+
+
+def test_int64_probes_past_int32_range_all_backends():
+    """Probes >= 2^31 must resolve past-the-end on the device path too (the
+    int32 staging cast used to wrap them negative -> probe 0)."""
+    corpus = _mk_corpus(11, 4, 1_500)
+    idx = build_partitioned_index(corpus, "optimal")
+    probes = np.array([2**31 + 5, 2**40, -7, 0, int(corpus[0][-1])])
+    terms = np.zeros(len(probes), np.int64)
+    want = QueryEngine(idx, backend="numpy").next_geq_batch(terms, probes)
+    assert want[0] == -1 and want[1] == -1
+    for backend in ("ref", "pallas"):
+        e = QueryEngine(idx, backend=backend)
+        assert np.array_equal(e.next_geq_batch(terms, probes), want), backend
+        assert np.array_equal(
+            e.member_batch(terms, probes),
+            QueryEngine(idx, backend="numpy").member_batch(terms, probes),
+        ), backend
+
+
+def test_arena_transcode_matches_payload_decode():
+    """Every arena block decodes back to the payload reference decoder."""
+    corpus = _mk_corpus(3, 6, 3_000)
+    idx = build_partitioned_index(corpus, "optimal")
+    a = idx.arena
+    engine = QueryEngine(idx, backend="numpy", fused=True)
+    for p in range(len(idx.endpoints)):
+        want = idx._decode_partition(p, int(a.bases[p]))
+        r0, k = int(a.first_blk[p]), int(a.n_blk[p])
+        rows = np.arange(r0, r0 + k)
+        vals = engine._rows_values(rows).reshape(-1)
+        assert np.array_equal(vals[: int(a.sizes[p])], want), p
+        assert np.array_equal(
+            vals[a.lane_valid[r0 : r0 + k].reshape(-1)], want
+        ), p
+    # block keys are globally non-decreasing: the one-searchsorted invariant
+    assert np.all(np.diff(a.block_keys) >= 0)
+    assert np.all(np.diff(engine._flat_keys) >= 0)
+
+
+def test_lru_bytes_bound_and_evictions():
+    """Satellite: the LRU is bounded by decoded BYTES, not entry count."""
+    rng = np.random.default_rng(9)
+    lists = [np.sort(rng.choice(500_000, 4_000, replace=False))
+             for _ in range(4)]
+    idx = build_partitioned_index(lists, "optimal")
+    # tiny byte budget: one decoded list (~32 KB) blows it
+    engine = QueryEngine(idx, backend="numpy", fused=False, cache_bytes=16_000)
+    for q in ([0, 1], [2, 3], [1, 2], [0, 3]):
+        got = engine.intersect_batch([list(q)])[0]
+        want = np.intersect1d(lists[q[0]], lists[q[1]])
+        assert np.array_equal(got, want), q
+        assert engine._cache_nbytes <= 16_000
+    assert engine.stats["evictions"] > 0
+    # a huge single partition is evicted immediately but still served
+    engine2 = QueryEngine(idx, backend="numpy", fused=False, cache_bytes=1)
+    assert np.array_equal(engine2.decode_list(0), lists[0])
+    assert len(engine2._cache) == 0
+
+
+def test_fused_budget_refusal_falls_back_exact():
+    """cache_bytes too small for the flat arena: per-call decode, same
+    results (the two-level fallback inside _search_np)."""
+    corpus = _mk_corpus(5, 4, 800)
+    idx = build_partitioned_index(corpus, "optimal")
+    small = QueryEngine(idx, backend="numpy", fused=True, cache_bytes=1_000)
+    big = QueryEngine(idx, backend="numpy", fused=True)
+    rng = np.random.default_rng(0)
+    terms = rng.integers(0, len(corpus), 300)
+    probes = rng.integers(0, 3_000_000, 300)
+    v1, r1 = small.search_batch(terms, probes)
+    v2, r2 = big.search_batch(terms, probes)
+    assert np.array_equal(v1, v2)
+    assert np.array_equal(r1, r2)
+    assert small._flat_ok is False and big._flat_ok is True
+    queries = [[0, 1], [2, 3], [1, 3]]
+    for a, b in zip(small.intersect_batch(queries), big.intersect_batch(queries)):
+        assert np.array_equal(a, b)
