@@ -123,6 +123,41 @@ def run(quick: bool = True, smoke: bool = False) -> None:
          f"backend=ref;results={sum(r.size for r in results_k)}",
          **latency_fields(lat_k, per=len(queries)))
 
+    # ISSUE-3 satellite: grouping duplicate (term, probe) cursors before
+    # the device gather must not lose throughput on duplicate-heavy
+    # batches (each unique cursor's block row is gathered + decoded once)
+    dup = 16
+    base_t = np.repeat(np.arange(len(corpus), dtype=np.int64), 16)
+    base_p = np.concatenate(
+        [rng.integers(0, int(corpus[t][-1]) + 1, 16) for t in
+         range(len(corpus))]
+    )
+    terms_d = np.tile(base_t, dup)
+    probes_d = np.tile(base_p, dup)
+    eng_g = QueryEngine(idx, backend="ref", fused=True)
+    eng_u = QueryEngine(idx, backend="ref", fused=True, group=False)
+    eng_g.search_batch(terms_d, probes_d)  # warm jit (grouped bucket)
+    eng_u.search_batch(terms_d, probes_d)  # warm jit (full bucket)
+    lat_g, out_g = timeit_samples(
+        lambda: eng_g.search_batch(terms_d, probes_d), repeat=repeat
+    )
+    lat_u, out_u = timeit_samples(
+        lambda: eng_u.search_batch(terms_d, probes_d), repeat=repeat
+    )
+    assert np.array_equal(out_g[0], out_u[0])
+    assert np.array_equal(out_g[1], out_u[1])
+    assert eng_g.stats["grouped_cursors"] > 0 >= eng_u.stats["grouped_cursors"]
+    grouped_speedup = min(lat_u) / min(lat_g)
+    emit("table5_grouped_cursors_ref",
+         min(lat_g) / len(terms_d) * 1e6,
+         f"dup={dup};speedup_vs_ungrouped={grouped_speedup:.2f}x",
+         speedup_vs_ungrouped=grouped_speedup,
+         **latency_fields(lat_g, per=len(terms_d)))
+    if not smoke:
+        assert grouped_speedup >= 1.0, (
+            f"grouped dispatch slower than ungrouped: {grouped_speedup:.2f}x"
+        )
+
 
 if __name__ == "__main__":
     from .common import cli_main

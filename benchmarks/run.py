@@ -3,9 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV lines.  Default is the quick profile
 (CI-sized datasets); ``--full`` uses paper-scale list lengths and ``--smoke``
 tiny corpora (seconds total -- the tier-1 drift check).  ``--json`` also
-writes machine-readable ``BENCH_queries.json`` / ``BENCH_kernels.json``
-(ops/sec + latency percentiles per record) so the perf trajectory is tracked
-across PRs.
+maintains machine-readable ``BENCH_<group>.json`` files (ops/sec + latency
+percentiles per record): each run APPENDS a history entry stamped with the
+git sha and a UTC timestamp, so the perf trajectory across PRs is actually
+recorded -- the top-level ``profile``/``records`` keys always mirror the
+newest entry for old readers, and ``tools/check_bench.py`` diffs the last
+two same-profile entries to flag regressions.
 
   PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only tableN] [--json]
 """
@@ -13,7 +16,9 @@ across PRs.
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import subprocess
 import sys
 import time
 
@@ -25,6 +30,7 @@ from . import (
     bench_nextgeq,
     bench_partition_space,
     bench_queries,
+    bench_ranked,
     bench_vbyte_family,
     roofline,
 )
@@ -39,14 +45,20 @@ MODULES = {
     "table6": bench_competitors,
     "fig7": bench_nextgeq,
     "kernels": bench_kernels,
+    "ranked": bench_ranked,
     "roofline": roofline,
 }
+
+# history entries kept per BENCH_*.json: enough trajectory for the
+# regression gate and for eyeballing trends, without unbounded file growth
+MAX_HISTORY = 40
 
 # module key -> BENCH_<group>.json the records belong to
 JSON_GROUPS = {
     "table5": "queries",
     "fig7": "queries",
     "kernels": "kernels",
+    "ranked": "ranked",
 }
 
 
@@ -84,12 +96,62 @@ def main() -> None:
     if args.json:
         for group, records in groups.items():
             path = f"BENCH_{group}.json"
+            entry = {
+                "sha": _git_sha(),
+                "timestamp": datetime.datetime.now(
+                    datetime.timezone.utc
+                ).isoformat(timespec="seconds"),
+                "profile": profile,
+                "records": records,
+            }
+            history = _load_history(path)
+            history.append(entry)
+            history = history[-MAX_HISTORY:]
             with open(path, "w") as fh:
+                # top-level profile/records mirror the NEWEST entry so
+                # pre-history readers keep working; history has them all
                 json.dump(
-                    {"profile": profile, "records": records}, fh, indent=1
+                    {
+                        "profile": profile,
+                        "records": records,
+                        "history": history,
+                    },
+                    fh, indent=1,
                 )
                 fh.write("\n")
-            print(f"# wrote {path} ({len(records)} records)", file=sys.stderr)
+            print(
+                f"# appended to {path} ({len(records)} records, "
+                f"{len(history)} history entries)", file=sys.stderr,
+            )
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001  (no git / not a repo: still record)
+        return "unknown"
+
+
+def _load_history(path: str) -> list[dict]:
+    """Existing history entries; a pre-history file becomes entry #1."""
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except (OSError, ValueError):
+        return []
+    if "history" in data:
+        return list(data["history"])
+    if "records" in data:  # migrate the old single-run schema
+        return [{
+            "sha": "pre-history",
+            "timestamp": None,
+            "profile": data.get("profile", "unknown"),
+            "records": data["records"],
+        }]
+    return []
 
 
 if __name__ == "__main__":

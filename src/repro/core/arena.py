@@ -28,6 +28,17 @@ Per-block sidecars make every block self-decoding and directly searchable:
 ``dev`` uploads the arrays to the default jax device once, int32-narrowed;
 ``device_ok`` says whether the int32 key space is wide enough (it is unless
 ``n_lists * stride`` overflows 31 bits -- then the numpy path serves).
+
+When the index carries a freq stream (``index.has_freqs``), the transcode
+also builds the RANKED sidecar (DESIGN.md §5): the per-posting term
+frequencies re-encoded into PARALLEL Stream-VByte blocks (``freq_lens`` /
+``freq_data``, lane-aligned with the docID blocks), an 8-bit quantized
+length-norm code per lane (``norm_q``), and the block-max structure of the
+BM25 literature: ``block_max_q[b]``, an upper-bound-safe u8 quantization of
+the true maximum contract score inside block b, plus per-list upper bounds
+and idf.  Quantization rounds UP (and is then verified lane-exactly), so no
+block's true max ever exceeds its dequantized bound -- the admissibility
+invariant Block-Max WAND/MaxScore pruning rests on.
 """
 
 from __future__ import annotations
@@ -39,6 +50,51 @@ import numpy as np
 from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
 
 TAG_VBYTE = 0
+
+
+@dataclass
+class RankedSidecar:
+    """Freq blocks + BM25 block-max structure riding the arena (§5)."""
+
+    freq_lens: np.ndarray    # [nb_padded, 128] int32  (VByte of tf - 1)
+    freq_data: np.ndarray    # [nb_padded, 512] uint8
+    norm_q: np.ndarray       # [n_blocks, 128] uint8  quantized doc-norm code
+    block_max_q: np.ndarray  # [n_blocks] uint8  quantized score upper bound
+    bound_scale: np.float32  # dequant: bound(b) = block_max_q[b] * bound_scale
+    idf: np.ndarray          # [n_lists] float32
+    list_ub: np.ndarray      # [n_lists] float32  max block bound per list
+    kmin: np.float32         # norm dequant grid (repro.ranked.bm25)
+    kstep: np.float32
+    norm_table: np.ndarray   # [256] float32  gathered (never recomputed)
+    params: object           # BM25Params the sidecar was built with
+    _dev: object = field(default=None, repr=False, compare=False)
+
+    def block_bounds(self) -> np.ndarray:
+        """Dequantized per-block score upper bounds, float32 (admissible)."""
+        return (
+            self.block_max_q.astype(np.float32) * np.float32(self.bound_scale)
+        )
+
+    @property
+    def dev(self):
+        if self._dev is None:
+            import jax.numpy as jnp
+            from types import SimpleNamespace
+
+            self._dev = SimpleNamespace(
+                freq_lens=jnp.asarray(self.freq_lens),
+                freq_data=jnp.asarray(self.freq_data),
+                norm_q=jnp.asarray(self.norm_q),
+                idf=jnp.asarray(self.idf),
+                norm_table=jnp.asarray(self.norm_table),
+            )
+        return self._dev
+
+    def nbytes(self) -> int:
+        return int(
+            self.freq_lens.nbytes + self.freq_data.nbytes + self.norm_q.nbytes
+            + self.block_max_q.nbytes
+        )
 
 
 @dataclass
@@ -62,6 +118,7 @@ class DeviceArena:
     stride: int = 0
     n_blocks: int = 0
     device_ok: bool = True
+    ranked: RankedSidecar | None = None
     _dev: object = field(default=None, repr=False, compare=False)
 
     @property
@@ -88,7 +145,7 @@ class DeviceArena:
         return int(
             self.lens.nbytes + self.data.nbytes + self.block_base.nbytes
             + self.block_keys.nbytes + self.lane_valid.nbytes
-        )
+        ) + (self.ranked.nbytes() if self.ranked is not None else 0)
 
 
 def build_arena(index) -> DeviceArena:
@@ -115,10 +172,19 @@ def build_arena(index) -> DeviceArena:
         first_blk[1:] = np.cumsum(n_blk)[:-1]
     nb = int(n_blk.sum())
 
+    ranked_on = bool(getattr(index, "has_freqs", False))
     gaps_m1 = np.zeros(nb * BLOCK_VALS, np.uint32)
     block_base = np.zeros(nb, np.int64)
     block_last = np.zeros(nb, np.int64)
     lane_valid = np.zeros((nb, BLOCK_VALS), bool)
+    tf_m1 = np.zeros(nb * BLOCK_VALS, np.uint32) if ranked_on else None
+    norm_q = np.zeros(nb * BLOCK_VALS, np.uint8) if ranked_on else None
+    if ranked_on:
+        from repro.ranked.bm25 import DEFAULT_BM25, quantize_norms
+
+        q_norms, kmin, kstep = quantize_norms(
+            index.doc_lens, index.avg_dl, DEFAULT_BM25
+        )
     payload_end = index.offsets[1:].tolist() + [index.payload.size]
     for p in range(n_parts):
         off, end = int(index.offsets[p]), int(payload_end[p])
@@ -140,6 +206,9 @@ def build_arena(index) -> DeviceArena:
         ]
         lv = lane_valid[b0 : b0 + k].reshape(-1)
         lv[:size] = True
+        if ranked_on:
+            tf_m1[s : s + size] = index._decode_partition_freqs(p) - 1
+            norm_q[s : s + size] = q_norms[vals]
 
     lens, data, _ = pack_blocks(gaps_m1)
 
@@ -155,6 +224,13 @@ def build_arena(index) -> DeviceArena:
         )[index.list_part_offsets]
     # int32 device keys must hold probe + term*stride and value + 128
     device_ok = (index.n_lists + 1) * stride < 2**31 - BLOCK_VALS - 2
+
+    ranked = None
+    if ranked_on:
+        ranked = _build_ranked_sidecar(
+            index, tf_m1, norm_q, lane_valid, part_list, n_blk, nb,
+            kmin, kstep,
+        )
 
     return DeviceArena(
         lens=lens,
@@ -172,4 +248,75 @@ def build_arena(index) -> DeviceArena:
         stride=stride,
         n_blocks=nb,
         device_ok=bool(device_ok),
+        ranked=ranked,
+    )
+
+
+def _build_ranked_sidecar(
+    index, tf_m1, norm_q, lane_valid, part_list, n_blk, nb, kmin, kstep
+) -> RankedSidecar:
+    """Freq blocks + admissible block-max bounds (see module docstring)."""
+    from repro.kernels.vbyte_decode.ops import pack_blocks
+    from repro.ranked.bm25 import (
+        DEFAULT_BM25,
+        dequant_norm,
+        idf,
+        norm_table,
+        score_tf,
+    )
+
+    freq_lens, freq_data, _ = pack_blocks(tf_m1)
+    idf_list = idf(index.n_docs_real, np.maximum(index.list_sizes, 1)).astype(
+        np.float32
+    )
+    # true per-lane contract scores (build-time only; never materialized at
+    # query time on device)
+    list_of_block = part_list[np.repeat(np.arange(len(n_blk)), n_blk)] \
+        if len(n_blk) else np.zeros(0, np.int64)
+    lane_idf = np.repeat(idf_list[list_of_block], BLOCK_VALS) \
+        if nb else np.zeros(0, np.float32)
+    k_hat = dequant_norm(norm_q, kmin, kstep)
+    sc = score_tf(tf_m1.astype(np.int64) + 1, k_hat, lane_idf, DEFAULT_BM25)
+    sc = np.where(lane_valid.reshape(-1), sc, np.float32(0.0))
+    block_true_max = sc.reshape(nb, BLOCK_VALS).max(axis=1) if nb \
+        else np.zeros(0, np.float32)
+    # upper-bound-safe u8 quantization: ceil onto a 255-level grid, then
+    # verify in the contract's float32 and bump where rounding undershot
+    scale = float(block_true_max.max()) if nb else 0.0
+    bound_scale = np.float32(scale / 255.0) if scale > 0 else np.float32(0.0)
+    # f32(255) * bound_scale can round BELOW scale, leaving the q=255 block
+    # inadmissible with no room to bump: nudge the scale up until it covers
+    while scale > 0 and np.float32(255.0) * bound_scale < np.float32(scale):
+        bound_scale = np.nextafter(bound_scale, np.float32(np.inf),
+                                   dtype=np.float32)
+    if scale > 0:
+        q = np.ceil(
+            block_true_max.astype(np.float64) / float(bound_scale) - 1e-9
+        ).astype(np.int64)
+        q = np.clip(q, 0, 255)
+        for _ in range(3):  # f32 dequant may still round below the true max
+            low = (q.astype(np.float32) * bound_scale) < block_true_max
+            if not low.any():
+                break
+            q[low] = np.minimum(q[low] + 1, 255)
+        q = q.astype(np.uint8)
+        assert np.all(q.astype(np.float32) * bound_scale >= block_true_max)
+    else:
+        q = np.zeros(nb, np.uint8)
+    bounds = q.astype(np.float32) * bound_scale
+    list_ub = np.zeros(index.n_lists, np.float32)
+    if nb:
+        np.maximum.at(list_ub, list_of_block, bounds)
+    return RankedSidecar(
+        freq_lens=freq_lens,
+        freq_data=freq_data,
+        norm_q=norm_q.reshape(nb, BLOCK_VALS),
+        block_max_q=q,
+        bound_scale=bound_scale,
+        idf=idf_list,
+        list_ub=list_ub,
+        kmin=kmin,
+        kstep=kstep,
+        norm_table=norm_table(kmin, kstep),
+        params=DEFAULT_BM25,
     )

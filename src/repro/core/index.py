@@ -12,6 +12,13 @@ VByte partitions store the plain-VByte bytes of ``gap - 1`` (see costs.py);
 bit-vector partitions store the packed characteristic bitmap of the re-based
 values over ``universe = sum(gaps)`` bits.
 
+Ranked retrieval (DESIGN.md §5) adds an OPTIONAL second payload stream:
+per-posting term frequencies, VByte-encoded (``tf - 1``) per partition into
+``freq_payload`` / ``freq_offsets`` -- the same partition boundaries as the
+docID stream, whatever the docID codec -- plus ``doc_lens`` (document length
+per docID) and the collection stats BM25 needs (``n_docs_real``, ``avg_dl``).
+Pass ``freqs=`` to ``build_partitioned_index`` to populate it.
+
 Query ops: ``decode_list``, ``next_geq`` and ``intersect`` (boolean AND, the
 paper's Tables 5/8 workload).  They delegate to the batched
 ``repro.core.query_engine.QueryEngine``, whose default path is the FUSED
@@ -55,8 +62,28 @@ class PartitionedIndex:
     offsets: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
     payload: np.ndarray = field(default_factory=lambda: np.zeros(0, np.uint8))
     F: int = DEFAULT_F
+    # ranked-retrieval payload stream (optional; DESIGN.md §5): per-posting
+    # term frequencies, VByte(tf - 1) per partition, + document lengths
+    freq_offsets: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    freq_payload: np.ndarray = field(default_factory=lambda: np.zeros(0, np.uint8))
+    doc_lens: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
     _engine: object = field(default=None, repr=False, compare=False)
     _arena: object = field(default=None, repr=False, compare=False)
+
+    @property
+    def has_freqs(self) -> bool:
+        return self.doc_lens.size > 0
+
+    @property
+    def n_docs_real(self) -> int:
+        """Documents that actually occur in some list (idf's N)."""
+        return int(np.count_nonzero(self.doc_lens))
+
+    @property
+    def avg_dl(self) -> float:
+        """Mean length of the REAL documents (BM25's avgdl)."""
+        n = self.n_docs_real
+        return float(self.doc_lens.sum()) / n if n else 1.0
 
     @property
     def engine(self):
@@ -109,6 +136,29 @@ class PartitionedIndex:
         universe = int(self.endpoints[p]) - base
         rebased = bitvector_decode(self.payload[off:end], universe)
         return rebased + base + 1
+
+    def _decode_partition_freqs(self, p: int) -> np.ndarray:
+        """Per-posting term frequencies of partition p (tf >= 1)."""
+        off = int(self.freq_offsets[p])
+        end = (
+            int(self.freq_offsets[p + 1])
+            if p + 1 < len(self.freq_offsets)
+            else self.freq_payload.size
+        )
+        return (
+            vbyte_decode(self.freq_payload[off:end], int(self.sizes[p])).astype(
+                np.int64
+            )
+            + 1
+        )
+
+    def decode_list_freqs(self, t: int) -> np.ndarray:
+        """Term frequencies of list t, aligned with ``decode_list(t)``."""
+        if not self.has_freqs:
+            raise ValueError("index was built without a freq stream")
+        sl = self._list_slice(t)
+        chunks = [self._decode_partition_freqs(p) for p in range(sl.start, sl.stop)]
+        return np.concatenate(chunks) if chunks else np.zeros(0, np.int64)
 
     def next_geq(self, t: int, x: int, cursor: int | None = None) -> tuple[int, int]:
         """Smallest element >= x in list t (and the partition cursor).
@@ -196,14 +246,21 @@ def build_partitioned_index(
     F: int = DEFAULT_F,
     uniform_block: int = 128,
     partitioner=None,
+    freqs: list[np.ndarray] | None = None,
 ) -> PartitionedIndex:
-    """strategy in {"optimal", "uniform", "eps", "single"} or pass partitioner."""
+    """strategy in {"optimal", "uniform", "eps", "single"} or pass partitioner.
+
+    ``freqs`` (one tf >= 1 array per list, aligned with the docIDs) attaches
+    the ranked-retrieval payload stream: per-partition VByte(tf - 1) plus the
+    implied document lengths / collection stats (DESIGN.md §5).
+    """
     from .partition import eps_optimal
 
     all_ep, all_sz, all_tag, all_pay = [], [], [], []
+    all_fpay: list[np.ndarray] = []
     lp_off = [0]
     list_sizes = []
-    for seq in lists:
+    for li, seq in enumerate(lists):
         seq = np.asarray(seq, dtype=np.int64)
         gaps = gaps_from_sorted(seq)
         if partitioner is not None:
@@ -223,6 +280,15 @@ def build_partitioned_index(
         all_sz += sz
         all_tag += tag
         all_pay += pay
+        if freqs is not None:
+            tf = np.asarray(freqs[li], dtype=np.int64)
+            if tf.shape != seq.shape or (len(tf) and tf.min() < 1):
+                raise ValueError(f"freqs[{li}] must be tf >= 1 aligned with the list")
+            starts = np.concatenate([[0], P[:-1]])
+            all_fpay += [
+                vbyte_encode((tf[s:r] - 1).astype(np.uint64))
+                for s, r in zip(starts, P)
+            ]
         lp_off.append(lp_off[-1] + len(ep))
         list_sizes.append(len(seq))
 
@@ -231,6 +297,20 @@ def build_partitioned_index(
     if len(lens):
         offsets[1:] = np.cumsum(lens)[:-1]
     payload = np.concatenate(all_pay) if all_pay else np.zeros(0, np.uint8)
+    freq_offsets = np.zeros(0, np.int64)
+    freq_payload = np.zeros(0, np.uint8)
+    doc_lens = np.zeros(0, np.int64)
+    if freqs is not None:
+        from repro.data.postings import doc_lengths
+
+        freq_offsets = np.zeros(len(all_fpay), dtype=np.int64)
+        flens = np.array([p.size for p in all_fpay], dtype=np.int64)
+        if len(flens):
+            freq_offsets[1:] = np.cumsum(flens)[:-1]
+        freq_payload = (
+            np.concatenate(all_fpay) if all_fpay else np.zeros(0, np.uint8)
+        )
+        doc_lens = doc_lengths(lists, freqs)
     return PartitionedIndex(
         n_lists=len(lists),
         list_part_offsets=np.asarray(lp_off, dtype=np.int64),
@@ -241,6 +321,9 @@ def build_partitioned_index(
         offsets=offsets,
         payload=payload,
         F=F,
+        freq_offsets=freq_offsets,
+        freq_payload=freq_payload,
+        doc_lens=doc_lens,
     )
 
 

@@ -88,6 +88,10 @@ class QueryEngine:
         tiny ones.
     fused: serve NextGEQ/membership through the fused locate->decode_search
         pipeline (default).  False selects the PR-1 partition-LRU path.
+    group: group duplicate (term, probe) cursors before the DEVICE
+        dispatch, so batches heavy in repeated terms (AND filters over
+        queries sharing terms) gather and decode each block row once
+        instead of once per duplicate cursor.
     """
 
     def __init__(
@@ -97,6 +101,7 @@ class QueryEngine:
         cache_parts: int = 32_768,
         cache_bytes: int = 256 << 20,
         fused: bool = True,
+        group: bool = True,
     ):
         self.index = index
         self.backend = default_backend() if backend == "auto" else backend
@@ -106,6 +111,7 @@ class QueryEngine:
         self.cache_parts = int(cache_parts)
         self.cache_bytes = int(cache_bytes)
         self.fused = bool(fused)
+        self.group = bool(group)
         self.arena = index.arena
         self._cache: OrderedDict = OrderedDict()
         self._cache_nbytes = 0
@@ -122,6 +128,7 @@ class QueryEngine:
             "kernel_calls": 0,
             "evictions": 0,
             "fused_batches": 0,
+            "grouped_cursors": 0,
         }
 
         a = self.arena
@@ -250,17 +257,49 @@ class QueryEngine:
         return bool(self._flat_ok)
 
     def _rows_values(self, rows: np.ndarray) -> np.ndarray:
-        """[len(rows), 128] absolute docIDs of the given (unique) rows."""
+        """[len(rows), 128] absolute docIDs of the given (unique) rows.
+
+        With the flat arena refused (over ``cache_bytes``), decoded rows go
+        through the byte-budgeted LRU under ``("row", r)`` keys -- the
+        dense row cache the fused CPU path promises.  Rows the budget
+        cannot hold are decoded, served, and dropped, with every drop
+        counted in ``stats["evictions"]`` like any other cache eviction.
+        """
         a = self.arena
         if self._flat_init():
             return self._flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows]
-        gaps = decode_block_rows(
-            a.lens[rows], a.data[rows], backend=self.backend,
-            interpret=self.interpret,
-        )
-        self.stats["kernel_calls"] += 1
-        self.stats["decoded_rows"] += len(rows)
-        return a.block_base[rows][:, None] + np.cumsum(gaps + 1, axis=1)
+        rows = np.asarray(rows, dtype=np.int64)
+        out = np.empty((len(rows), BLOCK_VALS), np.int64)
+        miss_j: list[int] = []
+        for j, rr in enumerate(rows):
+            got = self._cache.get(("row", int(rr)))
+            if got is None:
+                miss_j.append(j)
+            else:
+                self._cache.move_to_end(("row", int(rr)))
+                self.stats["cache_hits"] += 1
+                out[j] = got
+        if miss_j:
+            miss_rows = rows[miss_j]
+            gaps = decode_block_rows(
+                a.lens[miss_rows], a.data[miss_rows], backend=self.backend,
+                interpret=self.interpret,
+            )
+            self.stats["kernel_calls"] += 1
+            self.stats["decoded_rows"] += len(miss_rows)
+            vals = a.block_base[miss_rows][:, None] + np.cumsum(
+                gaps + 1, axis=1
+            )
+            out[miss_j] = vals
+            # cache at most a budget's worth of this batch's rows (the
+            # most recently decoded): caching a miss set larger than the
+            # budget would evict every entry before it could ever be
+            # re-hit -- pure churn.  copy(): a view would pin the whole
+            # batch's vals base array and void the byte accounting.
+            cap = max(int(self.cache_bytes // (BLOCK_VALS * 8)), 1)
+            for j in range(max(len(miss_rows) - cap, 0), len(miss_rows)):
+                self._cache_put(("row", int(miss_rows[j])), vals[j].copy())
+        return out
 
     def _search_np(self, terms, probes, with_rank: bool = True,
                    trusted: bool = False):
@@ -397,6 +436,24 @@ class QueryEngine:
             return full, full.copy(), np.ones(n, bool)
         self.stats["fused_batches"] += 1
         if self._use_device:
+            if self.group and n > 1:
+                # group duplicate (term, probe) cursors: AND filters across
+                # queries sharing terms re-probe the same pairs, and each
+                # duplicate would gather + decode its block row again.  The
+                # clip below matches _search_jax's staging clip, so grouped
+                # and ungrouped dispatches see identical cursors.
+                key = (
+                    np.clip(probes, 0, self.arena.stride - 1)
+                    + terms * self.arena.stride
+                )
+                uk, idx, inv = np.unique(
+                    key, return_index=True, return_inverse=True
+                )
+                if len(uk) < n:
+                    self.stats["grouped_cursors"] += n - len(uk)
+                    value, rank = self._search_jax(terms[idx], probes[idx])
+                    value, rank = value[inv], rank[inv]
+                    return value, rank, value < 0
             value, rank = self._search_jax(terms, probes)
             return value, rank, value < 0
         return self._search_np(terms, probes, with_rank, trusted)

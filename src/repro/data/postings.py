@@ -67,3 +67,66 @@ def make_queries(
     return [
         list(rng.choice(n_lists, size=arity, replace=False)) for _ in range(n_queries)
     ]
+
+
+def make_freqs(
+    rng: np.random.Generator,
+    lists: list[np.ndarray],
+    zipf_hot: float = 1.25,
+    zipf_cold: float = 3.0,
+    p_stay: float = 0.995,
+    frac_hot: float = 0.15,
+    max_tf: int = 4096,
+) -> list[np.ndarray]:
+    """Within-document term frequencies for each posting: clustered Zipf.
+
+    One tf >= 1 per posting of each list -- the second payload stream the
+    ranked (BM25) subsystem carries alongside the docID gaps.  Real tf
+    streams are skewed AND autocorrelated: a term is frequent across a
+    topical run of documents and incidental elsewhere.  A sticky two-state
+    chain (hot: heavy-tailed Zipf, cold: tf mostly 1) reproduces both, which
+    is exactly what makes per-block score maxima vary -- the structure
+    Block-Max WAND/MaxScore pruning exploits.  IID tf would give every
+    128-posting block a similar max and no block-max structure to find.
+    """
+    stay_h = p_stay
+    stay_c = 1.0 - (1.0 - p_stay) * frac_hot / max(1e-9, 1.0 - frac_hot)
+    stay_c = min(max(stay_c, 0.5), 0.99999)
+    out = []
+    for seq in lists:
+        n = len(seq)
+        states = np.empty(n, dtype=bool)  # True = hot
+        u = rng.random(n)
+        s = rng.random() < frac_hot
+        for i in range(n):
+            states[i] = s
+            # hot stays hot w.p. stay_h; cold LEAVES cold w.p. 1 - stay_c
+            s = (u[i] < stay_h) if s else (u[i] >= stay_c)
+        hot = rng.zipf(zipf_hot, size=n)
+        cold = rng.zipf(zipf_cold, size=n)
+        tf = np.where(states, hot, cold)
+        out.append(np.minimum(tf, max_tf).astype(np.int64))
+    return out
+
+
+def make_ranked_corpus(
+    rng: np.random.Generator, **kw
+) -> tuple[list[np.ndarray], list[np.ndarray]]:
+    """(docID lists, per-posting term frequencies) for the ranked workload."""
+    lists = make_corpus(rng, **kw)
+    return lists, make_freqs(rng, lists)
+
+
+def doc_lengths(
+    lists: list[np.ndarray], freqs: list[np.ndarray]
+) -> np.ndarray:
+    """Document lengths implied by the corpus: dl(d) = sum of tf over lists.
+
+    Returns an int64 array over the docID universe [0, max docID]; docs that
+    appear in no list have length 0 (they are never scored).
+    """
+    n_docs = 1 + max((int(seq[-1]) for seq in lists if len(seq)), default=-1)
+    dl = np.zeros(max(n_docs, 0), np.int64)
+    for seq, tf in zip(lists, freqs):
+        np.add.at(dl, seq, tf)
+    return dl

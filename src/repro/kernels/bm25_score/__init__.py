@@ -1,0 +1,1 @@
+"""Fused decode + BM25 scoring kernels over the ranked block arena (§5)."""

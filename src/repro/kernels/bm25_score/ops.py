@@ -1,0 +1,204 @@
+"""Wrappers + numpy mirrors for the fused BM25 scoring kernels (§5).
+
+Same backend triple as ``vbyte_decode``: ``"pallas"`` (the MXU kernel),
+``"ref"`` (jnp oracle), ``"numpy"`` (vectorized host mirror, the CPU serving
+path).  All three compute the float32 contract of ``repro.ranked.bm25`` with
+the norm dequantization GATHERED from the shared 256-entry table, so outputs
+are bit-identical across backends (property-tested in tests/test_ranked.py).
+
+These convenience ops gather rows host-side per call; the ``TopKEngine``'s
+jitted device pipeline keeps the arena resident instead (mirroring how
+``QueryEngine`` relates to ``vbyte_decode.ops.decode_search``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.vbyte_decode.kernel import (
+    BLOCK_VALS,
+    BM,
+    META_BASE,
+    META_PROBE,
+)
+from repro.kernels.vbyte_decode.ops import _resolve_interpret, decode_blocks_np
+
+from .kernel import (
+    FMETA_IDF,
+    FMETA_K1P1,
+    NORM_LEVELS,
+    bm25_score_blocks,
+    bm25_score_probe_blocks,
+)
+from .ref import score_probe_ref, score_rows_ref
+
+# jitted oracles, called on pow2-padded row counts so traces are reused
+_score_rows_ref_jit = None
+_score_probe_ref_jit = None
+
+
+def _jitted_refs():
+    global _score_rows_ref_jit, _score_probe_ref_jit
+    if _score_rows_ref_jit is None:
+        import jax
+
+        _score_rows_ref_jit = jax.jit(score_rows_ref)
+        _score_probe_ref_jit = jax.jit(score_probe_ref)
+    return _score_rows_ref_jit, _score_probe_ref_jit
+
+
+def _pow2_rows(n: int) -> int:
+    return max(BM, 1 << (max(n, 1) - 1).bit_length())
+
+
+def _table_tile(table: np.ndarray) -> np.ndarray:
+    """[256] f32 dequant table -> the [BM, 256] tile the kernel streams."""
+    return np.broadcast_to(
+        np.asarray(table, np.float32), (BM, NORM_LEVELS)
+    ).copy()
+
+
+def _fmeta(idf_rows: np.ndarray, k1p1) -> np.ndarray:
+    fmeta = np.zeros((len(idf_rows), BLOCK_VALS), np.float32)
+    fmeta[:, FMETA_IDF] = idf_rows
+    fmeta[:, FMETA_K1P1] = np.float32(k1p1)
+    return fmeta
+
+
+def score_rows_np(flens, fdata, norms, idf_rows, table, k1p1):
+    """Numpy mirror of ``bm25_score_blocks``: [nr, 128] float32 scores."""
+    tf = (decode_blocks_np(flens, fdata) + 1).astype(np.float32)
+    k_hat = np.asarray(table, np.float32)[np.asarray(norms, np.int64)]
+    idf_c = np.asarray(idf_rows, np.float32)[:, None]
+    return (idf_c * ((tf * np.float32(k1p1)) / (tf + k_hat))).astype(np.float32)
+
+
+def score_probe_np(
+    lens, data, flens, fdata, norms, block_base, rows, probes, idf_rows,
+    table, k1p1,
+):
+    """Numpy mirror of the fused probe kernel; duplicate rows decoded once.
+
+    Returns contrib [C] float32: the BM25 contribution of the probed docID
+    in its located row, 0.0 when absent.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    probes = np.asarray(probes, dtype=np.int64)
+    urows, first, inv = np.unique(rows, return_index=True, return_inverse=True)
+    gaps = decode_blocks_np(lens[urows], data[urows])
+    vals = np.asarray(block_base, np.int64)[urows][:, None] + np.cumsum(
+        gaps + 1, axis=1
+    )
+    # idf is a property of the row's owning list: every cursor sharing a row
+    # carries the same idf, so scoring once per unique row is exact
+    scores_u = score_rows_np(
+        np.asarray(flens)[urows], np.asarray(fdata)[urows],
+        np.asarray(norms)[urows],
+        np.asarray(idf_rows, np.float32)[first], table, k1p1,
+    )
+    match = vals[inv] == probes[:, None]
+    return np.where(match, scores_u[inv], np.float32(0.0)).sum(
+        axis=1, dtype=np.float32
+    )
+
+
+def bm25_score_probe(
+    lens, data, flens, fdata, norms, block_base, rows, probes, idf_rows,
+    table, k1p1,
+    backend: str = "numpy", interpret: bool | None = None,
+) -> np.ndarray:
+    """Fused decode+score+match over arena rows; numpy in/out, all backends.
+
+    lens/data + flens/fdata: the docID and freq block arenas; norms:
+    [nb, 128] uint8 codes; block_base: [nb].  rows [C]: located arena row
+    per cursor; probes [C]: absolute docIDs (each <= its row's endpoint for
+    a meaningful result -- callers mask past-the-end cursors); idf_rows [C]:
+    idf of each cursor's list; table: [256] f32 norm dequant table; k1p1:
+    k1 + 1 as float32.
+    """
+    if backend == "numpy":
+        return score_probe_np(
+            lens, data, flens, fdata, norms, block_base, rows, probes,
+            idf_rows, table, k1p1,
+        )
+    if backend not in ("ref", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    rows = np.asarray(rows, dtype=np.int64)
+    n = len(rows)
+    if n == 0:
+        return np.zeros(0, np.float32)
+    pad = _pow2_rows(n) - n  # pow2 buckets: jit traces are reused
+    rows_p = np.concatenate([rows, np.zeros(pad, np.int64)]) if pad else rows
+    probes_p = np.zeros(n + pad, np.int64)
+    probes_p[:n] = np.asarray(probes, dtype=np.int64)
+    idf_p = np.zeros(n + pad, np.float32)
+    idf_p[:n] = np.asarray(idf_rows, np.float32)
+    lens_g = jnp.asarray(np.asarray(lens, np.int32)[rows_p])
+    data_g = jnp.asarray(np.asarray(data, np.uint8)[rows_p])
+    flens_g = jnp.asarray(np.asarray(flens, np.int32)[rows_p])
+    fdata_g = jnp.asarray(np.asarray(fdata, np.uint8)[rows_p])
+    norms_g = jnp.asarray(np.asarray(norms)[rows_p].astype(np.int32))
+    bases_g = np.asarray(block_base, np.int64)[rows_p].astype(np.int32)
+    probes_i = probes_p.astype(np.int32)
+    if backend == "ref":
+        _, probe_jit = _jitted_refs()
+        out = probe_jit(
+            lens_g, data_g, flens_g, fdata_g, norms_g,
+            jnp.asarray(bases_g), jnp.asarray(probes_i), jnp.asarray(idf_p),
+            jnp.asarray(np.asarray(table, np.float32)), jnp.float32(k1p1),
+        )
+        return np.asarray(out)[:n]
+    meta = np.zeros((n + pad, BLOCK_VALS), np.int32)
+    meta[:, META_BASE] = bases_g
+    meta[:, META_PROBE] = probes_i
+    out = bm25_score_probe_blocks(
+        lens_g, data_g, flens_g, fdata_g, norms_g,
+        jnp.asarray(_table_tile(table)), jnp.asarray(meta),
+        jnp.asarray(_fmeta(idf_p, k1p1)),
+        interpret=_resolve_interpret(interpret),
+    )
+    return np.asarray(out)[:n, 0]
+
+
+def bm25_score_rows(
+    flens, fdata, norms, rows, idf_rows, table, k1p1,
+    backend: str = "numpy", interpret: bool | None = None,
+) -> np.ndarray:
+    """All-lane scores of the given arena rows: [len(rows), 128] float32.
+
+    idf_rows: [len(rows)] float32, the idf of each row's owning list.
+    Padding lanes score garbage; callers mask with ``lane_valid``.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    n = len(rows)
+    if n == 0:
+        return np.zeros((0, BLOCK_VALS), np.float32)
+    if backend == "numpy":
+        return score_rows_np(
+            np.asarray(flens)[rows], np.asarray(fdata)[rows],
+            np.asarray(norms)[rows], idf_rows, table, k1p1,
+        )
+    if backend not in ("ref", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    pad = _pow2_rows(n) - n  # pow2 buckets: jit traces are reused
+    rows_p = np.concatenate([rows, np.zeros(pad, np.int64)]) if pad else rows
+    idf_p = np.zeros(n + pad, np.float32)
+    idf_p[:n] = np.asarray(idf_rows, np.float32)
+    flens_g = jnp.asarray(np.asarray(flens, np.int32)[rows_p])
+    fdata_g = jnp.asarray(np.asarray(fdata, np.uint8)[rows_p])
+    norms_g = jnp.asarray(np.asarray(norms)[rows_p].astype(np.int32))
+    if backend == "ref":
+        rows_jit, _ = _jitted_refs()
+        out = rows_jit(
+            flens_g, fdata_g, norms_g, jnp.asarray(idf_p),
+            jnp.asarray(np.asarray(table, np.float32)), jnp.float32(k1p1),
+        )
+        return np.asarray(out)[:n]
+    out = bm25_score_blocks(
+        flens_g, fdata_g, norms_g, jnp.asarray(_table_tile(table)),
+        jnp.asarray(_fmeta(idf_p, k1p1)),
+        interpret=_resolve_interpret(interpret),
+    )
+    return np.asarray(out)[:n]

@@ -1,6 +1,7 @@
 """Index serving: the paper's own application as a batched query service.
 
   PYTHONPATH=src python -m repro.launch.serve --n-lists 64 --queries 512
+  PYTHONPATH=src python -m repro.launch.serve --ranked --topk 10
 
 Builds an optimally-partitioned VByte index over a synthetic clustered
 corpus, then serves boolean-AND queries through the batched
@@ -11,6 +12,13 @@ backends); ``--no-fused`` selects the PR-1 partition-LRU engine instead.
 Reports space vs. the un-partitioned baseline, throughput, and per-batch
 latency percentiles.  ``--compare-scalar`` also times the per-query NextGEQ
 loop and verifies the batched results against it.
+
+``--ranked`` serves RANKED BM25 top-k instead (DESIGN.md §5): the corpus
+gains a clustered term-frequency stream, the arena its freq blocks and
+block-max sidecar, and queries run through the Block-Max MaxScore/WAND
+``repro.ranked.TopKEngine``.  ``--compare-scalar`` then verifies every
+batch against the exhaustive-scoring oracle (identical top-k, ties by
+docID) and reports the speedup.
 """
 
 from __future__ import annotations
@@ -22,7 +30,7 @@ import numpy as np
 
 from repro.core import build_partitioned_index, build_unpartitioned_index
 from repro.core.query_engine import QueryEngine
-from repro.data.postings import make_corpus, make_queries
+from repro.data.postings import make_corpus, make_freqs, make_queries
 
 
 def _percentile(xs: list[float], q: float) -> float:
@@ -44,6 +52,62 @@ def serve_batches(
     return results, latencies
 
 
+def serve_ranked(args, rng, corpus) -> None:
+    """The --ranked endpoint: batched BM25 top-k over the freq arena."""
+    from repro.ranked.bm25 import exhaustive_topk
+    from repro.ranked.topk_engine import TopKEngine
+
+    freqs = make_freqs(rng, corpus)
+    t0 = time.perf_counter()
+    idx = build_partitioned_index(corpus, "optimal", freqs=freqs)
+    arena = idx.arena  # includes the freq transcode + block-max sidecar
+    t_build = time.perf_counter() - t0
+    print(f"[serve] ranked index: {idx.bits_per_int():.2f} bpi docIDs + "
+          f"{idx.freq_payload.size * 8 / max(int(idx.list_sizes.sum()), 1):.2f} "
+          f"bpi freqs; arena {arena.nbytes() / 1e6:.1f} MB "
+          f"(build {t_build:.1f}s)")
+
+    queries = [
+        [int(t) for t in q]
+        for q in make_queries(rng, args.n_lists, args.queries, args.arity)
+    ]
+    engine = TopKEngine(idx, backend=args.backend)
+    engine.topk_batch(queries[: args.batch], args.topk)  # warm mirror + jit
+
+    results: list = []
+    lat: list[float] = []
+    t0 = time.perf_counter()
+    for i in range(0, len(queries), args.batch):
+        b0 = time.perf_counter()
+        results.extend(engine.topk_batch(queries[i : i + args.batch], args.topk))
+        lat.append(time.perf_counter() - b0)
+    wall = time.perf_counter() - t0
+    sizes = [len(queries[i : i + args.batch])
+             for i in range(0, len(queries), args.batch)]
+    per_q = [l / max(s, 1) for l, s in zip(lat, sizes)]
+    print(f"[serve] ranked top-{args.topk} ({engine.backend}/"
+          f"{engine.resident}, batch={args.batch}): "
+          f"{len(queries)/wall:,.0f} q/s, "
+          f"{wall/len(queries)*1e3:.3f} ms/query avg")
+    print(f"[serve] batch latency: p50 {_percentile(lat, 50)*1e3:.2f} ms  "
+          f"p90 {_percentile(lat, 90)*1e3:.2f} ms  "
+          f"p99 {_percentile(lat, 99)*1e3:.2f} ms  "
+          f"(per-query p50 {_percentile(per_q, 50)*1e3:.3f} ms)")
+    print(f"[serve] engine stats: {engine.stats}")
+
+    if args.compare_scalar:
+        n_check = min(len(queries), 64)
+        t0 = time.perf_counter()
+        want = exhaustive_topk(idx, queries[:n_check], args.topk)
+        dt = time.perf_counter() - t0
+        for q, (gd, gs), (wd, ws) in zip(queries, results, want):
+            assert np.array_equal(gd, wd) and np.array_equal(gs, ws), q
+        speedup = (dt / n_check) / (wall / len(queries))
+        print(f"[serve] exhaustive oracle: {dt/n_check*1e3:.2f} ms/query "
+              f"over {n_check} queries -> block-max speedup {speedup:.1f}x, "
+              f"identical top-k")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-lists", type=int, default=64)
@@ -57,9 +121,15 @@ def main() -> None:
     ap.add_argument("--no-fused", dest="fused", action="store_false",
                     help="serve through the PR-1 partition-LRU engine "
                          "instead of the fused device pipeline")
+    ap.add_argument("--ranked", action="store_true",
+                    help="serve BM25 top-k through the Block-Max engine "
+                         "instead of boolean AND")
+    ap.add_argument("--topk", type=int, default=10,
+                    help="k for --ranked serving")
     ap.add_argument("--compare-scalar", action="store_true",
-                    help="also time the per-query NextGEQ loop and verify "
-                         "the batched results against it")
+                    help="also time the per-query NextGEQ loop (or, with "
+                         "--ranked, the exhaustive-scoring oracle) and "
+                         "verify the batched results against it")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -71,6 +141,10 @@ def main() -> None:
     n_postings = sum(len(l) for l in corpus)
     print(f"[serve] corpus: {args.n_lists} lists, {n_postings:,} postings "
           f"({time.perf_counter()-t0:.1f}s)")
+
+    if args.ranked:
+        serve_ranked(args, rng, corpus)
+        return
 
     t0 = time.perf_counter()
     idx = build_partitioned_index(corpus, "optimal")

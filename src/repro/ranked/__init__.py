@@ -1,0 +1,17 @@
+"""Ranked retrieval subsystem: device-resident Block-Max BM25 top-k.
+
+``repro.ranked.bm25`` holds the float32 scoring contract (idf, quantized
+length norms, per-posting contributions) shared by every backend and by the
+exhaustive oracle; ``repro.ranked.topk_engine`` drives Block-Max
+MaxScore/WAND top-k over the freq-carrying block arena (DESIGN.md §5).
+"""
+
+from .bm25 import BM25Params, exhaustive_topk  # noqa: F401
+
+
+def __getattr__(name):  # lazy: bm25 must stay importable from core.arena
+    if name == "TopKEngine":
+        from .topk_engine import TopKEngine
+
+        return TopKEngine
+    raise AttributeError(name)

@@ -1,0 +1,655 @@
+"""Batched Block-Max BM25 top-k engine over the ranked arena (DESIGN.md §5).
+
+Serves MANY disjunctive top-k queries per call with Block-Max WAND/MaxScore
+pruning over the arena's quantized per-block score upper bounds, while
+guaranteeing results IDENTICAL to the exhaustive-scoring oracle
+(``repro.ranked.bm25.exhaustive_topk``): same docIDs, same scores, ties
+broken by ascending docID.
+
+Phases per batch (all bound arithmetic in float64 over the f32 contract
+values, so it is exact):
+
+1. **Seed.**  Per query, the docs of each term's ``seed_blocks``
+   highest-bounded blocks are scored fully; theta = their k-th best true
+   score.  Any valid lower bound works; covering every term catches the
+   multi-term docs that dominate disjunctive top-k.
+
+2. **Generate** (the block-max pivot, batched).  For every block b of
+   every query term t, an ALIGNED upper bound: own bound plus, per other
+   term, the max bound of its blocks overlapping b's docID span (an O(1)
+   sparse-table range-max).  Surviving blocks emit candidates, lane-exactly
+   filtered where the impact mirror is resident (aligned-bound and
+   proportional-share tests on the lane's true contribution).  Every doc
+   with score >= theta provably survives through each block containing it.
+
+3. **Rescore + select** (threshold+compact, two rounds).  ONE membership
+   pass (a single searchsorted over the flat lane keys) resolves every
+   (term, candidate) pair and yields doc-aligned upper bounds from the
+   block-max sidecar.  Round A exact-scores the highest-UB docs and raises
+   theta to their k-th true score; round B scores only the remaining docs
+   whose UB clears the raised theta.  Member-pair contributions come from
+   the impact mirror (``resident="mirror"``) or the fused decode+score
+   kernel over the unique touched rows (``resident="kernel"``, the
+   HBM-resident accelerator path).  Per-doc sums accumulate in float64 --
+   exact and order-free, because the f32 contributions span far less than
+   f64's 29 bits of headroom -- then (score desc, docID asc) cuts to k.
+
+The per-doc reduction and final selection stay on the host ON PURPOSE: jax
+accumulates f32 by default, and an order-dependent 1-ulp drift there could
+flip near-tied docs -- breaking the "identical top-k" contract that makes
+the exhaustive oracle a usable correctness harness.  The fused
+``bm25_score_probe`` pipeline (jitted locate -> gather -> decode+score+match
+over the resident arena) serves the point-lookup ``contributions()`` API.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.bm25_score.ops import bm25_score_rows
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
+from repro.kernels.vbyte_decode.ops import (
+    decode_block_rows,
+    default_backend,
+    default_interpret,
+)
+from repro.ranked.bm25 import topk_select
+
+
+class TopKEngine:
+    """Batched BM25 top-k over one freq-carrying ``PartitionedIndex``.
+
+    Parameters
+    ----------
+    index: a ``PartitionedIndex`` built with ``freqs=`` (the arena must
+        carry the ranked sidecar).
+    backend: "auto" | "numpy" | "ref" | "pallas" -- scoring path; "auto"
+        resolves via the shared ``default_backend()``.
+    seed_blocks: how many highest-bounded blocks of each query term seed
+        the pruning threshold (more = tighter theta, costlier seed).
+    resident: "mirror" | "kernel" | "auto".  "mirror" scores the arena ONCE
+        into a host per-lane impact mirror (through the chosen backend's
+        kernel -- all backends are bit-identical) and serves batches from
+        it, which also enables lane-exact candidate filtering; "kernel"
+        keeps only compressed blocks resident and re-scores the touched
+        rows through the fused kernel every batch -- the HBM-resident
+        accelerator configuration.  "auto" picks "kernel" on a real
+        accelerator, "mirror" elsewhere.
+    """
+
+    def __init__(self, index, backend: str = "auto", seed_blocks: int = 4,
+                 resident: str = "auto"):
+        self.index = index
+        self.arena = index.arena
+        if self.arena.ranked is None:
+            raise ValueError(
+                "index has no ranked sidecar: build with freqs= "
+                "(build_partitioned_index(lists, freqs=...))"
+            )
+        self.ranked = self.arena.ranked
+        self.backend = default_backend() if backend == "auto" else backend
+        self.interpret = default_interpret()
+        if resident == "auto":
+            resident = "mirror" if default_interpret() else "kernel"
+        if resident not in ("mirror", "kernel"):
+            raise ValueError(f"unknown resident mode {resident!r}")
+        self.resident = resident
+        self.seed_blocks = int(seed_blocks)
+        a, r = self.arena, self.ranked
+        self.k1p1 = np.float32(r.params.k1 + 1.0)
+        self.lob = a.part_list[a.part_of_block]  # owning list per block
+        self.bounds = r.block_bounds().astype(np.float64)  # [nb]
+        self.list_ub = r.list_ub.astype(np.float64)        # [n_lists]
+        # host flat mirror (lazy): per-lane docIDs / keys / contract scores
+        self._flat_vals: np.ndarray | None = None
+        self._flat_keys: np.ndarray | None = None
+        self._flat_scores: np.ndarray | None = None
+        self._lane_end: np.ndarray | None = None
+        self._jax_fn = None
+        self.stats = {
+            "batches": 0,
+            "seed_pairs": 0,
+            "scored_pairs": 0,
+            "candidates": 0,
+            "ub_filtered": 0,
+            "scored_rows": 0,
+            "blocks_kept": 0,
+            "blocks_total": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # host flat mirror: decoded lane docIDs + per-lane contract scores
+    # ------------------------------------------------------------------
+    def _flat_init(self) -> None:
+        """Decode the arena once into flat (docIDs, keys, lane scores).
+
+        Keys are the lane-granular extension of ``block_keys`` (same
+        construction as ``QueryEngine._flat_init``); scores are the f32
+        contract value of every lane (idf is a function of the owning list,
+        so they are fully precomputable).  Sentinel lane: value -1, score 0,
+        key int64 max -- a past-the-end searchsorted result stays a valid
+        gather that can never match a probe.
+        """
+        if self._flat_keys is not None:
+            return
+        a, r = self.arena, self.ranked
+        nb = a.n_blocks
+        # the doc/key mirror is a HOST structure: decode it with the numpy
+        # mirror whatever the scoring backend (values are exact ints)
+        gaps = decode_block_rows(a.lens[:nb], a.data[:nb], backend="numpy")
+        vals = a.block_base[:, None] + np.cumsum(gaps + 1, axis=1)
+        self._flat_vals = np.append(vals.reshape(-1), -1)
+        list_of_block = self.lob
+        self._flat_keys = np.append(
+            np.minimum(
+                vals + (list_of_block * a.stride)[:, None],
+                a.block_keys[:, None],
+            ).reshape(-1),
+            np.iinfo(np.int64).max,
+        )
+        self._lane_end = a.list_blk_offsets * BLOCK_VALS
+        if self.resident == "mirror" and nb:
+            # the impact mirror: every lane scored ONCE through the chosen
+            # backend's kernel (bit-identical across backends)
+            scores = bm25_score_rows(
+                r.freq_lens, r.freq_data, r.norm_q,
+                np.arange(nb, dtype=np.int64), r.idf[list_of_block],
+                r.norm_table, self.k1p1,
+                backend=self.backend, interpret=self.interpret,
+            )
+            scores = np.where(a.lane_valid, scores, np.float32(0.0))
+            self._flat_scores = np.append(
+                scores.reshape(-1).astype(np.float32), np.float32(0.0)
+            )
+
+    def _block_docs(self, rows: np.ndarray) -> np.ndarray:
+        """Real docIDs of the given arena rows (flat mirror)."""
+        self._flat_init()
+        vals = self._flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows]
+        return vals[self.arena.lane_valid[rows]]
+
+    def _block_docs_filtered(
+        self, rows: np.ndarray, rest: np.ndarray, mult_t: float,
+        theta: float, share: float,
+    ) -> np.ndarray:
+        """docIDs of the rows that can still reach theta, lane-exactly.
+
+        With the impact mirror resident, the generating term's contribution
+        per lane is KNOWN, and a candidate only materializes when BOTH
+        admissible tests pass on its true contribution c = mult_t * score:
+
+        * aligned-bound test: ``c + rest(row) >= theta`` with rest the
+          co-located block-max bound of the other terms;
+        * proportional-share test: ``c >= share`` where share =
+          theta * ub_t / total_ub -- a doc with score >= theta must beat
+          its proportional share in SOME term (else summing the per-term
+          shortfalls contradicts score >= theta), and this generator runs
+          once per term, so the doc materializes where it does.
+
+        This keeps candidate sets near the per-doc truth instead of
+        128 x surviving blocks.
+        """
+        self._flat_init()
+        if len(rows) == 0:
+            return np.zeros(0, np.int64)
+        vals = self._flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows]
+        lv = self.arena.lane_valid[rows]
+        if self._flat_scores is None or not np.isfinite(theta):
+            return vals[lv]
+        c = mult_t * self._flat_scores[:-1].reshape(-1, BLOCK_VALS)[rows]
+        ok = lv & (c + rest[:, None] >= theta) & (c >= share)
+        return vals[ok]
+
+    # ------------------------------------------------------------------
+    # range-max over block bounds (sparse table; built once per engine)
+    # ------------------------------------------------------------------
+    def _rmq_init(self) -> None:
+        """st[l][i] = max(bounds[i : i + 2^l]) -- O(nb log nb) once, O(1)
+        per range query; the structure behind the aligned pivot test."""
+        if getattr(self, "_rmq", None) is not None:
+            return
+        nb = max(self.arena.n_blocks, 1)
+        levels = max(int(nb - 1).bit_length(), 1)
+        st = np.full((levels, nb), 0.0)
+        st[0, : self.arena.n_blocks] = self.bounds
+        for l in range(1, levels):
+            half = 1 << (l - 1)
+            st[l, : nb - (1 << l) + 1] = np.maximum(
+                st[l - 1, : nb - (1 << l) + 1],
+                st[l - 1, half : nb - (1 << l) + 1 + half],
+            )
+        self._rmq = st
+
+    def _rmq_max(self, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+        """max(bounds[lo:hi]) per element; 0.0 for empty ranges."""
+        self._rmq_init()
+        nb = self._rmq.shape[1]
+        length = hi - lo
+        ok = length > 0
+        ln = np.maximum(length, 1)
+        lvl = np.frexp(ln.astype(np.float64))[1] - 1  # floor(log2(len))
+        lo_s = np.clip(lo, 0, nb - 1)
+        hi_s = np.clip(np.maximum(hi - (1 << lvl), lo), 0, nb - 1)
+        m = np.maximum(self._rmq[lvl, lo_s], self._rmq[lvl, hi_s])
+        return np.where(ok, m, 0.0)
+
+    # ------------------------------------------------------------------
+    # batched per-(term, doc) contributions
+    # ------------------------------------------------------------------
+    def _contrib_np(self, terms: np.ndarray, docs: np.ndarray) -> np.ndarray:
+        """Host path: one searchsorted over the flat keys per batch."""
+        self._flat_init()
+        a = self.arena
+        key = np.clip(docs, 0, a.stride - 1) + terms * a.stride
+        pos = np.searchsorted(self._flat_keys, key, "left")
+        past = pos >= self._lane_end[terms + 1]
+        hit = (self._flat_vals[pos] == docs) & ~past
+        if self._flat_scores is None:  # resident="kernel": no score mirror
+            rows_n = np.minimum(pos, a.n_blocks * BLOCK_VALS - 1) >> 7
+            urows, inv = np.unique(rows_n[hit], return_inverse=True)
+            row_scores = bm25_score_rows(
+                self.ranked.freq_lens, self.ranked.freq_data,
+                self.ranked.norm_q, urows, self.ranked.idf[self.lob[urows]],
+                self.ranked.norm_table, self.k1p1,
+                backend=self.backend, interpret=self.interpret,
+            )
+            out = np.zeros(len(terms), np.float32)
+            out[hit] = row_scores[inv, (pos[hit] & (BLOCK_VALS - 1))]
+            return out
+        return np.where(hit, self._flat_scores[pos], np.float32(0.0))
+
+    def _build_jax_fn(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.bm25_score.kernel import (
+            FMETA_IDF,
+            FMETA_K1P1,
+            NORM_LEVELS,
+            bm25_score_probe_blocks,
+        )
+        from repro.kernels.bm25_score.ref import score_probe_ref
+        from repro.kernels.vbyte_decode.kernel import META_BASE, META_PROBE
+
+        a, r = self.arena, self.ranked
+        dev, rdev = a.dev, r.dev
+        lob_dev = jnp.asarray(self.lob.astype(np.int32))
+        stride, nb = a.stride, a.n_blocks
+        backend, interpret = self.backend, self.interpret
+        k1p1 = float(self.k1p1)
+        table_tile = jnp.asarray(
+            np.broadcast_to(r.norm_table, (BM, NORM_LEVELS)).copy()
+        )
+
+        def fn(terms, probes):
+            pc = jnp.clip(probes, 0, stride - 1)
+            k = jnp.searchsorted(
+                dev.block_keys, pc + terms * stride, side="left"
+            ).astype(jnp.int32)
+            past = k >= dev.list_blk_offsets[terms + 1]
+            rows = jnp.minimum(k, nb - 1)
+            pe = jnp.where(past, 0, pc)
+            lens_g, data_g = dev.lens[rows], dev.data[rows]
+            flens_g = rdev.freq_lens[rows]
+            fdata_g = rdev.freq_data[rows]
+            norms_g = rdev.norm_q[rows].astype(jnp.int32)
+            base_g = dev.block_base[rows]
+            idf_g = rdev.idf[lob_dev[rows]]
+            if backend == "pallas":
+                meta = jnp.zeros((terms.shape[0], BLOCK_VALS), jnp.int32)
+                meta = meta.at[:, META_BASE].set(base_g)
+                meta = meta.at[:, META_PROBE].set(pe)
+                fmeta = jnp.zeros((terms.shape[0], BLOCK_VALS), jnp.float32)
+                fmeta = fmeta.at[:, FMETA_IDF].set(idf_g)
+                fmeta = fmeta.at[:, FMETA_K1P1].set(jnp.float32(k1p1))
+                out = bm25_score_probe_blocks(
+                    lens_g, data_g, flens_g, fdata_g, norms_g, table_tile,
+                    meta, fmeta, interpret=interpret,
+                )
+                contrib = out[:, 0]
+            else:
+                contrib = score_probe_ref(
+                    lens_g, data_g, flens_g, fdata_g, norms_g, base_g, pe,
+                    idf_g, rdev.norm_table, jnp.float32(k1p1),
+                )
+            return jnp.where(past, jnp.float32(0.0), contrib)
+
+        return jax.jit(fn)
+
+    # largest single device dispatch: bigger batches are chunked to this
+    # fixed bucket so every chunk reuses ONE jit trace and the gathered
+    # tiles (~2.3 KB/cursor) stay bounded
+    MAX_BUCKET = 16_384
+
+    def _contrib_dev(self, terms: np.ndarray, docs: np.ndarray) -> np.ndarray:
+        """Device path: jitted locate->gather->decode+score+match, resident
+        arena, pow2 cursor buckets (padding cursors probe list 0 / doc 0)."""
+        import jax.numpy as jnp
+
+        if self._jax_fn is None:
+            self._jax_fn = self._build_jax_fn()
+        n = len(terms)
+        out = np.empty(n, np.float32)
+        docs_c = np.clip(docs, 0, self.arena.stride - 1)
+        for s in range(0, n, self.MAX_BUCKET):
+            e = min(s + self.MAX_BUCKET, n)
+            m = e - s
+            bucket = max(BM, 1 << (m - 1).bit_length())
+            tp = np.zeros(bucket, np.int32)
+            pp = np.zeros(bucket, np.int32)
+            tp[:m] = terms[s:e]
+            pp[:m] = docs_c[s:e]
+            res = self._jax_fn(jnp.asarray(tp), jnp.asarray(pp))
+            out[s:e] = np.asarray(res)[:m]
+        return out
+
+    @property
+    def _use_device(self) -> bool:
+        return self.backend in ("ref", "pallas") and self.arena.device_ok
+
+    def contributions(self, terms, docs) -> np.ndarray:
+        """f32 BM25 contribution of doc in list(term), 0.0 when absent.
+
+        On the device path, duplicate (term, doc) cursors -- rampant across
+        a batch of queries sharing hot terms and candidate docs -- are
+        grouped first so each one costs a single gather + kernel row (the
+        same move as ``QueryEngine``'s grouped ``_fused_raw``).
+        """
+        terms = np.asarray(terms, dtype=np.int64)
+        docs = np.asarray(docs, dtype=np.int64)
+        if len(terms) == 0:
+            return np.zeros(0, np.float32)
+        if self._use_device:
+            key = np.clip(docs, 0, self.arena.stride - 1) + terms * self.arena.stride
+            uk, idx, inv = np.unique(key, return_index=True, return_inverse=True)
+            if len(uk) < len(terms):
+                out = self._contrib_dev(terms[idx], docs[idx])[inv]
+            else:
+                out = self._contrib_dev(terms, docs)
+            # the device staging clip maps out-of-range docs onto real
+            # probes (e.g. -1 -> docID 0); they can never be members
+            out[(docs < 0) | (docs >= self.arena.stride)] = 0.0
+            return out
+        return self._contrib_np(terms, docs)
+
+    # ------------------------------------------------------------------
+    # batched bound-filter + exact scoring of per-query candidate sets
+    # ------------------------------------------------------------------
+    def _score_specs(
+        self,
+        specs: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
+        theta: np.ndarray | None = None,
+        k: int | None = None,
+    ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """specs: per query (unique terms, multiplicities, candidate docs).
+        Returns per query (surviving docs, exact f64 scores).
+
+        One membership pass over the flat lane mirror resolves EVERY
+        (term, doc) pair of the batch at once (a single searchsorted; no
+        decode, no scoring).  It yields, per pair, membership and the
+        owning arena block, from which the Block-Max WAND pivot test runs
+        doc-aligned: UB(doc) = sum over member pairs of mult * block bound
+        >= score(doc).  Only MEMBER pairs of surviving docs are ever scored
+        -- on the numpy backend that is a free gather from the flat lane
+        scores already in hand; on device backends it is the fused
+        decode+score+match kernel over the resident arena (duplicate pairs
+        grouped).  Scores accumulate per doc in float64 (exact, order-free).
+
+        With ``theta``/``k`` set, scoring is TWO-ROUND threshold+compact:
+        round A exact-scores the max(4k, 64) highest-UB docs per query and
+        raises theta to their k-th true score; round B scores only the
+        remaining docs whose UB clears the raised theta.  Dropped docs are
+        provably outside the top-k (score <= UB < theta <= final k-th).
+        """
+        self._flat_init()
+        a = self.arena
+        nq = len(specs)
+        t_chunks, d_chunks, cuts = [], [], [0]
+        for terms, _, docs in specs:
+            t_chunks.append(np.repeat(terms, len(docs)))
+            d_chunks.append(np.tile(docs, len(terms)))
+            cuts.append(cuts[-1] + len(terms) * len(docs))
+        if cuts[-1] == 0:
+            return [
+                (np.zeros(0, np.int64), np.zeros(0, np.float64))
+                for _ in specs
+            ]
+        t_rep = np.concatenate(t_chunks)
+        d_til = np.concatenate(d_chunks)
+        pos = np.searchsorted(self._flat_keys, d_til + t_rep * a.stride, "left")
+        past = pos >= self._lane_end[t_rep + 1]
+        member = (self._flat_vals[pos] == d_til) & ~past
+        row = np.minimum(pos, a.n_blocks * BLOCK_VALS - 1) >> 7
+
+        need_ub = theta is not None
+        mems, ubs = [], []
+        for i, (terms, mult, docs) in enumerate(specs):
+            T, D = len(terms), len(docs)
+            if T == 0 or D == 0:
+                mems.append(np.zeros((T, D), bool))
+                ubs.append(np.zeros(D, np.float64))
+                continue
+            sl = slice(cuts[i], cuts[i + 1])
+            mem = member[sl].reshape(T, D)
+            mems.append(mem)
+            if need_ub:
+                ubs.append(
+                    (
+                        mult[:, None]
+                        * np.where(
+                            mem, self.bounds[row[sl].reshape(T, D)], 0.0
+                        )
+                    ).sum(axis=0)
+                )
+            else:
+                ubs.append(None)
+
+        def score_subset(sels: list[np.ndarray]):
+            """Exact f64 scores of the selected doc slots of every query,
+            via ONE batched contribution dispatch over the member pairs."""
+            idx_l, col_l, w_l = [], [], []
+            for i, (terms, mult, docs) in enumerate(specs):
+                sel = sels[i]
+                D = len(docs)
+                if D == 0 or len(terms) == 0 or not sel.any():
+                    idx_l.append(np.zeros(0, np.int64))
+                    col_l.append(np.zeros(0, np.int64))
+                    w_l.append(np.zeros(0, np.float64))
+                    continue
+                colmap = np.cumsum(sel) - 1
+                pr, pc = np.nonzero(mems[i] & sel[None, :])
+                idx_l.append(cuts[i] + pr * D + pc)
+                col_l.append(colmap[pc])
+                w_l.append(mult[pr])
+            g_idx = np.concatenate(idx_l)
+            self.stats["scored_pairs"] += len(g_idx)
+            if self.resident == "kernel":
+                # member pairs pin exact (row, lane) coordinates, so the
+                # batch's contributions cost ONE all-lane kernel pass over
+                # the UNIQUE touched rows -- not one gathered cursor per
+                # pair: many candidates share a hot block, and the block is
+                # decoded+scored once however many pairs land in it
+                g_pos = pos[g_idx]
+                rows_n, lanes = g_pos >> 7, g_pos & (BLOCK_VALS - 1)
+                urows, inv = np.unique(rows_n, return_inverse=True)
+                self.stats["scored_rows"] += len(urows)
+                row_scores = bm25_score_rows(
+                    self.ranked.freq_lens, self.ranked.freq_data,
+                    self.ranked.norm_q, urows,
+                    self.ranked.idf[self.lob[urows]],
+                    self.ranked.norm_table, self.k1p1,
+                    backend=self.backend, interpret=self.interpret,
+                )
+                contrib = row_scores[inv, lanes]
+            else:
+                contrib = self._flat_scores[pos[g_idx]]
+            out, start = [], 0
+            for i in range(nq):
+                n_i = len(idx_l[i])
+                sc = np.zeros(int(sels[i].sum()), np.float64)
+                np.add.at(
+                    sc, col_l[i],
+                    w_l[i] * contrib[start : start + n_i].astype(np.float64),
+                )
+                out.append(sc)
+                start += n_i
+            return out
+
+        if theta is None or k is None:
+            sels = [np.ones(len(docs), bool) for _, _, docs in specs]
+            scores = score_subset(sels)
+            return [
+                (docs, sc) for (_, _, docs), sc in zip(specs, scores)
+            ]
+
+        # ---- round A: the max(4k, 64) highest-UB docs, scored exactly
+        # (argpartition: ANY k-superset works here, order does not matter)
+        cap = max(4 * k, 64)
+        sel_a = []
+        for i, (_, _, docs) in enumerate(specs):
+            sel = np.zeros(len(docs), bool)
+            if len(docs) > cap:
+                sel[np.argpartition(-ubs[i], cap - 1)[:cap]] = True
+            elif len(docs):
+                sel[:] = True
+            sel_a.append(sel)
+        scores_a = score_subset(sel_a)
+
+        # ---- raise theta to the k-th true score of round A
+        theta2 = theta.copy()
+        for i, sc in enumerate(scores_a):
+            if len(sc) >= k:
+                kth = np.partition(sc, len(sc) - k)[len(sc) - k]
+                theta2[i] = max(theta2[i], kth)
+
+        # ---- round B: remaining docs whose UB clears the raised theta
+        sel_b = []
+        for i, (_, _, docs) in enumerate(specs):
+            sel = ~sel_a[i] & (ubs[i] >= theta2[i])
+            self.stats["ub_filtered"] += int((~sel_a[i]).sum() - sel.sum())
+            sel_b.append(sel)
+        scores_b = score_subset(sel_b)
+
+        out = []
+        for i, (_, _, docs) in enumerate(specs):
+            docs_i = np.concatenate([docs[sel_a[i]], docs[sel_b[i]]])
+            sc_i = np.concatenate([scores_a[i], scores_b[i]])
+            out.append((docs_i, sc_i))
+        return out
+
+    # ------------------------------------------------------------------
+    # the Block-Max MaxScore batch loop
+    # ------------------------------------------------------------------
+    def _query_spec(self, q) -> tuple[np.ndarray, np.ndarray]:
+        """(unique terms with non-empty lists, multiplicities as f64)."""
+        terms, mult = np.unique(np.asarray(q, dtype=np.int64), return_counts=True)
+        keep = self.index.list_sizes[terms] > 0
+        return terms[keep], mult[keep].astype(np.float64)
+
+    def topk_batch(
+        self, queries: list[list[int]], k: int
+    ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Exact BM25 top-k of each query; (docIDs, f64 scores) per query,
+        sorted by (score desc, docID asc) -- identical to the exhaustive
+        oracle, including the tie-break."""
+        a = self.arena
+        self.stats["batches"] += 1
+        specs = [self._query_spec(q) for q in queries]
+
+        # ---- phase 1: seed theta from every term's best-bounded blocks
+        # (covering each term catches the multi-term docs that dominate
+        # disjunctive top-k, so theta starts close to the true k-th score;
+        # whole blocks beat per-lane top-m picks here because saturation
+        # ties many lanes and the joint-hot docs hide among them)
+        self._flat_init()
+        seed_specs, seed_qids = [], []
+        for i, (terms, mult) in enumerate(specs):
+            if len(terms) == 0:
+                continue
+            chunks = []
+            for t in terms:
+                r0 = int(a.list_blk_offsets[int(t)])
+                r1 = int(a.list_blk_offsets[int(t) + 1])
+                rows = np.arange(r0, r1, dtype=np.int64)
+                top = rows[np.argsort(-self.bounds[rows], kind="stable")]
+                chunks.append(self._block_docs(top[: self.seed_blocks]))
+            docs = np.unique(np.concatenate(chunks))
+            seed_specs.append((terms, mult, docs))
+            seed_qids.append(i)
+        seed_scored = self._score_specs(seed_specs)
+        self.stats["seed_pairs"] += sum(
+            len(t) * len(d) for t, _, d in seed_specs
+        )
+        theta = np.full(len(queries), -np.inf)
+        seeds: dict[int, np.ndarray] = {}
+        for (terms, mult, docs), (_, sc), i in zip(
+            seed_specs, seed_scored, seed_qids
+        ):
+            seeds[i] = docs
+            if len(docs) >= k:
+                theta[i] = np.partition(sc, len(sc) - k)[len(sc) - k]
+
+        # ---- phase 2: range-aligned block pivot (Block-Max WAND).  A doc
+        # in block b of term t scores at most
+        #   mult_t * bound(b) + sum_{t' != t} mult_t' * max bound of the
+        #                       t'-blocks overlapping b's docID span
+        # so a block whose aligned upper bound misses theta generates no
+        # candidates -- and any doc with score >= theta survives through
+        # EVERY block that contains it (the bound above holds for each).
+        final_specs = []
+        for i, (terms, mult) in enumerate(specs):
+            if len(terms) == 0:
+                final_specs.append((terms, mult, np.zeros(0, np.int64)))
+                continue
+            ub = mult * self.list_ub[terms]
+            total_ub = float(ub.sum())
+            cand_chunks = [seeds[i]] if i in seeds else []
+            for j, t in enumerate(terms):
+                t = int(t)
+                r0 = int(a.list_blk_offsets[t])
+                r1 = int(a.list_blk_offsets[t + 1])
+                rows = np.arange(r0, r1, dtype=np.int64)
+                lo = a.block_base[rows] + 1  # first docID a block can hold
+                hi = a.block_keys[rows] - t * a.stride  # last real docID
+                acc = mult[j] * self.bounds[rows]
+                for j2, t2 in enumerate(terms):
+                    if j2 == j:
+                        continue
+                    t2 = int(t2)
+                    s1 = int(a.list_blk_offsets[int(t2) + 1])
+                    ks = np.searchsorted(
+                        a.block_keys, lo + t2 * a.stride, side="left"
+                    )
+                    ke = np.searchsorted(
+                        a.block_keys, hi + t2 * a.stride, side="left"
+                    )
+                    acc += mult[j2] * self._rmq_max(
+                        ks, np.minimum(ke + 1, s1)
+                    )
+                keep = acc >= theta[i]
+                self.stats["blocks_kept"] += int(keep.sum())
+                self.stats["blocks_total"] += len(rows)
+                rest = acc - mult[j] * self.bounds[rows]
+                share = (
+                    float(theta[i]) * float(ub[j]) / total_ub
+                    if total_ub > 0 and np.isfinite(theta[i])
+                    else -np.inf
+                )
+                cand_chunks.append(
+                    self._block_docs_filtered(
+                        rows[keep], rest[keep], float(mult[j]),
+                        float(theta[i]), share,
+                    )
+                )
+            cand = (
+                np.unique(np.concatenate(cand_chunks))
+                if cand_chunks
+                else np.zeros(0, np.int64)
+            )
+            self.stats["candidates"] += len(cand)
+            final_specs.append((terms, mult, cand))
+
+        # ---- phase 3: doc-aligned block-max pivot filter (UB >= theta) +
+        # two-round threshold+compact rescore + (score desc, docID asc) cut
+        final_scored = self._score_specs(final_specs, theta, k)
+        return [topk_select(docs, sc, k) for docs, sc in final_scored]

@@ -24,6 +24,7 @@ from benchmarks import (  # noqa: E402
     bench_nextgeq,
     bench_partition_space,
     bench_queries,
+    bench_ranked,
     bench_vbyte_family,
     roofline,
 )
@@ -38,6 +39,7 @@ MODULES = {
     "bench_competitors": bench_competitors,
     "bench_nextgeq": bench_nextgeq,
     "bench_kernels": bench_kernels,
+    "bench_ranked": bench_ranked,
     "roofline": roofline,
 }
 
@@ -58,8 +60,9 @@ def test_benchmark_smoke(name, capsys):
         assert float(us) >= 0.0
 
 
-def test_run_json_writes_bench_files(tmp_path, monkeypatch, capsys):
-    """--json lands BENCH_queries.json / BENCH_kernels.json with ops + p50/p99."""
+def test_run_json_appends_history(tmp_path, monkeypatch, capsys):
+    """--json keeps a HISTORY of runs (git sha + timestamp per entry) while
+    mirroring the newest run at the top level for old readers."""
     from benchmarks import run as bench_run
 
     monkeypatch.chdir(tmp_path)
@@ -78,3 +81,38 @@ def test_run_json_writes_bench_files(tmp_path, monkeypatch, capsys):
         assert field in fused, field
     assert fused["ops_per_sec"] > 0
     assert fused["p99_us"] >= fused["p50_us"] > 0
+    assert len(data["history"]) == 1
+
+    # second run APPENDS instead of overwriting
+    bench_run.main()
+    capsys.readouterr()
+    data2 = json.loads((tmp_path / "BENCH_queries.json").read_text())
+    assert len(data2["history"]) == 2
+    for entry in data2["history"]:
+        assert entry["profile"] == "smoke"
+        assert "sha" in entry and "timestamp" in entry
+        assert {r["name"] for r in entry["records"]} == set(recs)
+    # top level mirrors the newest entry
+    assert data2["records"] == data2["history"][-1]["records"]
+
+
+def test_run_json_migrates_pre_history_file(tmp_path, monkeypatch, capsys):
+    """A PR-2-era BENCH file (no history) becomes history entry #1."""
+    from benchmarks import run as bench_run
+
+    monkeypatch.chdir(tmp_path)
+    old = {"profile": "quick",
+           "records": [{"name": "legacy_record", "us_per_call": 1.0,
+                        "derived": ""}]}
+    (tmp_path / "BENCH_queries.json").write_text(json.dumps(old))
+    monkeypatch.setattr(
+        sys, "argv",
+        ["benchmarks.run", "--smoke", "--json", "--only", "fig7"],
+    )
+    bench_run.main()
+    capsys.readouterr()
+    data = json.loads((tmp_path / "BENCH_queries.json").read_text())
+    assert len(data["history"]) == 2
+    assert data["history"][0]["sha"] == "pre-history"
+    assert data["history"][0]["records"][0]["name"] == "legacy_record"
+    assert data["history"][1]["profile"] == "smoke"

@@ -1,0 +1,145 @@
+"""Edge-case coverage for the batched query engine (ISSUE-3 satellites).
+
+Systematic corners of ``intersect_batch`` / ``member_batch``: empty and
+single-term queries, duplicate terms, probes exactly on list/partition
+endpoints, and the int64 -> int32 probe-clip boundary at 2^31 on the device
+staging path.  Plus the grouped-cursor dispatch and the fused-path
+byte-budgeted row cache (evictions reported).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.index import build_partitioned_index
+from repro.core.query_engine import QueryEngine
+from repro.data.postings import make_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(17)
+    return make_corpus(rng, n_lists=6, min_len=300, max_len=2_500,
+                       mean_dense_gap=2.13, frac_dense=0.8)
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    return build_partitioned_index(corpus, "optimal")
+
+
+def _oracle(corpus, q):
+    if not q:
+        return np.zeros(0, np.int64)
+    want = corpus[q[0]]
+    for t in q[1:]:
+        want = np.intersect1d(want, corpus[t])
+    return want
+
+
+@pytest.mark.parametrize("backend", ["numpy", "ref"])
+def test_intersect_batch_edge_queries(index, corpus, backend):
+    engine = QueryEngine(index, backend=backend)
+    queries = [
+        [],                 # empty query
+        [3],                # single term
+        [2, 2],             # duplicate term: identity
+        [4, 4, 4, 4],       # heavy duplication
+        [0, 1],             # plain pair
+        [5, 5, 0],          # duplicate + distinct
+        [],                 # empty again, interleaved
+    ]
+    got = engine.intersect_batch(queries)
+    assert len(got) == len(queries)
+    for q, g in zip(queries, got):
+        assert np.array_equal(g, _oracle(corpus, q)), q
+
+
+@pytest.mark.parametrize("backend", ["numpy", "ref"])
+def test_member_batch_endpoint_probes(index, corpus, backend):
+    """Probes sitting exactly on partition/list endpoints are members."""
+    engine = QueryEngine(index, backend=backend)
+    terms_l, probes_l, want_l = [], [], []
+    for t in range(index.n_lists):
+        sl = slice(int(index.list_part_offsets[t]),
+                   int(index.list_part_offsets[t + 1]))
+        eps = index.endpoints[sl.start : sl.stop].astype(np.int64)
+        xs = np.unique(np.concatenate([
+            eps,                      # every partition endpoint (member)
+            eps + 1, np.maximum(eps - 1, 0),
+            [0, int(corpus[t][0]), int(corpus[t][-1])],
+        ]))
+        terms_l.append(np.full(len(xs), t, np.int64))
+        probes_l.append(xs)
+        want_l.append(np.isin(xs, corpus[t]))
+    terms = np.concatenate(terms_l)
+    probes = np.concatenate(probes_l)
+    got = engine.member_batch(terms, probes)
+    assert np.array_equal(got, np.concatenate(want_l))
+    # endpoints themselves are always members
+    for t in range(index.n_lists):
+        sl = slice(int(index.list_part_offsets[t]),
+                   int(index.list_part_offsets[t + 1]))
+        eps = index.endpoints[sl.start : sl.stop].astype(np.int64)
+        assert engine.member_batch(np.full(len(eps), t), eps).all()
+
+
+@pytest.mark.parametrize("backend", ["numpy", "ref", "pallas"])
+def test_probe_clip_boundary_at_2_31(backend):
+    """Probes straddling 2^31 must clip to past-the-end, not wrap negative
+    through the device int32 staging cast."""
+    lists = [np.arange(0, 4_000, 3, dtype=np.int64),
+             np.arange(1, 5_000, 2, dtype=np.int64)]
+    idx = build_partitioned_index(lists, "optimal")
+    engine = QueryEngine(idx, backend=backend)
+    probes = np.array([
+        2**31 - 1, 2**31, 2**31 + 1, 2**40, -2**33,
+        0, int(lists[0][-1]),
+    ])
+    terms = np.zeros(len(probes), np.int64)
+    got = engine.next_geq_batch(terms, probes)
+    assert (got[:4] == -1).all()           # >= 2^31: past the end
+    assert got[4] == 0                     # huge negative clips to probe 0
+    assert got[5] == 0 and got[6] == lists[0][-1]
+    member = engine.member_batch(terms, probes)
+    assert not member[:5].any() or member[4]  # nothing >= 2^31 is a member
+    assert member[5] and member[6]
+
+
+@pytest.mark.parametrize("group", [True, False])
+def test_grouped_dispatch_identical(index, corpus, group):
+    """Grouped and ungrouped device dispatches are bit-identical, and the
+    grouped engine actually groups on duplicate-heavy batches."""
+    engine = QueryEngine(index, backend="ref", group=group)
+    rng = np.random.default_rng(5)
+    terms = np.tile(rng.integers(0, index.n_lists, 40), 8)
+    probes = np.tile(rng.integers(0, 3_000, 40), 8)
+    vals, ranks = engine.search_batch(terms, probes)
+    want = QueryEngine(index, backend="numpy").search_batch(terms, probes)
+    assert np.array_equal(vals, want[0])
+    assert np.array_equal(ranks, want[1])
+    if group:
+        assert engine.stats["grouped_cursors"] > 0
+    else:
+        assert engine.stats["grouped_cursors"] == 0
+
+
+def test_fused_row_cache_reports_evictions():
+    """Fused CPU path with the flat arena refused: decoded rows ride the
+    byte-budgeted LRU and their drops are counted (the PR-1 path is no
+    longer the only one reporting evictions)."""
+    rng = np.random.default_rng(9)
+    lists = [np.sort(rng.choice(400_000, 4_000, replace=False))
+             for _ in range(4)]
+    idx = build_partitioned_index(lists, "optimal")
+    engine = QueryEngine(idx, backend="numpy", fused=True, cache_bytes=4_000)
+    assert engine._flat_init() is False  # budget refuses the flat arena
+    for q in ([0, 1], [2, 3], [1, 2], [0, 3]):
+        got = engine.intersect_batch([list(q)])[0]
+        assert np.array_equal(got, np.intersect1d(lists[q[0]], lists[q[1]]))
+        assert engine._cache_nbytes <= 4_000
+    assert engine.stats["evictions"] > 0
+    # and the row cache actually serves hits on re-touched rows
+    hits0 = engine.stats["cache_hits"]
+    engine.next_geq_batch([0, 0, 0], [10, 10, 10])
+    engine.next_geq_batch([0, 0, 0], [10, 10, 10])
+    assert engine.stats["cache_hits"] > hits0

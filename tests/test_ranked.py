@@ -1,0 +1,296 @@
+"""Property tests for the ranked (Block-Max BM25 top-k) subsystem (ISSUE-3).
+
+Covers the acceptance surface:
+
+* the float32 BM25 scoring contract is bit-identical across the three
+  kernel backends (numpy mirror / jnp ref / pallas) and matches the scalar
+  formula;
+* block-max admissibility: no block's true maximum contract score exceeds
+  its quantized u8 upper bound, and list upper bounds dominate blocks;
+* the Block-Max engine returns top-k IDENTICAL to the exhaustive-scoring
+  oracle (docIDs AND scores, ties broken by ascending docID) on random
+  clustered corpora, across backends, both residency modes, and edge-case
+  queries (empty, single-term, duplicate-term, k > collection).
+
+Runs under real hypothesis or the seeded shim in tests/_hypothesis_shim.py.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.index import build_partitioned_index
+from repro.data.postings import make_freqs, make_queries, make_ranked_corpus
+from repro.kernels.bm25_score.ops import bm25_score_probe, bm25_score_rows
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
+from repro.ranked.bm25 import (
+    DEFAULT_BM25,
+    dequant_norm,
+    exhaustive_topk,
+    idf,
+    quantize_norms,
+    score_tf,
+)
+from repro.ranked.topk_engine import TopKEngine
+
+K1P1 = np.float32(DEFAULT_BM25.k1 + 1.0)
+
+
+def _mk_index(seed, n_lists=5, max_len=1_500, min_len=80):
+    rng = np.random.default_rng(seed)
+    lists, freqs = make_ranked_corpus(
+        rng, n_lists=n_lists, min_len=min_len, max_len=max_len,
+        mean_dense_gap=2.13, frac_dense=0.8,
+    )
+    return build_partitioned_index(lists, "optimal", freqs=freqs), lists, freqs
+
+
+# ---------------------------------------------------------------------------
+# scoring contract
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_score_backends_bit_identical(seed):
+    """All three backends produce the same f32 bits, probe and all-lane."""
+    idx, lists, freqs = _mk_index(seed)
+    a, r = idx.arena, idx.arena.ranked
+    rng = np.random.default_rng(seed + 1)
+    lob = a.part_list[a.part_of_block]
+
+    # probe op over located rows (exact members and misses mixed)
+    C = 300
+    t_sel = rng.integers(0, len(lists), C)
+    probes = np.array([
+        lists[int(t)][rng.integers(0, len(lists[int(t)]))]
+        if i % 3 else rng.integers(0, int(lists[int(t)][-1]) + 1)
+        for i, t in enumerate(t_sel)
+    ])
+    keys = np.clip(probes, 0, a.stride - 1) + t_sel * a.stride
+    krow = np.searchsorted(a.block_keys, keys, side="left")
+    past = krow >= a.list_blk_offsets[t_sel + 1]
+    rows = np.minimum(krow, a.n_blocks - 1)
+    pe = np.where(past, 0, probes)
+    idf_rows = r.idf[lob[rows]]
+    outs = {
+        be: bm25_score_probe(
+            a.lens, a.data, r.freq_lens, r.freq_data, r.norm_q,
+            a.block_base, rows, pe, idf_rows, r.norm_table, K1P1, backend=be,
+        )
+        for be in ("numpy", "ref", "pallas")
+    }
+    assert np.array_equal(outs["numpy"], outs["ref"])
+    assert np.array_equal(outs["numpy"], outs["pallas"])
+
+    # all-lane op over random rows
+    rows2 = rng.integers(0, a.n_blocks, 21)
+    idf2 = r.idf[lob[rows2]]
+    lanes = {
+        be: bm25_score_rows(
+            r.freq_lens, r.freq_data, r.norm_q, rows2, idf2, r.norm_table,
+            K1P1, backend=be,
+        )
+        for be in ("numpy", "ref", "pallas")
+    }
+    lv = a.lane_valid[rows2]
+    assert np.array_equal(lanes["numpy"][lv], lanes["ref"][lv])
+    assert np.array_equal(lanes["numpy"][lv], lanes["pallas"][lv])
+
+
+def test_probe_matches_scalar_contract():
+    """The fused probe equals score_tf on members, 0.0 on non-members."""
+    idx, lists, freqs = _mk_index(11)
+    a, r = idx.arena, idx.arena.ranked
+    qn, kmin, kstep = quantize_norms(idx.doc_lens, idx.avg_dl)
+    lob = a.part_list[a.part_of_block]
+    rng = np.random.default_rng(0)
+    for t, seq in enumerate(lists):
+        xs = np.unique(np.concatenate([
+            seq[rng.integers(0, len(seq), 30)],
+            rng.integers(0, int(seq[-1]) + 2, 30),
+        ]))
+        keys = np.clip(xs, 0, a.stride - 1) + t * a.stride
+        krow = np.searchsorted(a.block_keys, keys, side="left")
+        past = krow >= a.list_blk_offsets[t + 1]
+        rows = np.minimum(krow, a.n_blocks - 1)
+        got = bm25_score_probe(
+            a.lens, a.data, r.freq_lens, r.freq_data, r.norm_q,
+            a.block_base, rows, np.where(past, 0, xs), r.idf[lob[rows]],
+            r.norm_table, K1P1, backend="numpy",
+        )
+        got = np.where(past, np.float32(0.0), got)
+        ks = np.searchsorted(seq, xs)
+        for i, x in enumerate(xs):
+            if ks[i] < len(seq) and seq[ks[i]] == x:
+                want = score_tf(
+                    freqs[t][ks[i]],
+                    dequant_norm(qn[x], kmin, kstep),
+                    r.idf[t],
+                )
+                assert got[i] == np.float32(want), (t, x)
+            else:
+                assert got[i] == 0.0, (t, x)
+
+
+def test_idf_positive_and_monotone():
+    df = np.array([1, 10, 100, 1000])
+    v = idf(1000, df)
+    assert (v > 0).all()
+    assert (np.diff(v) < 0).all()
+
+
+# ---------------------------------------------------------------------------
+# block-max admissibility
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_block_max_admissible(seed):
+    """No block's true max contract score exceeds its quantized bound; list
+    upper bounds dominate their blocks' bounds."""
+    idx, lists, freqs = _mk_index(seed, n_lists=4, max_len=2_000)
+    a, r = idx.arena, idx.arena.ranked
+    bounds = r.block_bounds()
+    lob = a.part_list[a.part_of_block]
+    # true per-lane scores via the numpy mirror
+    scores = bm25_score_rows(
+        r.freq_lens, r.freq_data, r.norm_q,
+        np.arange(a.n_blocks, dtype=np.int64), r.idf[lob], r.norm_table,
+        K1P1, backend="numpy",
+    )
+    scores = np.where(a.lane_valid, scores, np.float32(0.0))
+    true_max = scores.max(axis=1)
+    assert (true_max <= bounds).all(), "quantized bound below true block max"
+    # bounds are tight-ish: within one quantization step + eps
+    step = float(r.bound_scale)
+    assert (bounds - true_max <= step + 1e-6).all()
+    # list upper bounds dominate
+    for t in range(idx.n_lists):
+        r0, r1 = int(a.list_blk_offsets[t]), int(a.list_blk_offsets[t + 1])
+        if r1 > r0:
+            assert r.list_ub[t] >= bounds[r0:r1].max() - 1e-7
+
+
+def test_norm_quantization_roundtrip():
+    rng = np.random.default_rng(5)
+    dl = rng.integers(1, 5_000, 4_000)
+    avg = float(dl.mean())
+    q, kmin, kstep = quantize_norms(dl, avg)
+    k_hat = dequant_norm(q, kmin, kstep)
+    k_true = DEFAULT_BM25.k1 * (
+        1 - DEFAULT_BM25.b + DEFAULT_BM25.b * dl / avg
+    )
+    # 256 linear levels: dequantized norm within half a step of the truth
+    half_step = (k_true.max() - k_true.min()) / 255 / 2
+    assert np.abs(k_hat - k_true).max() <= half_step * 1.01 + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# top-k identity vs the exhaustive oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    k=st.sampled_from([1, 3, 10]),
+)
+def test_topk_identical_to_exhaustive_all_backends(seed, k):
+    idx, lists, freqs = _mk_index(seed)
+    rng = np.random.default_rng(seed + 2)
+    queries = [
+        [int(t) for t in q]
+        for ar in (1, 2, 3)
+        for q in make_queries(rng, len(lists), 4, ar)
+    ]
+    queries += [[], [0, 0], [1, 1, 1, 2]]
+    want = exhaustive_topk(idx, queries, k)
+    for be in ("numpy", "ref", "pallas"):
+        got = TopKEngine(idx, backend=be).topk_batch(queries, k)
+        for qi, ((gd, gs), (wd, ws)) in enumerate(zip(got, want)):
+            assert np.array_equal(gd, wd), (be, k, queries[qi])
+            assert np.array_equal(gs, ws), (be, k, queries[qi])
+
+
+def test_topk_kernel_residency_matches_mirror():
+    """resident="kernel" (HBM-style: no impact mirror, fused kernel per
+    batch) returns the same results as the mirror path."""
+    idx, lists, _ = _mk_index(21, n_lists=4, max_len=900)
+    rng = np.random.default_rng(3)
+    queries = [[int(t) for t in q] for q in make_queries(rng, 4, 6, 2)]
+    want = exhaustive_topk(idx, queries, 5)
+    for be in ("numpy", "ref"):
+        got = TopKEngine(idx, backend=be, resident="kernel").topk_batch(
+            queries, 5
+        )
+        for (gd, gs), (wd, ws) in zip(got, want):
+            assert np.array_equal(gd, wd), be
+            assert np.array_equal(gs, ws), be
+
+
+def test_topk_edge_cases():
+    idx, lists, _ = _mk_index(31, n_lists=4, max_len=600)
+    eng = TopKEngine(idx)
+    n_total = len(np.unique(np.concatenate(lists)))
+    # k exceeding every candidate set: full ranking, still identical
+    want = exhaustive_topk(idx, [[0, 1, 2, 3]], n_total + 50)[0]
+    got = eng.topk_batch([[0, 1, 2, 3]], n_total + 50)[0]
+    assert np.array_equal(got[0], want[0])
+    assert np.array_equal(got[1], want[1])
+    assert len(got[0]) == n_total  # every doc of the union, exactly once
+    # empty query
+    gd, gs = eng.topk_batch([[]], 10)[0]
+    assert gd.size == 0 and gs.size == 0
+    # single-term: ranking of the list itself
+    gd, gs = eng.topk_batch([[2]], 7)[0]
+    wd, ws = exhaustive_topk(idx, [[2]], 7)[0]
+    assert np.array_equal(gd, wd) and np.array_equal(gs, ws)
+    # duplicate terms score double and stay identical to the oracle
+    gd2, gs2 = eng.topk_batch([[2, 2]], 7)[0]
+    assert np.array_equal(gd2, gd)
+    assert np.allclose(gs2, 2 * gs)
+
+
+def test_scores_sorted_and_tie_broken_by_docid():
+    idx, lists, _ = _mk_index(41)
+    rng = np.random.default_rng(0)
+    queries = [[int(t) for t in q] for q in make_queries(rng, len(lists), 8, 2)]
+    for gd, gs in TopKEngine(idx).topk_batch(queries, 20):
+        assert (np.diff(gs) <= 0).all()
+        ties = np.flatnonzero(np.diff(gs) == 0)
+        assert (gd[ties + 1] > gd[ties]).all()
+
+
+def test_index_freq_stream_roundtrip():
+    idx, lists, freqs = _mk_index(51)
+    for t in range(len(lists)):
+        assert np.array_equal(idx.decode_list_freqs(t), freqs[t])
+    assert idx.has_freqs
+    assert idx.n_docs_real == int(np.count_nonzero(idx.doc_lens))
+    dl = np.zeros(len(idx.doc_lens), np.int64)
+    for seq, tf in zip(lists, freqs):
+        np.add.at(dl, seq, tf)
+    assert np.array_equal(idx.doc_lens, dl)
+
+
+def test_engine_requires_freq_stream():
+    rng = np.random.default_rng(0)
+    lists, _ = make_ranked_corpus(rng, n_lists=3, min_len=60, max_len=300)
+    idx = build_partitioned_index(lists, "optimal")  # no freqs
+    with pytest.raises(ValueError, match="ranked sidecar"):
+        TopKEngine(idx)
+
+
+def test_uniform_strategy_also_ranked():
+    """The ranked sidecar rides any partitioning strategy."""
+    rng = np.random.default_rng(9)
+    lists, freqs = make_ranked_corpus(rng, n_lists=4, min_len=80, max_len=700)
+    for strategy in ("uniform", "single"):
+        idx = build_partitioned_index(lists, strategy, freqs=freqs)
+        queries = [[0, 1], [2, 3], [0, 3]]
+        want = exhaustive_topk(idx, queries, 5)
+        got = TopKEngine(idx).topk_batch(queries, 5)
+        for (gd, gs), (wd, ws) in zip(got, want):
+            assert np.array_equal(gd, wd), strategy
+            assert np.array_equal(gs, ws), strategy

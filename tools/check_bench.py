@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Flag benchmark regressions from the BENCH_*.json history (ISSUE-3).
+
+Compares the NEWEST history entry of each BENCH_*.json against the BEST
+(minimum ``us_per_call``) previous measurement with the SAME profile (smoke
+vs smoke, quick vs quick): any record that grew by more than
+``--max-regression`` x over its historical best fails the check.  Records
+faster than ``--min-us`` are skipped (sub-millisecond smoke records time
+compile/dispatch noise, not the work), as are new records (no baseline) --
+the gate is for drift on work we still measure.
+
+  python tools/check_bench.py [--max-regression 2.0] [BENCH_a.json ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+
+
+def check_file(path: str, max_ratio: float, min_us: float) -> list[str]:
+    with open(path) as fh:
+        data = json.load(fh)
+    history = data.get("history")
+    if not history:
+        print(f"[check_bench] {path}: no history, skipping")
+        return []
+    newest = history[-1]
+    prior = [e for e in history[:-1]
+             if e.get("profile") == newest.get("profile")]
+    if not prior:
+        print(f"[check_bench] {path}: no same-profile baseline "
+              f"({newest.get('profile')}), skipping")
+        return []
+    # historical best per record: robust to one noisy baseline run
+    best: dict[str, float] = {}
+    for e in prior:
+        for r in e.get("records", []):
+            us = r.get("us_per_call")
+            if us:
+                best[r["name"]] = min(best.get(r["name"], us), us)
+    failures = []
+    compared = 0
+    for rec in newest.get("records", []):
+        prev = best.get(rec["name"])
+        if prev is None or prev < min_us:
+            continue
+        compared += 1
+        ratio = rec["us_per_call"] / prev
+        if ratio > max_ratio:
+            failures.append(
+                f"{path}: {rec['name']} regressed {ratio:.2f}x over its "
+                f"historical best ({prev:.1f} -> "
+                f"{rec['us_per_call']:.1f} us/call)"
+            )
+    print(f"[check_bench] {path}: {compared} records vs best of "
+          f"{len(prior)} prior runs, {len(failures)} regressions")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*", default=None)
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="fail when us_per_call grows more than this factor")
+    ap.add_argument("--min-us", type=float, default=1_000.0,
+                    help="ignore records whose baseline is faster than this")
+    args = ap.parse_args()
+    paths = args.paths or sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        print("[check_bench] no BENCH_*.json files found")
+        return 0
+    failures: list[str] = []
+    for path in paths:
+        failures.extend(check_file(path, args.max_regression, args.min_us))
+    for f in failures:
+        print(f"[check_bench] FAIL {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

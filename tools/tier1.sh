@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 gate (ISSUE-3 satellite): the full pytest suite, a smoke pass of
+# every benchmark with JSON history recording, and a >2x bench-regression
+# check against the previous same-profile history entry.
+#
+#   bash tools/tier1.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier1: pytest =="
+python -m pytest -x -q
+
+echo "== tier1: benchmark smoke (+ JSON history) =="
+python -m benchmarks.run --smoke --json
+
+echo "== tier1: bench regression check (>2x fails) =="
+if ! python tools/check_bench.py --max-regression 2.0; then
+  # timing gates flake under load: re-measure once before failing
+  echo "== tier1: regression flagged, re-measuring once =="
+  python -m benchmarks.run --smoke --json
+  python tools/check_bench.py --max-regression 2.0
+fi
+
+echo "== tier1: OK =="
