@@ -23,7 +23,6 @@ def run(quick: bool = True, smoke: bool = False) -> None:
     from repro.core.partition import (
         optimal_partitioning,
         partitioning_cost,
-        unpartitioned_cost,
     )
 
     rng = np.random.default_rng(0)

@@ -28,7 +28,7 @@ def _oracle(corpus, q):
     return want
 
 
-def run(quick: bool = True, smoke: bool = False) -> None:
+def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
     from repro.core.index import build_partitioned_index, build_unpartitioned_index
     from repro.core.query_engine import QueryEngine
 
@@ -157,6 +157,48 @@ def run(quick: bool = True, smoke: bool = False) -> None:
         assert grouped_speedup >= 1.0, (
             f"grouped dispatch slower than ungrouped: {grouped_speedup:.2f}x"
         )
+
+    # ISSUE-4 tentpole: the sharded-arena lane.  On CPU (numpy backend)
+    # sharding must cost NOTHING vs the unsharded fused engine -- sharding
+    # is device placement, and the numpy path serves through the same
+    # global flat mirror -- and results are identical.
+    eng_u = QueryEngine(idx, backend="numpy", fused=True)
+    eng_s = QueryEngine(idx, backend="numpy", fused=True, shards=shards)
+    eng_u.intersect_batch(queries[:2])  # warm both flat mirrors
+    eng_s.intersect_batch(queries[:2])
+    lat_u, res_u = timeit_samples(
+        lambda: eng_u.intersect_batch(queries), repeat=repeat
+    )
+    lat_s, res_s = timeit_samples(
+        lambda: eng_s.intersect_batch(queries), repeat=repeat
+    )
+    for a, b in zip(res_u, res_s):
+        assert np.array_equal(a, b)
+    sharded_ratio = min(lat_u) / min(lat_s)
+    emit(f"table5_and_sharded{shards}_numpy_vbyte_opt",
+         min(lat_s) / len(queries) * 1e6,
+         f"shards={shards};speedup_vs_unsharded={sharded_ratio:.2f}x",
+         speedup_vs_unsharded=sharded_ratio,
+         **latency_fields(lat_s, per=len(queries)))
+    if not smoke:
+        # "no regression" with headroom for CI timer noise
+        assert sharded_ratio >= 0.8, (
+            f"sharded engine regressed vs unsharded: {sharded_ratio:.2f}x"
+        )
+
+    # the device pipeline sharded: per-shard jitted dispatch (shard_map
+    # when one device per shard exists -- on 1-CPU runs only shards=1 maps)
+    eng_sr = QueryEngine(idx, backend="ref", fused=True, shards=shards)
+    eng_sr.intersect_batch(queries[:2])
+    lat_sr, res_sr = timeit_samples(
+        lambda: eng_sr.intersect_batch(queries), repeat=max(2, repeat - 4)
+    )
+    for a, b in zip(res_u, res_sr):
+        assert np.array_equal(a, b)
+    emit(f"table5_and_sharded{shards}_ref_vbyte_opt",
+         min(lat_sr) / len(queries) * 1e6,
+         f"shards={shards};backend=ref",
+         **latency_fields(lat_sr, per=len(queries)))
 
 
 if __name__ == "__main__":

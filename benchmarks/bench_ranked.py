@@ -39,7 +39,7 @@ def _corpora(rng, quick: bool, smoke: bool):
         yield name, lists, freqs
 
 
-def run(quick: bool = True, smoke: bool = False) -> None:
+def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
     from repro.core.index import build_partitioned_index
     from repro.data.postings import make_queries
     from repro.ranked.bm25 import exhaustive_topk
@@ -93,6 +93,23 @@ def run(quick: bool = True, smoke: bool = False) -> None:
                     f"block-max engine only {speedup:.2f}x over exhaustive "
                     f"scoring on {name} (ref backend)"
                 )
+
+        # ISSUE-4: the sharded-arena lane -- list-hash routed top-k stays
+        # IDENTICAL to the oracle (and hence to every unsharded engine)
+        eng_s = TopKEngine(idx, backend="ref", seed_blocks=2, shards=shards)
+        eng_s.topk_batch(queries, k)  # warm mirror + per-shard jit traces
+        lat_s, got_s = timeit_samples(
+            lambda: eng_s.topk_batch(queries, k), repeat=2 if smoke else 5,
+        )
+        for qi, ((gd, gs), (wd, ws)) in enumerate(zip(got_s, want)):
+            assert np.array_equal(gd, wd), ("sharded", name, queries[qi])
+            assert np.array_equal(gs, ws), ("sharded", name, queries[qi])
+        emit(f"ranked_blockmax_sharded{shards}_{name}",
+             min(lat_s) / len(queries) * 1e6,
+             f"k={k};shards={shards};speedup_vs_exhaustive="
+             f"{dt_o / min(lat_s):.2f}x",
+             speedup_vs_exhaustive=dt_o / min(lat_s),
+             **latency_fields(lat_s, per=len(queries)))
 
 
 if __name__ == "__main__":

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import emit, freqs_like, gov2_like_corpus, timeit
+from .common import emit, gov2_like_corpus, timeit
 
 
 def run(quick: bool = True, smoke: bool = False) -> None:

@@ -60,14 +60,23 @@ def timeit_samples(fn, *args, repeat=5):
 
 
 def cli_main(run_fn) -> None:
-    """Shared ``__main__`` entry for bench modules: --smoke / --full."""
+    """Shared ``__main__`` entry for bench modules: --smoke / --full, plus
+    --shards for the modules that grow a sharded lane (ISSUE-4)."""
     import argparse
+    import inspect
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="shard count for the sharded-arena lanes")
     a = ap.parse_args()
-    run_fn(quick=not a.full, smoke=a.smoke)
+    kw = {}
+    if a.shards is not None:
+        if "shards" not in inspect.signature(run_fn).parameters:
+            ap.error("this benchmark has no sharded lane (--shards)")
+        kw["shards"] = a.shards
+    run_fn(quick=not a.full, smoke=a.smoke, **kw)
 
 
 def emit(name: str, us_per_call: float, derived: str, **extra) -> None:

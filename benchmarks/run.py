@@ -68,17 +68,34 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny corpora; assertions that need real timing "
                          "spreads are skipped")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys (e.g. table5,ranked); "
+                         "tools/tier1.sh uses this to re-measure only the "
+                         "regressed groups on a flaked gate")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_queries.json / BENCH_kernels.json")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
     profile = "full" if args.full else ("smoke" if args.smoke else "quick")
+    only = None
+    if args.only:
+        only = {m.strip() for m in args.only.split(",") if m.strip()}
+        unknown = only - MODULES.keys()
+        if unknown:
+            ap.error(f"unknown --only modules {sorted(unknown)}; "
+                     f"known: {sorted(MODULES)}")
+        if args.json:
+            # a BENCH_<group>.json history entry must stay COMPLETE (its
+            # records mirror the whole group): selecting one module of a
+            # shared group pulls in the siblings, else the appended entry
+            # would silently drop their records
+            groups_hit = {JSON_GROUPS.get(m) for m in only} - {None}
+            only |= {m for m, g in JSON_GROUPS.items() if g in groups_hit}
     print("name,us_per_call,derived")
     groups: dict[str, list[dict]] = {}
     for name, mod in MODULES.items():
-        if args.only and args.only != name:
+        if only is not None and name not in only:
             continue
         reset_results()
         t0 = time.time()

@@ -15,7 +15,6 @@ sys.path.insert(0, "src")
 
 import jax.numpy as jnp
 
-import dataclasses
 
 import jax
 

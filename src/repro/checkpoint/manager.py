@@ -26,10 +26,7 @@ import numpy as np
 
 import jax
 
-from repro.core import (
-    build_partitioned_index,
-    optimal_partitioning,
-)
+from repro.core import build_partitioned_index
 from repro.core.costs import gaps_from_sorted
 from repro.core.index import PartitionedIndex
 

@@ -6,7 +6,9 @@ from .index import (
     build_partitioned_index,
     build_unpartitioned_index,
 )
+from .engine_core import EngineCore
 from .query_engine import QueryEngine
+from .shard import ShardedArena, make_shard_mesh, shard_of_list
 from .partition import (
     dp_optimal,
     eps_optimal,

@@ -1,0 +1,457 @@
+"""Shared flat-mirror / locate machinery of the batched engines (one place).
+
+``QueryEngine`` (boolean AND / NextGEQ) and ``TopKEngine`` (BM25 top-k) both
+serve batches the same way: locate each (term, probe) cursor's arena row with
+ONE searchsorted over globally monotone keys, then resolve the cursor inside
+the located row.  Until PR 4 the machinery behind that -- the flat host
+mirror, the lane-key construction with its padding clamp, the pow2 cursor
+bucketing, and the int32 probe clip -- lived TWICE, once per engine, and the
+ROADMAP flagged the duplication as a correctness hazard: the subtleties are
+exactly the kind that drift apart silently.  They now live here, once.
+
+The subtleties, for the record:
+
+* **padding clamp** (``flat_init``): the flat lane keys extend the arena's
+  block keys to lane granularity as ``min(value, block_last) + owning_list *
+  stride``.  Padding lanes keep ascending past the partition endpoint (the
+  arena pads gap-1 = 0), so WITHOUT the ``min`` they would overtake the next
+  partition's keys and break global monotonicity; clamped, they tie with
+  their block's last real value and a ``side="left"`` searchsorted can never
+  land on a padding lane before the real hit.
+
+* **int32 probe clip** (``stage_cursors``): the device pipeline stages
+  cursors as int32.  Probes are clipped to ``[0, stride - 1]`` BEFORE the
+  cast -- an int64 probe >= 2^31 must resolve as past-the-end (clip to the
+  maximum key, which locates past every real block of the list), not wrap
+  negative and clip to probe 0.
+
+* **sentinel lane** (``flat_init``): one extra lane (value -1, key int64
+  max, score 0) keeps a past-the-end searchsorted result a valid gather
+  index; callers mask with ``lane_end`` afterwards.
+
+* **pow2 buckets** (``pow2_bucket`` / ``search_jax``): device cursor counts
+  are padded to power-of-two buckets so jit traces are reused across
+  batches; padding cursors probe list 0 at docID 0 and are sliced away.
+
+One ``EngineCore`` serves ONE ``DeviceArena`` -- the sharded engines hold a
+core per shard (see ``repro.core.shard``) and route cursors between them.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
+from repro.kernels.vbyte_decode.ops import (
+    decode_block_rows,
+    default_backend,
+    default_interpret,
+)
+
+INT64_MAX = np.iinfo(np.int64).max
+
+
+def pow2_bucket(n: int, floor: int = BM) -> int:
+    """Power-of-two jit bucket holding ``n`` cursors (floor keeps the pallas
+    grid shape legal and bounds the number of distinct traces)."""
+    return max(floor, 1 << (max(n, 1) - 1).bit_length())
+
+
+def stage_cursors(terms, probes, stride: int, bucket: int):
+    """Stage cursors into int32 device buffers of size ``bucket``.
+
+    Padding cursors probe list 0 at docID 0.  The probe clip happens BEFORE
+    the int32 cast -- see the module docstring (a probe >= 2^31 must clip to
+    the maximum key and resolve past-the-end, not wrap negative).
+    """
+    n = len(terms)
+    tp = np.zeros(bucket, np.int32)
+    pp = np.zeros(bucket, np.int32)
+    tp[:n] = terms
+    pp[:n] = np.clip(probes, 0, stride - 1)
+    return tp, pp
+
+
+def group_cursors(terms, probes, stride: int):
+    """Group duplicate (term, probe) cursors before a device dispatch.
+
+    Returns ``(idx, inv)`` with ``terms[idx]`` the unique cursors and
+    ``inv`` scattering results back, or ``None`` when every cursor is
+    already unique.  The clip matches ``stage_cursors``, so grouped and
+    ungrouped dispatches see identical staged cursors.
+    """
+    key = np.clip(probes, 0, stride - 1) + terms * stride
+    uk, idx, inv = np.unique(key, return_index=True, return_inverse=True)
+    if len(uk) == len(terms):
+        return None
+    return idx, inv
+
+
+def locate_graph(block_keys, list_blk_offsets, stride, nb, terms, probes):
+    """Jitted-graph locate over resident keys: ONE searchsorted.
+
+    Traces int32 cursor arrays into ``(rows, pe, past)``: ``rows`` the
+    arena row holding each cursor's answer (clamped in-range), ``pe`` the
+    effective probe (0 where past the end), ``past`` the past-the-end
+    mask.  Every device pipeline -- both engines' jitted fns AND the
+    shard_map bodies of ``core.shard`` -- opens with exactly this graph;
+    it exists ONCE, here.
+    """
+    import jax.numpy as jnp
+
+    pc = jnp.clip(probes, 0, stride - 1)
+    k = jnp.searchsorted(block_keys, pc + terms * stride, side="left").astype(
+        jnp.int32
+    )
+    past = k >= list_blk_offsets[terms + 1]
+    rows = jnp.minimum(k, nb - 1)
+    pe = jnp.where(past, 0, pc)
+    return rows, pe, past
+
+
+def build_locate_dev(arena):
+    """``locate_graph`` closed over one arena's resident device arrays."""
+    dev = arena.dev
+    stride, nb = arena.stride, arena.n_blocks
+
+    def locate(terms, probes):
+        return locate_graph(
+            dev.block_keys, dev.list_blk_offsets, stride, nb, terms, probes
+        )
+
+    return locate
+
+
+def decode_search_graph(lens_g, data_g, base_g, pe, backend, interpret):
+    """Fused decode+NextGEQ over GATHERED rows -> (value, rank_in).
+
+    The kernel-dispatch epilogue shared by the jitted engine pipelines and
+    the shard_map bodies: pallas stages (base, probe) into the META lanes,
+    ref calls the jnp oracle.  Bit-identical across backends.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.vbyte_decode.kernel import (
+        META_BASE,
+        META_PROBE,
+        decode_search_blocks,
+    )
+    from repro.kernels.vbyte_decode.ref import decode_search_ref
+
+    if backend == "pallas":
+        meta = jnp.zeros((pe.shape[0], BLOCK_VALS), jnp.int32)
+        meta = meta.at[:, META_BASE].set(base_g)
+        meta = meta.at[:, META_PROBE].set(pe)
+        out = decode_search_blocks(lens_g, data_g, meta, interpret=interpret)
+        return out[:, 0], out[:, 1]
+    return decode_search_ref(lens_g, data_g, base_g, pe)
+
+
+class EngineCore:
+    """Flat-mirror / locate / dispatch machinery over ONE ``DeviceArena``.
+
+    Parameters
+    ----------
+    arena: the ``DeviceArena`` to serve (global, or one shard's sub-arena).
+    backend: "auto" | "numpy" | "ref" | "pallas" -- decode path.
+    cache_parts / cache_bytes: bounds of the decoded-row LRU; cache_bytes
+        also gates the flat mirror (None = unbudgeted, always build it).
+    mirror_backend: backend used to DECODE the flat mirror (None = same as
+        ``backend``; TopKEngine passes "numpy" -- values are exact ints and
+        the mirror is a host structure whatever the scoring backend).
+    lane_scores_fn: optional ``() -> [n_blocks, 128] float32`` scoring every
+        arena lane; when given, ``flat_init`` masks padding lanes to 0 and
+        keeps the flat per-lane score mirror (TopKEngine's impact mirror).
+    stats: optional dict to count into (an engine shares its stats dict so
+        existing counters keep working); missing keys are created.
+    """
+
+    def __init__(
+        self,
+        arena,
+        backend: str = "auto",
+        cache_parts: int = 32_768,
+        cache_bytes: int | None = None,
+        mirror_backend: str | None = None,
+        lane_scores_fn=None,
+        stats: dict | None = None,
+    ):
+        self.arena = arena
+        self.backend = default_backend() if backend == "auto" else backend
+        # interpret mode only off-accelerator: on TPU/GPU the pallas backend
+        # must COMPILE the kernel, not emulate it
+        self.interpret = default_interpret()
+        self.cache_parts = int(cache_parts)
+        self.cache_bytes = None if cache_bytes is None else int(cache_bytes)
+        self.mirror_backend = mirror_backend or self.backend
+        self.lane_scores_fn = lane_scores_fn
+        self.stats = stats if stats is not None else {}
+        for key in ("decoded_rows", "kernel_calls", "cache_hits", "evictions"):
+            self.stats.setdefault(key, 0)
+        self.cache: OrderedDict = OrderedDict()
+        self.cache_nbytes = 0
+        # flat mirror: decoded lane values + global lane keys (+ scores)
+        self.flat_vals: np.ndarray | None = None
+        self.flat_keys: np.ndarray | None = None
+        self.flat_scores: np.ndarray | None = None
+        self.lane_end: np.ndarray | None = None
+        self.flat_ok = None  # None = undecided, False = budget refused
+        self._jax_fn = None
+
+    # ------------------------------------------------------------------
+    # LRU cache (decoded rows / partitions / lists), byte- and count-bounded
+    # ------------------------------------------------------------------
+    def cache_get(self, key):
+        """Cached array for ``key`` (LRU-touched, hit-counted) or None."""
+        got = self.cache.get(key)
+        if got is not None:
+            self.cache.move_to_end(key)
+            self.stats["cache_hits"] += 1
+        return got
+
+    def cache_put(self, key, arr: np.ndarray) -> None:
+        old = self.cache.pop(key, None)
+        if old is not None:
+            self.cache_nbytes -= old.nbytes
+        self.cache[key] = arr
+        self.cache_nbytes += arr.nbytes
+        limit = np.inf if self.cache_bytes is None else self.cache_bytes
+        while self.cache and (
+            len(self.cache) > self.cache_parts or self.cache_nbytes > limit
+        ):
+            _, ev = self.cache.popitem(last=False)
+            self.cache_nbytes -= ev.nbytes
+            self.stats["evictions"] += 1
+
+    # ------------------------------------------------------------------
+    # host flat mirror: decoded lane docIDs + lane keys (+ lane scores)
+    # ------------------------------------------------------------------
+    def flat_init(self) -> bool:
+        """Decode the arena once into flat (values, lane keys[, scores]).
+
+        Lane keys extend the arena's block keys to lane granularity with the
+        padding clamp described in the module docstring; one searchsorted
+        over them subsumes BOTH locate steps.  Gated on ``cache_bytes``
+        (2 x 1 KiB per block) when a budget is set.
+        """
+        if self.flat_keys is None and self.flat_ok is None:
+            a = self.arena
+            if (
+                self.cache_bytes is not None
+                and 2 * a.n_blocks * BLOCK_VALS * 8 > self.cache_bytes
+            ):
+                self.flat_ok = False  # budget refused: per-call decode
+                return False
+            gaps = decode_block_rows(
+                a.lens[: a.n_blocks],
+                a.data[: a.n_blocks],
+                backend=self.mirror_backend,
+                interpret=self.interpret,
+            )
+            self.stats["kernel_calls"] += 1
+            self.stats["decoded_rows"] += a.n_blocks
+            vals = a.block_base[:, None] + np.cumsum(gaps + 1, axis=1)
+            # one sentinel lane so a past-the-end searchsorted result is
+            # still a valid gather index (masked via lane_end afterwards)
+            self.flat_vals = np.append(vals.reshape(-1), -1)
+            list_of_block = a.part_list[a.part_of_block]
+            self.flat_keys = np.append(
+                np.minimum(
+                    vals + (list_of_block * a.stride)[:, None],
+                    a.block_keys[:, None],
+                ).reshape(-1),
+                INT64_MAX,
+            )
+            self.lane_end = a.list_blk_offsets * BLOCK_VALS
+            if self.lane_scores_fn is not None and a.n_blocks:
+                scores = np.where(
+                    a.lane_valid, self.lane_scores_fn(), np.float32(0.0)
+                )
+                self.flat_scores = np.append(
+                    scores.reshape(-1).astype(np.float32), np.float32(0.0)
+                )
+            if self.cache_bytes is not None:
+                # the flat arrays spend part of the decoded-bytes budget:
+                # LRU entries (decoded rows / lists) only get the remainder
+                self.cache_nbytes += self.flat_vals.nbytes + self.flat_keys.nbytes
+            self.flat_ok = True
+        return bool(self.flat_ok)
+
+    def rows_values(self, rows: np.ndarray) -> np.ndarray:
+        """[len(rows), 128] absolute docIDs of the given (unique) rows.
+
+        With the flat arena refused (over ``cache_bytes``), decoded rows go
+        through the byte-budgeted LRU under ``("row", r)`` keys -- the
+        dense row cache of the fused CPU path.  Rows the budget cannot hold
+        are decoded, served, and dropped, with every drop counted in
+        ``stats["evictions"]`` like any other cache eviction.
+        """
+        a = self.arena
+        if self.flat_init():
+            return self.flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows]
+        rows = np.asarray(rows, dtype=np.int64)
+        out = np.empty((len(rows), BLOCK_VALS), np.int64)
+        miss_j: list[int] = []
+        for j, rr in enumerate(rows):
+            got = self.cache_get(("row", int(rr)))
+            if got is None:
+                miss_j.append(j)
+            else:
+                out[j] = got
+        if miss_j:
+            miss_rows = rows[miss_j]
+            gaps = decode_block_rows(
+                a.lens[miss_rows],
+                a.data[miss_rows],
+                backend=self.backend,
+                interpret=self.interpret,
+            )
+            self.stats["kernel_calls"] += 1
+            self.stats["decoded_rows"] += len(miss_rows)
+            vals = a.block_base[miss_rows][:, None] + np.cumsum(gaps + 1, axis=1)
+            out[miss_j] = vals
+            # cache at most a budget's worth of this batch's rows (the
+            # most recently decoded): caching a miss set larger than the
+            # budget would evict every entry before it could ever be
+            # re-hit -- pure churn.  copy(): a view would pin the whole
+            # batch's vals base array and void the byte accounting.
+            bb = self.cache_bytes if self.cache_bytes is not None else 0
+            cap = max(int(bb // (BLOCK_VALS * 8)), 1)
+            for j in range(max(len(miss_rows) - cap, 0), len(miss_rows)):
+                self.cache_put(("row", int(miss_rows[j])), vals[j].copy())
+        return out
+
+    def decode_list(self, t: int) -> np.ndarray:
+        """All real docIDs of (local) list ``t``, via the LRU cache."""
+        key = ("list", int(t))
+        got = self.cache_get(key)
+        if got is not None:
+            return got
+        a = self.arena
+        r0 = int(a.list_blk_offsets[t])
+        r1 = int(a.list_blk_offsets[t + 1])
+        if r0 == r1:
+            return np.zeros(0, np.int64)
+        rows = np.arange(r0, r1, dtype=np.int64)
+        vals = self.rows_values(rows)
+        out = vals.reshape(-1)[a.lane_valid[r0:r1].reshape(-1)]
+        self.cache_put(key, out)
+        return out
+
+    # ------------------------------------------------------------------
+    # fused locate -> resolve, host (numpy) path
+    # ------------------------------------------------------------------
+    def search_np(self, terms, probes, with_rank: bool = True, trusted: bool = False):
+        """Host (numpy) fused pipeline: one searchsorted per batch.
+
+        Returns UNMASKED (value, rank, past): callers apply their own mask
+        (-1 fill for NextGEQ, ``& ~past`` for membership) so the membership
+        hot loop skips the rank arithmetic entirely (``with_rank=False``).
+        ``trusted`` skips the probe clip for probes that are known decoded
+        docIDs (the AND filter feeds candidates straight back in).
+
+        With the flat lane keys resident, locate AND in-partition resolve
+        collapse into a single searchsorted plus O(1) gathers per cursor.
+        Without them (arena over the byte budget), a two-level variant
+        locates blocks first and decodes only the unique touched rows.
+        """
+        a = self.arena
+        pc = probes if trusted else np.clip(probes, 0, a.stride - 1)
+        pk = pc + terms * a.stride
+        if self.flat_init():
+            self.stats["cache_hits"] += len(terms)
+            pos = np.searchsorted(self.flat_keys, pk, side="left")
+            past = pos >= self.lane_end[terms + 1]
+            value = self.flat_vals[pos]  # sentinel lane keeps pos in range
+            rank = None
+            if with_rank:
+                rows = np.minimum(pos, len(self.flat_keys) - 2) >> 7
+                rank = pos - (a.first_blk[a.part_of_block[rows]] << 7)
+            return value, rank, past
+        k = np.searchsorted(a.block_keys, pk, side="left")
+        past = k >= a.list_blk_offsets[terms + 1]
+        rows = np.minimum(k, a.n_blocks - 1)
+        pe = np.where(past, 0, pc)
+        urows, inv = np.unique(rows, return_inverse=True)
+        vals_u = self.rows_values(urows)  # [U, 128]
+        base_u = a.block_base[urows]
+        # rebased lane values are in [1, stride + 127]; stride2 clears them
+        stride2 = a.stride + BLOCK_VALS + 2
+        lane_keys = (
+            vals_u - base_u[:, None]
+            + np.arange(len(urows), dtype=np.int64)[:, None] * stride2
+        ).reshape(-1)
+        probe_keys = np.maximum(pe - base_u[inv], 1) + inv * stride2
+        pos = np.searchsorted(lane_keys, probe_keys, side="left")
+        value = vals_u.reshape(-1)[pos]
+        rank = None
+        if with_rank:
+            rank_in = pos - inv * BLOCK_VALS
+            part = a.part_of_block[rows]
+            rank = (rows - a.first_blk[part]) * BLOCK_VALS + rank_in
+        return value, rank, past
+
+    # ------------------------------------------------------------------
+    # fused locate -> decode_search, jitted device path
+    # ------------------------------------------------------------------
+    def _build_jax_fn(self):
+        import jax
+        import jax.numpy as jnp
+
+        dev = self.arena.dev
+        locate = build_locate_dev(self.arena)
+        backend, interpret = self.backend, self.interpret
+
+        def fn(terms, probes):
+            rows, pe, past = locate(terms, probes)
+            value, rank_in = decode_search_graph(
+                dev.lens[rows],
+                dev.data[rows],
+                dev.block_base[rows],
+                pe,
+                backend,
+                interpret,
+            )
+            part = dev.part_of_block[rows]
+            rank = (rows - dev.first_blk[part]) * BLOCK_VALS + rank_in
+            return jnp.where(past, -1, value), jnp.where(past, -1, rank)
+
+        return jax.jit(fn)
+
+    def search_jax(self, terms, probes):
+        """Device fused pipeline, jitted end-to-end over the resident arena.
+
+        Cursor counts are padded to power-of-two buckets so jit traces are
+        reused across batches; padding cursors probe list 0 at docID 0 and
+        are sliced away.  One host sync at the end (the result fetch).
+        """
+        import jax.numpy as jnp
+
+        n = len(terms)
+        tp, pp = stage_cursors(terms, probes, self.arena.stride, pow2_bucket(n))
+        if self._jax_fn is None:
+            self._jax_fn = self._build_jax_fn()
+        value, rank = self._jax_fn(jnp.asarray(tp), jnp.asarray(pp))
+        return (
+            np.asarray(value)[:n].astype(np.int64),
+            np.asarray(rank)[:n].astype(np.int64),
+        )
+
+    @property
+    def use_device(self) -> bool:
+        return self.backend in ("ref", "pallas") and self.arena.device_ok
+
+    def fused_search(
+        self, terms, probes, with_rank: bool = True, trusted: bool = False
+    ):
+        """One fused dispatch over THIS arena: (value, rank, past).
+
+        value/rank are meaningful only where ``~past`` (the device pipeline
+        pre-masks them to -1, which is equivalent for every caller).
+        """
+        if self.use_device:
+            value, rank = self.search_jax(terms, probes)
+            return value, rank, value < 0
+        return self.search_np(terms, probes, with_rank, trusted)

@@ -131,7 +131,6 @@ def optimal_partitioning_jax(deltas: jnp.ndarray, F: int = DEFAULT_F):
     The final close() boundaries are returned via the carry and appended by
     the host-side wrapper ``optimal_partitioning_via_scan``.
     """
-    n = deltas.shape[0]
 
     def step(carry, dk):
         T, i, j, g, mn, mx, k = carry

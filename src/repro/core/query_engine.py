@@ -25,6 +25,22 @@ bucketed to powers of two so jit traces are reused); there is no host
 round-trip between stages.  On ``backend="numpy"`` the same pipeline runs
 vectorized on the host, with decoded 128-value rows cached in a dense
 byte-bounded row cache (decode each hot block once, then pure compares).
+The flat-mirror / locate machinery behind both is ``core.engine_core`` --
+shared with the ranked ``TopKEngine``, so the padding-clamp and int32-clip
+subtleties live exactly once.
+
+**Sharded path (PR 4, ``shards=N``).**  The arena is list-hash-partitioned
+into N per-shard sub-arenas (``core.shard.ShardedArena``).  Cursors route to
+their owning shard on the host; each shard runs the SAME fused pipeline over
+its (smaller) sub-arena -- under one ``shard_map`` dispatch when a mesh with
+one device per shard exists, else as a per-shard loop -- and results merge
+on the host only at the result boundary (values are absolute docIDs and
+ranks are partition-local, so the merge is a pure scatter).  A 1-shard
+``ShardedArena`` is bit-identical to the unsharded path.  Sharding is a
+device-PLACEMENT concept: the numpy backend has no devices to place shards
+on, so it serves sharded engines through the global flat mirror unrouted
+(identical results, zero overhead); the routed host path stays available as
+``_fused_sharded`` -- the reference the device routing is tested against.
 
 **Partition-LRU path (``fused=False``, PR 1).**  Partition-level location
 plus an LRU cache of decoded partitions; kept as the oracle the fused path
@@ -40,16 +56,11 @@ the same ascending order.
 
 from __future__ import annotations
 
-from collections import OrderedDict
-
 import numpy as np
 
-from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
-from repro.kernels.vbyte_decode.ops import (
-    decode_block_rows,
-    default_backend,
-    default_interpret,
-)
+from repro.core.engine_core import EngineCore, group_cursors
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
+from repro.kernels.vbyte_decode.ops import decode_block_rows
 
 TAG_VBYTE = 0
 TAG_BITVECTOR = 1
@@ -81,7 +92,7 @@ class QueryEngine:
     index: the (immutable) PartitionedIndex to serve.
     backend: "auto" | "numpy" | "ref" | "pallas" -- decode path.  "auto"
         resolves via the shared ``default_backend()`` (compiled pallas on
-        TPU/GPU, numpy on CPU).
+        TPU/GPU, numpy on CPU; overridable with ``REPRO_BACKEND``).
     cache_parts: LRU capacity in entries (decoded partitions / lists).
     cache_bytes: LRU capacity in decoded-value BYTES; also budgets the fused
         path's dense row cache.  Big partitions no longer count the same as
@@ -92,6 +103,12 @@ class QueryEngine:
         dispatch, so batches heavy in repeated terms (AND filters over
         queries sharing terms) gather and decode each block row once
         instead of once per duplicate cursor.
+    shards: list-hash-partition the arena into this many shards and route
+        cursors per shard (requires ``fused=True``).  None = unsharded.
+    shard_mesh: "auto" | None | a ``jax.sharding.Mesh`` with a "shard"
+        axis.  "auto" builds a one-device-per-shard mesh when enough jax
+        devices exist (the single ``shard_map`` dispatch); None (or too few
+        devices) serves shards as a host-side loop instead.
     """
 
     def __init__(
@@ -102,25 +119,15 @@ class QueryEngine:
         cache_bytes: int = 256 << 20,
         fused: bool = True,
         group: bool = True,
+        shards: int | None = None,
+        shard_mesh="auto",
     ):
         self.index = index
-        self.backend = default_backend() if backend == "auto" else backend
-        # interpret mode only off-accelerator: on TPU/GPU the pallas backend
-        # must COMPILE the kernel, not emulate it
-        self.interpret = default_interpret()
         self.cache_parts = int(cache_parts)
         self.cache_bytes = int(cache_bytes)
         self.fused = bool(fused)
         self.group = bool(group)
         self.arena = index.arena
-        self._cache: OrderedDict = OrderedDict()
-        self._cache_nbytes = 0
-        # fused-numpy flat cache: decoded lane values + global lane keys
-        self._flat_vals: np.ndarray | None = None
-        self._flat_keys: np.ndarray | None = None
-        self._lane_end: np.ndarray | None = None
-        self._flat_ok = None  # None = undecided, False = budget refused
-        self._jax_fn = None
         self.stats = {
             "decoded_parts": 0,
             "decoded_rows": 0,
@@ -129,7 +136,27 @@ class QueryEngine:
             "evictions": 0,
             "fused_batches": 0,
             "grouped_cursors": 0,
+            "sharded_batches": 0,
         }
+        self.core = EngineCore(
+            self.arena, backend=backend, cache_parts=cache_parts,
+            cache_bytes=cache_bytes, stats=self.stats,
+        )
+        self.backend = self.core.backend
+        self.interpret = self.core.interpret
+
+        self.sharded = None
+        self._shard_cores: list[EngineCore] = []
+        self._smap_fn = None
+        if shards is not None:
+            if not self.fused:
+                raise ValueError("shards= requires the fused engine "
+                                 "(fused=True)")
+            from repro.core.shard import ShardedArena
+
+            self.sharded = ShardedArena.build(
+                self.arena, int(shards), mesh=shard_mesh
+            )
 
         a = self.arena
         self.stride = a.stride
@@ -139,21 +166,37 @@ class QueryEngine:
         self._keys = index.endpoints + a.part_list * a.stride
 
     # ------------------------------------------------------------------
-    # LRU cache (decoded partitions / lists), byte- and count-bounded
+    # shared-core delegation (flat mirror, LRU, fused pipelines) -- the
+    # machinery itself lives once, in core.engine_core.EngineCore
     # ------------------------------------------------------------------
+    @property
+    def _cache(self):
+        return self.core.cache
+
+    @property
+    def _cache_nbytes(self) -> int:
+        return self.core.cache_nbytes
+
+    @property
+    def _flat_ok(self):
+        return self.core.flat_ok
+
+    @property
+    def _flat_keys(self):
+        return self.core.flat_keys
+
+    @property
+    def _flat_vals(self):
+        return self.core.flat_vals
+
+    def _flat_init(self) -> bool:
+        return self.core.flat_init()
+
+    def _rows_values(self, rows: np.ndarray) -> np.ndarray:
+        return self.core.rows_values(rows)
+
     def _cache_put(self, key, arr: np.ndarray) -> None:
-        old = self._cache.pop(key, None)
-        if old is not None:
-            self._cache_nbytes -= old.nbytes
-        self._cache[key] = arr
-        self._cache_nbytes += arr.nbytes
-        while self._cache and (
-            len(self._cache) > self.cache_parts
-            or self._cache_nbytes > self.cache_bytes
-        ):
-            _, ev = self._cache.popitem(last=False)
-            self._cache_nbytes -= ev.nbytes
-            self.stats["evictions"] += 1
+        self.core.cache_put(key, arr)
 
     def partition_values(self, p: int) -> np.ndarray:
         """Absolute docIDs of partition p (decoded through the LRU cache)."""
@@ -170,12 +213,10 @@ class QueryEngine:
         missing = []
         for p in parts:
             p = int(p)
-            got = self._cache.get(p)
+            got = self.core.cache_get(p)
             if got is None:
                 missing.append(p)
             else:
-                self._cache.move_to_end(p)
-                self.stats["cache_hits"] += 1
                 out[p] = got
         if missing:
             out.update(self._decode_into_cache(np.asarray(missing, np.int64)))
@@ -206,222 +247,79 @@ class QueryEngine:
             s = int(row0[j]) * BLOCK_VALS
             dec[int(p)] = flat[s : s + int(a.sizes[p])]
         for key, arr in dec.items():
-            self._cache_put(key, arr)
+            self.core.cache_put(key, arr)
         return dec
 
     # ------------------------------------------------------------------
-    # fused locate -> decode_search -> gather (PR-2 hot path)
+    # fused locate -> decode_search -> gather (hot path; sharded routing)
     # ------------------------------------------------------------------
-    def _flat_init(self) -> bool:
-        """Decode the arena once into flat (values, lane keys) -- CPU path.
-
-        The lane keys extend the arena's block keys to lane granularity:
-        ``min(value, block_last) + owning_list * stride``, list-major and
-        globally non-decreasing (padding lanes clamp to their block's last
-        real value, so they tie with it instead of overtaking the next
-        partition).  One searchsorted over this array then subsumes BOTH
-        locate steps -- it finds the exact lane of NextGEQ(term, probe) for
-        every cursor of a batch, and a tied padding lane can never precede
-        the real hit.  Gated on ``cache_bytes`` (2 x 1 KiB per block).
-        """
-        if self._flat_keys is None and self._flat_ok is None:
-            a = self.arena
-            if 2 * a.n_blocks * BLOCK_VALS * 8 > self.cache_bytes:
-                self._flat_ok = False  # budget refused: per-call decode
-                return False
-            gaps = decode_block_rows(
-                a.lens[: a.n_blocks], a.data[: a.n_blocks],
-                backend=self.backend, interpret=self.interpret,
-            )
-            self.stats["kernel_calls"] += 1
-            self.stats["decoded_rows"] += a.n_blocks
-            vals = a.block_base[:, None] + np.cumsum(gaps + 1, axis=1)
-            # one sentinel lane so a past-the-end searchsorted result is
-            # still a valid gather index (masked via _lane_end afterwards)
-            self._flat_vals = np.append(vals.reshape(-1), -1)
-            list_of_block = a.part_list[a.part_of_block]
-            self._flat_keys = np.append(
-                np.minimum(
-                    vals + (list_of_block * a.stride)[:, None],
-                    a.block_keys[:, None],
-                ).reshape(-1),
-                np.iinfo(np.int64).max,
-            )
-            self._lane_end = a.list_blk_offsets * BLOCK_VALS
-            # the flat arrays spend part of the decoded-bytes budget: LRU
-            # entries (decoded candidate lists) only get the remainder
-            self._cache_nbytes += (
-                self._flat_vals.nbytes + self._flat_keys.nbytes
-            )
-            self._flat_ok = True
-        return bool(self._flat_ok)
-
-    def _rows_values(self, rows: np.ndarray) -> np.ndarray:
-        """[len(rows), 128] absolute docIDs of the given (unique) rows.
-
-        With the flat arena refused (over ``cache_bytes``), decoded rows go
-        through the byte-budgeted LRU under ``("row", r)`` keys -- the
-        dense row cache the fused CPU path promises.  Rows the budget
-        cannot hold are decoded, served, and dropped, with every drop
-        counted in ``stats["evictions"]`` like any other cache eviction.
-        """
-        a = self.arena
-        if self._flat_init():
-            return self._flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows]
-        rows = np.asarray(rows, dtype=np.int64)
-        out = np.empty((len(rows), BLOCK_VALS), np.int64)
-        miss_j: list[int] = []
-        for j, rr in enumerate(rows):
-            got = self._cache.get(("row", int(rr)))
-            if got is None:
-                miss_j.append(j)
-            else:
-                self._cache.move_to_end(("row", int(rr)))
-                self.stats["cache_hits"] += 1
-                out[j] = got
-        if miss_j:
-            miss_rows = rows[miss_j]
-            gaps = decode_block_rows(
-                a.lens[miss_rows], a.data[miss_rows], backend=self.backend,
-                interpret=self.interpret,
-            )
-            self.stats["kernel_calls"] += 1
-            self.stats["decoded_rows"] += len(miss_rows)
-            vals = a.block_base[miss_rows][:, None] + np.cumsum(
-                gaps + 1, axis=1
-            )
-            out[miss_j] = vals
-            # cache at most a budget's worth of this batch's rows (the
-            # most recently decoded): caching a miss set larger than the
-            # budget would evict every entry before it could ever be
-            # re-hit -- pure churn.  copy(): a view would pin the whole
-            # batch's vals base array and void the byte accounting.
-            cap = max(int(self.cache_bytes // (BLOCK_VALS * 8)), 1)
-            for j in range(max(len(miss_rows) - cap, 0), len(miss_rows)):
-                self._cache_put(("row", int(miss_rows[j])), vals[j].copy())
-        return out
-
-    def _search_np(self, terms, probes, with_rank: bool = True,
-                   trusted: bool = False):
-        """Host (numpy) fused pipeline: one searchsorted per batch.
-
-        Returns UNMASKED (value, rank, past): callers apply their own mask
-        (-1 fill for NextGEQ, ``& ~past`` for membership) so the membership
-        hot loop skips the rank arithmetic entirely (``with_rank=False``).
-        ``trusted`` skips the probe clip for probes that are known decoded
-        docIDs (the AND filter feeds candidates straight back in).
-
-        With the flat lane keys resident, locate AND in-partition resolve
-        collapse into a single searchsorted plus O(1) gathers per cursor.
-        Without them (arena over the byte budget), a two-level variant
-        locates blocks first and decodes only the unique touched rows.
-        """
-        a = self.arena
-        pc = probes if trusted else np.clip(probes, 0, a.stride - 1)
-        pk = pc + terms * a.stride
-        if self._flat_init():
-            self.stats["cache_hits"] += len(terms)
-            pos = np.searchsorted(self._flat_keys, pk, side="left")
-            past = pos >= self._lane_end[terms + 1]
-            value = self._flat_vals[pos]  # sentinel lane keeps pos in range
-            rank = None
-            if with_rank:
-                rows = np.minimum(pos, len(self._flat_keys) - 2) >> 7
-                rank = pos - (a.first_blk[a.part_of_block[rows]] << 7)
-            return value, rank, past
-        k = np.searchsorted(a.block_keys, pk, side="left")
-        past = k >= a.list_blk_offsets[terms + 1]
-        rows = np.minimum(k, a.n_blocks - 1)
-        pe = np.where(past, 0, pc)
-        urows, inv = np.unique(rows, return_inverse=True)
-        vals_u = self._rows_values(urows)  # [U, 128]
-        base_u = a.block_base[urows]
-        # rebased lane values are in [1, stride + 127]; stride2 clears them
-        stride2 = a.stride + BLOCK_VALS + 2
-        lane_keys = (
-            vals_u - base_u[:, None]
-            + np.arange(len(urows), dtype=np.int64)[:, None] * stride2
-        ).reshape(-1)
-        probe_keys = np.maximum(pe - base_u[inv], 1) + inv * stride2
-        pos = np.searchsorted(lane_keys, probe_keys, side="left")
-        value = vals_u.reshape(-1)[pos]
-        rank = None
-        if with_rank:
-            rank_in = pos - inv * BLOCK_VALS
-            part = a.part_of_block[rows]
-            rank = (rows - a.first_blk[part]) * BLOCK_VALS + rank_in
-        return value, rank, past
-
-    def _build_jax_fn(self):
-        import jax
-        import jax.numpy as jnp
-
-        from repro.kernels.vbyte_decode.kernel import (
-            META_BASE,
-            META_PROBE,
-            decode_search_blocks,
-        )
-        from repro.kernels.vbyte_decode.ref import decode_search_ref
-
-        a = self.arena
-        dev = a.dev
-        stride, nb = a.stride, a.n_blocks
-        backend, interpret = self.backend, self.interpret
-
-        def fn(terms, probes):
-            pc = jnp.clip(probes, 0, stride - 1)
-            k = jnp.searchsorted(
-                dev.block_keys, pc + terms * stride, side="left"
-            ).astype(jnp.int32)
-            past = k >= dev.list_blk_offsets[terms + 1]
-            rows = jnp.minimum(k, nb - 1)
-            pe = jnp.where(past, 0, pc)
-            lens_g, data_g = dev.lens[rows], dev.data[rows]
-            base_g = dev.block_base[rows]
-            if backend == "pallas":
-                meta = jnp.zeros((terms.shape[0], BLOCK_VALS), jnp.int32)
-                meta = meta.at[:, META_BASE].set(base_g)
-                meta = meta.at[:, META_PROBE].set(pe)
-                out = decode_search_blocks(
-                    lens_g, data_g, meta, interpret=interpret
-                )
-                value, rank_in = out[:, 0], out[:, 1]
-            else:
-                value, rank_in = decode_search_ref(lens_g, data_g, base_g, pe)
-            part = dev.part_of_block[rows]
-            rank = (rows - dev.first_blk[part]) * BLOCK_VALS + rank_in
-            return jnp.where(past, -1, value), jnp.where(past, -1, rank)
-
-        return jax.jit(fn)
-
-    def _search_jax(self, terms, probes):
-        """Device fused pipeline, jitted end-to-end over the resident arena.
-
-        Cursor counts are padded to power-of-two buckets so jit traces are
-        reused across batches; padding cursors probe list 0 at docID 0 and
-        are sliced away.  One host sync at the end (the result fetch).
-        """
-        import jax.numpy as jnp
-
-        n = len(terms)
-        bucket = max(BM, 1 << (max(n, 1) - 1).bit_length())
-        tp = np.zeros(bucket, np.int32)
-        pp = np.zeros(bucket, np.int32)
-        tp[:n] = terms
-        # clip BEFORE the int32 staging cast: an int64 probe >= 2^31 must
-        # resolve as past-the-end, not wrap negative and clip to probe 0
-        pp[:n] = np.clip(probes, 0, self.arena.stride - 1)
-        if self._jax_fn is None:
-            self._jax_fn = self._build_jax_fn()
-        value, rank = self._jax_fn(jnp.asarray(tp), jnp.asarray(pp))
-        return (
-            np.asarray(value)[:n].astype(np.int64),
-            np.asarray(rank)[:n].astype(np.int64),
-        )
-
     @property
     def _use_device(self) -> bool:
-        return self.backend in ("ref", "pallas") and self.arena.device_ok
+        if self.sharded is not None:
+            # all_device_ok is computed from the routing metadata alone --
+            # it must not force the per-shard arena slices to materialize
+            return self.backend in ("ref", "pallas") and self.sharded.all_device_ok
+        return self.core.use_device
+
+    def _shard_core(self, s: int) -> EngineCore:
+        """Per-shard EngineCores, materialized on first ROUTED dispatch
+        (the numpy backend never routes, so it never pays for them)."""
+        if not self._shard_cores:
+            self._shard_cores = [
+                EngineCore(
+                    sub, backend=self.backend, cache_parts=self.cache_parts,
+                    cache_bytes=self.cache_bytes, stats=self.stats,
+                )
+                for sub in self.sharded.shards
+            ]
+        return self._shard_cores[s]
+
+    def _fused_sharded(self, terms, probes, with_rank: bool = True,
+                       trusted: bool = False):
+        """Route cursors to owning shards, dispatch per shard, merge.
+
+        The merge is a pure scatter: values are absolute docIDs and ranks
+        are partition-local, so neither needs rebasing across shards.  The
+        ``shard_map`` path stages every shard's cursors into one [S, B]
+        int32 buffer (B = pow2 bucket of the fullest shard) and returns in
+        one device dispatch; the loop path serves each shard through its
+        own ``EngineCore`` (numpy or per-shard jit).
+        """
+        sa = self.sharded
+        n = len(terms)
+        self.stats["sharded_batches"] += 1
+        owner = sa.owner[terms]
+        local = sa.local_list[terms]
+        order = np.argsort(owner, kind="stable")
+        cuts = np.searchsorted(owner[order], np.arange(sa.n_shards + 1))
+        value = np.full(n, -1, np.int64)
+        rank = np.full(n, -1, np.int64) if with_rank else None
+        past = np.ones(n, bool)
+        if self._use_device and sa.mesh is not None:
+            if self._smap_fn is None:
+                from repro.core.shard import ShardMapSearch
+
+                self._smap_fn = ShardMapSearch(
+                    sa, backend=self.backend, interpret=self.interpret
+                )
+            v, r = self._smap_fn(local[order], probes[order], cuts)
+            value[order] = v
+            past[order] = v < 0
+            if with_rank:
+                rank[order] = r
+            return value, rank, past
+        for s in range(sa.n_shards):
+            idx = order[cuts[s] : cuts[s + 1]]
+            if len(idx) == 0:
+                continue
+            v, r, p = self._shard_core(s).fused_search(
+                local[idx], probes[idx], with_rank, trusted
+            )
+            value[idx] = v
+            past[idx] = p
+            if with_rank and r is not None:
+                rank[idx] = r
+        return value, rank, past
 
     def _fused_raw(self, terms, probes, with_rank: bool = True,
                    trusted: bool = False):
@@ -435,28 +333,32 @@ class QueryEngine:
             full = np.full(n, -1, np.int64)
             return full, full.copy(), np.ones(n, bool)
         self.stats["fused_batches"] += 1
-        if self._use_device:
-            if self.group and n > 1:
-                # group duplicate (term, probe) cursors: AND filters across
-                # queries sharing terms re-probe the same pairs, and each
-                # duplicate would gather + decode its block row again.  The
-                # clip below matches _search_jax's staging clip, so grouped
-                # and ungrouped dispatches see identical cursors.
-                key = (
-                    np.clip(probes, 0, self.arena.stride - 1)
-                    + terms * self.arena.stride
+        if self._use_device and self.group and n > 1:
+            # group duplicate (term, probe) cursors: AND filters across
+            # queries sharing terms re-probe the same pairs, and each
+            # duplicate would gather + decode its block row again.  Grouping
+            # runs BEFORE shard routing, so duplicates collapse across the
+            # whole batch whatever shard they land on.
+            g = group_cursors(terms, probes, self.arena.stride)
+            if g is not None:
+                idx, inv = g
+                self.stats["grouped_cursors"] += n - len(idx)
+                value, rank, past = self._fused_raw_unique(
+                    terms[idx], probes[idx], with_rank, trusted
                 )
-                uk, idx, inv = np.unique(
-                    key, return_index=True, return_inverse=True
-                )
-                if len(uk) < n:
-                    self.stats["grouped_cursors"] += n - len(uk)
-                    value, rank = self._search_jax(terms[idx], probes[idx])
-                    value, rank = value[inv], rank[inv]
-                    return value, rank, value < 0
-            value, rank = self._search_jax(terms, probes)
-            return value, rank, value < 0
-        return self._search_np(terms, probes, with_rank, trusted)
+                rank = rank[inv] if rank is not None else None
+                return value[inv], rank, past[inv]
+        return self._fused_raw_unique(terms, probes, with_rank, trusted)
+
+    def _fused_raw_unique(self, terms, probes, with_rank, trusted):
+        # sharding is a device-PLACEMENT concept: the numpy backend has no
+        # devices to place shards on, so it serves through the global flat
+        # mirror (bit-identical by construction, zero routing overhead).
+        # Device backends route per shard: shard_map when a mesh exists,
+        # a per-shard dispatch loop otherwise.
+        if self.sharded is not None and self._use_device:
+            return self._fused_sharded(terms, probes, with_rank, trusted)
+        return self.core.fused_search(terms, probes, with_rank, trusted)
 
     def search_batch(self, terms, probes) -> tuple[np.ndarray, np.ndarray]:
         """Fused NextGEQ: (values, local ranks) per (term, probe) cursor.
@@ -491,7 +393,6 @@ class QueryEngine:
         fetched = self._fetch(uparts)
         vals = [fetched[int(p)] for p in uparts]
         sizes = np.asarray([len(v) for v in vals], dtype=np.int64)
-        offsets = np.concatenate([[0], np.cumsum(sizes)])
         cat = np.concatenate(vals) if vals else np.zeros(0, np.int64)
         rank_per_val = np.repeat(np.arange(len(uparts), dtype=np.int64), sizes)
         keys = cat + rank_per_val * self.stride
@@ -554,22 +455,9 @@ class QueryEngine:
 
     def decode_list(self, t: int) -> np.ndarray:
         if self.fused:
-            key = ("list", int(t))
-            got = self._cache.get(key)
-            if got is not None:
-                self._cache.move_to_end(key)
-                self.stats["cache_hits"] += 1
-                return got
-            a = self.arena
-            r0 = int(a.list_blk_offsets[t])
-            r1 = int(a.list_blk_offsets[t + 1])
-            if r0 == r1:
-                return np.zeros(0, np.int64)
-            rows = np.arange(r0, r1, dtype=np.int64)
-            vals = self._rows_values(rows)
-            out = vals.reshape(-1)[a.lane_valid[r0:r1].reshape(-1)]
-            self._cache_put(key, out)
-            return out
+            # always the global core: list decode is a HOST mirror op (the
+            # candidate seed of the AND filter), not a device dispatch
+            return self.core.decode_list(t)
         sl = slice(
             int(self.index.list_part_offsets[t]),
             int(self.index.list_part_offsets[t + 1]),

@@ -1,0 +1,502 @@
+"""Sharded multi-device arena: list-hash partitioning over a jax Mesh.
+
+The block arena of ``repro.core.arena`` is one flat address space: every
+partition of every list transcoded into consecutive 512-byte Stream-VByte
+tiles with globally monotone locate keys.  That layout is exactly what makes
+sharding trivial -- a shard is just a SUBSET of lists, and because blocks of
+one list are consecutive rows, slicing the arena by owning list yields a
+smaller arena with the same invariants:
+
+* **list-hash partitioning**: list t lives on shard ``splitmix64(t) %
+  n_shards``.  A hash (not round-robin) keeps hot lists spread whatever the
+  id layout of the corpus, and makes ownership a pure function of the list
+  id -- no routing table to ship, any frontend can compute it.
+* **per-shard sub-arenas**: each shard's rows are gathered into a
+  ``DeviceArena`` of its own, with list ids remapped to shard-local
+  (ascending, so per-shard ``block_keys`` stay globally non-decreasing) and
+  the SAME global ``stride`` -- probe keys are therefore identical to the
+  unsharded ones, which is what makes 1-shard sharding bit-identical.
+  The ranked sidecar (freq blocks, norm codes, block-max bounds, idf)
+  slices the same way.
+* **routing + merge contract**: cursors route to ``owner[term]`` on the
+  host; results merge by PURE SCATTER, because the fused kernels emit
+  absolute docIDs (no rebasing) and partition-LOCAL ranks (a partition
+  lives wholly inside one shard).  f32 BM25 contributions are scalars.
+  Nothing crosses shards mid-query -- the only cross-shard operation is the
+  host-side scatter at the result boundary.
+* **placement**: with a ``jax.sharding.Mesh`` over a "shard" axis (one
+  device per shard), the per-shard tiles, sidecars, and ranked freq blocks
+  are stacked [S, ...] (padded to the largest shard) and placed with
+  ``NamedSharding(mesh, P("shard"))`` -- each device holds ONLY its shard.
+  Queries then run as ONE ``shard_map`` dispatch: every device executes the
+  same fused locate -> decode_search (or bm25 locate -> decode+score+match)
+  program over its resident shard.  Without a mesh (or on the numpy
+  backend) the shards are served as a host-side loop over per-shard
+  ``EngineCore``s -- same results, same routing, no device collective.
+
+An empty shard (no lists hash to it) is a valid degenerate sub-arena: its
+``list_blk_offsets`` are all zero, so every cursor staged to it (only
+padding cursors can be) resolves past-the-end.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.arena import DeviceArena, RankedSidecar
+from repro.kernels.vbyte_decode.kernel import BLOCK_BYTES, BLOCK_VALS
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+def shard_of_list(lists: np.ndarray, n_shards: int) -> np.ndarray:
+    """Owning shard per list id: splitmix64 finalizer mod n_shards.
+
+    A multiplicative bit-mix, not ``t % n_shards``: corpora routinely have
+    structured list ids (frequency-ordered, hash-bucketed) and a plain mod
+    would pile hot lists onto one shard.
+    """
+    x = np.asarray(lists, dtype=np.uint64)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> np.uint64(31))
+    return (x % np.uint64(n_shards)).astype(np.int64)
+
+
+def make_shard_mesh(n_shards: int):
+    """Mesh with a "shard" axis, one device per shard; None if the process
+    has too few jax devices (the engines then loop over shards instead)."""
+    import jax
+
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        return None
+    return jax.sharding.Mesh(np.asarray(devs[:n_shards]), ("shard",))
+
+
+@dataclass
+class ShardedArena:
+    """The global arena list-hash-split into per-shard sub-arenas.
+
+    Routing metadata (``owner`` / ``local_list`` / ``lists_of``) is built
+    eagerly -- it is O(n_lists).  The sub-arena SLICES (row gathers of the
+    whole arena) materialize lazily on first ``shards`` access: a numpy
+    engine built with ``shards=N`` never routes (see ``query_engine``), so
+    it must never pay for N arena copies either.
+    """
+
+    n_shards: int
+    arena: DeviceArena                  # the global (unsharded) arena
+    owner: np.ndarray                   # [n_lists] owning shard per list
+    local_list: np.ndarray              # [n_lists] id within the owner
+    lists_of: list[np.ndarray]          # per shard: global list ids, asc
+    mesh: object = None                 # Mesh over "shard", or None
+    _shards: list | None = field(default=None, repr=False, compare=False)
+    _stacked_dev: dict | None = field(default=None, repr=False, compare=False)
+
+    @classmethod
+    def build(cls, arena: DeviceArena, n_shards: int, mesh="auto"):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        n_lists = len(arena.list_blk_offsets) - 1
+        owner = shard_of_list(np.arange(n_lists, dtype=np.int64), n_shards)
+        local_list = np.zeros(n_lists, np.int64)
+        lists_of = []
+        for s in range(n_shards):
+            lists_s = np.flatnonzero(owner == s)
+            local_list[lists_s] = np.arange(len(lists_s), dtype=np.int64)
+            lists_of.append(lists_s)
+        if mesh == "auto":
+            mesh = make_shard_mesh(n_shards)
+        elif mesh is not None:
+            if "shard" not in getattr(mesh, "axis_names", ()):
+                raise ValueError("shard_mesh needs a 'shard' axis")
+            # the SHARD AXIS specifically must be 1:1 with the shards --
+            # the [S, ...] stacking splits dim 0 over it; a mesh whose
+            # total device count merely multiplies out to n_shards would
+            # stage S rows over a smaller axis and misroute
+            axis = int(dict(mesh.shape)["shard"])
+            if axis != n_shards:
+                raise ValueError(
+                    f"mesh 'shard' axis is {axis}, need {n_shards} (1:1)"
+                )
+        return cls(
+            n_shards=n_shards,
+            arena=arena,
+            owner=owner,
+            local_list=local_list,
+            lists_of=lists_of,
+            mesh=mesh,
+        )
+
+    @property
+    def shards(self) -> list[DeviceArena]:
+        """Per-shard sub-arenas (materialized on first access)."""
+        if self._shards is None:
+            self._shards = [
+                _slice_arena(self.arena, lists_s, self.local_list)
+                for lists_s in self.lists_of
+            ]
+        return self._shards
+
+    @property
+    def all_device_ok(self) -> bool:
+        """Per-shard int32-key feasibility, WITHOUT materializing slices."""
+        nl_m = max((len(f) for f in self.lists_of), default=0)
+        return bool((nl_m + 1) * self.arena.stride < 2**31 - BLOCK_VALS - 2)
+
+    def shard_nbytes(self) -> list[int]:
+        return [sub.nbytes() for sub in self.shards]
+
+    # ------------------------------------------------------------------
+    # stacked [S, ...] placement for the shard_map dispatch
+    # ------------------------------------------------------------------
+    def stacked(self) -> dict:
+        """Host-side [S, ...] stacking, padded to the largest shard.
+
+        Padding rows are benign by construction: lens=1/data=0 decodes to
+        zeros, ``block_keys`` pads with int32 max (no probe key can reach
+        it -- ``device_ok`` guarantees probe keys fit 31 bits), and
+        ``list_blk_offsets`` pads by repeating its last value so any
+        staged-padding cursor resolves past-the-end.
+
+        NOT cached: the only consumer is ``stacked_dev`` (which caches the
+        DEVICE copies); keeping the padded host stacking alive would pin a
+        redundant arena-sized buffer for the engine's lifetime.
+        """
+        S = self.n_shards
+        nb_m = max(1, max(sub.n_blocks for sub in self.shards))
+        np_m = max(1, max(len(sub.first_blk) for sub in self.shards))
+        nl_m = max(1, max(len(f) for f in self.lists_of))
+        st = {
+            "lens": np.ones((S, nb_m, BLOCK_VALS), np.int32),
+            "data": np.zeros((S, nb_m, BLOCK_BYTES), np.uint8),
+            "block_base": np.zeros((S, nb_m), np.int32),
+            "block_keys": np.full((S, nb_m), INT32_MAX, np.int32),
+            "part_of_block": np.zeros((S, nb_m), np.int32),
+            "first_blk": np.zeros((S, np_m), np.int32),
+            "list_blk_offsets": np.zeros((S, nl_m + 1), np.int32),
+        }
+        ranked = self.arena.ranked is not None
+        if ranked:
+            st["freq_lens"] = np.ones((S, nb_m, BLOCK_VALS), np.int32)
+            st["freq_data"] = np.zeros((S, nb_m, BLOCK_BYTES), np.uint8)
+            st["norm_q"] = np.zeros((S, nb_m, BLOCK_VALS), np.uint8)
+            st["idf"] = np.zeros((S, nl_m), np.float32)
+            st["lob"] = np.zeros((S, nb_m), np.int32)
+        for s, sub in enumerate(self.shards):
+            nb, nl = sub.n_blocks, len(self.lists_of[s])
+            st["lens"][s, :nb] = sub.lens[:nb]
+            st["data"][s, :nb] = sub.data[:nb]
+            st["block_base"][s, :nb] = sub.block_base.astype(np.int32)
+            st["block_keys"][s, :nb] = sub.block_keys.astype(np.int32)
+            st["part_of_block"][s, :nb] = sub.part_of_block.astype(np.int32)
+            st["first_blk"][s, : len(sub.first_blk)] = sub.first_blk.astype(np.int32)
+            lbo = sub.list_blk_offsets.astype(np.int32)
+            st["list_blk_offsets"][s, : nl + 1] = lbo
+            st["list_blk_offsets"][s, nl + 1 :] = np.int32(nb)
+            if ranked:
+                r = sub.ranked
+                st["freq_lens"][s, :nb] = r.freq_lens[:nb]
+                st["freq_data"][s, :nb] = r.freq_data[:nb]
+                st["norm_q"][s, :nb] = r.norm_q
+                st["idf"][s, :nl] = r.idf
+                st["lob"][s, :nb] = sub.part_list[sub.part_of_block].astype(np.int32)
+        return st
+
+    def stacked_dev(self) -> dict:
+        """The stacked arrays placed shard-per-device with NamedSharding."""
+        if self._stacked_dev is not None:
+            return self._stacked_dev
+        if self.mesh is None:
+            raise ValueError("stacked_dev() needs a mesh")
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        sharding = NamedSharding(self.mesh, PartitionSpec("shard"))
+        self._stacked_dev = {
+            k: jax.device_put(v, sharding) for k, v in self.stacked().items()
+        }
+        # the host sub-arena slices existed only to feed the stacking: on
+        # the mesh path nothing reads them after the device copies exist,
+        # so release them (the property rebuilds on demand if asked)
+        self._shards = None
+        return self._stacked_dev
+
+
+def _slice_arena(
+    a: DeviceArena, lists_s: np.ndarray, local_list: np.ndarray
+) -> DeviceArena:
+    """Sub-arena of the lists in ``lists_s`` (ascending global ids).
+
+    Pure gathers: the payload bytes, sidecars, and lane masks of a shard
+    are row-for-row the global ones, so a 1-shard slice reproduces the
+    global arena exactly.  Only the locate keys are recomputed -- same
+    global ``stride``, shard-LOCAL list ids (ascending with the global
+    ids, so the keys stay globally non-decreasing within the shard).
+    """
+    in_shard = np.zeros(len(a.list_blk_offsets) - 1, bool)
+    in_shard[lists_s] = True
+    list_of_block = a.part_list[a.part_of_block]
+    rows_s = np.flatnonzero(in_shard[list_of_block])
+    parts_s = np.flatnonzero(in_shard[a.part_list])
+    n_blk_s = a.n_blk[parts_s]
+    first_blk_s = np.zeros(len(parts_s), np.int64)
+    if len(parts_s):
+        first_blk_s[1:] = np.cumsum(n_blk_s)[:-1]
+    part_list_s = local_list[a.part_list[parts_s]]
+    part_of_block_s = np.repeat(np.arange(len(parts_s), dtype=np.int64), n_blk_s)
+    block_last = a.block_keys[rows_s] - list_of_block[rows_s] * a.stride
+    blk_counts = a.list_blk_offsets[lists_s + 1] - a.list_blk_offsets[lists_s]
+    list_blk_offsets_s = np.zeros(len(lists_s) + 1, np.int64)
+    np.cumsum(blk_counts, out=list_blk_offsets_s[1:])
+    ranked = None
+    if a.ranked is not None:
+        r = a.ranked
+        ranked = RankedSidecar(
+            freq_lens=r.freq_lens[rows_s],
+            freq_data=r.freq_data[rows_s],
+            norm_q=r.norm_q[rows_s],
+            block_max_q=r.block_max_q[rows_s],
+            bound_scale=r.bound_scale,
+            idf=r.idf[lists_s],
+            list_ub=r.list_ub[lists_s],
+            kmin=r.kmin,
+            kstep=r.kstep,
+            norm_table=r.norm_table,
+            params=r.params,
+        )
+    return DeviceArena(
+        lens=a.lens[rows_s],
+        data=a.data[rows_s],
+        block_base=a.block_base[rows_s],
+        block_keys=block_last + part_list_s[part_of_block_s] * a.stride,
+        lane_valid=a.lane_valid[rows_s],
+        part_of_block=part_of_block_s,
+        first_blk=first_blk_s,
+        n_blk=n_blk_s,
+        sizes=a.sizes[parts_s],
+        bases=a.bases[parts_s],
+        part_list=part_list_s,
+        list_blk_offsets=list_blk_offsets_s,
+        stride=a.stride,
+        n_blocks=len(rows_s),
+        device_ok=bool((len(lists_s) + 1) * a.stride < 2**31 - BLOCK_VALS - 2),
+        ranked=ranked,
+    )
+
+
+# --------------------------------------------------------------------------
+# shard_map dispatchers: one device program over all shards at once
+# --------------------------------------------------------------------------
+class _ShardMapDispatch:
+    """Shared staging/merge for the shard_map dispatchers.
+
+    ``__call__(local_terms, probes, cuts)`` takes cursors PRE-SORTED by
+    owning shard (``cuts`` delimiting each shard's run, as produced by the
+    engines' stable argsort over owners), stages them into [S, B] int32
+    buffers (B = pow2 bucket of the fullest shard; padding cursors probe
+    local list 0 at docID 0), runs ONE jitted shard_map dispatch, and
+    slices each shard's run back out.  The int32 probe clip happens on the
+    host, before staging -- same subtlety as the unsharded path.
+    """
+
+    def __init__(
+        self,
+        sharded: ShardedArena,
+        backend: str,
+        interpret: bool,
+        max_bucket: int | None = None,
+    ):
+        if sharded.mesh is None:
+            raise ValueError("shard_map dispatch needs a mesh")
+        self.sharded = sharded
+        self.backend = backend
+        self.interpret = interpret
+        self.stride = sharded.arena.stride
+        # per-shard staging cap PER DISPATCH: batches whose fullest shard
+        # exceeds it run in rounds, so gathered tiles stay bounded and jit
+        # traces are reused (same role as TopKEngine.MAX_BUCKET unsharded)
+        self.max_bucket = max_bucket
+        self._fn = None
+        self._sharding = None
+
+    def _stage(self, local_terms, probes, cuts):
+        from repro.core.engine_core import pow2_bucket
+
+        S = self.sharded.n_shards
+        counts = np.diff(cuts)
+        B = pow2_bucket(int(counts.max()) if len(counts) else 1)
+        tp = np.zeros((S, B), np.int32)
+        pp = np.zeros((S, B), np.int32)
+        for s in range(S):
+            sl = slice(int(cuts[s]), int(cuts[s + 1]))
+            tp[s, : counts[s]] = local_terms[sl]
+            # clip BEFORE the int32 staging cast (probes >= 2^31 must
+            # resolve past-the-end after the merge, not wrap negative)
+            pp[s, : counts[s]] = np.clip(probes[sl], 0, self.stride - 1)
+        return tp, pp, counts
+
+    def _put(self, arr):
+        import jax
+
+        if self._sharding is None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            self._sharding = NamedSharding(self.sharded.mesh, PartitionSpec("shard"))
+        return jax.device_put(arr, self._sharding)
+
+    def _merge(self, outs, cuts, counts):
+        merged = []
+        for o in outs:
+            o = np.asarray(o)
+            m = np.empty(int(cuts[-1]), o.dtype)
+            for s in range(self.sharded.n_shards):
+                m[int(cuts[s]) : int(cuts[s + 1])] = o[s, : counts[s]]
+            merged.append(m)
+        return merged
+
+    def _body(self, arrs: dict, terms, probes):
+        raise NotImplementedError
+
+    def _build(self):
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        def wrapped(arrs, terms, probes):
+            # one shard per device: strip / re-add the local shard axis
+            local = {k: v[0] for k, v in arrs.items()}
+            out = self._body(local, terms[0], probes[0])
+            return tuple(o[None] for o in out)
+
+        smap = jax.shard_map(
+            wrapped,
+            mesh=self.sharded.mesh,
+            in_specs=(P("shard"), P("shard"), P("shard")),
+            out_specs=P("shard"),
+            check_vma=False,
+        )
+        return jax.jit(smap)
+
+    def _dispatch(self, local_terms, probes, cuts):
+        tp, pp, counts = self._stage(local_terms, probes, cuts)
+        if self._fn is None:
+            self._fn = self._build()
+        dev = self.sharded.stacked_dev()
+        outs = self._fn(dev, self._put(tp), self._put(pp))
+        return self._merge(outs, cuts, counts)
+
+    def __call__(self, local_terms, probes, cuts):
+        counts = np.diff(cuts)
+        mb = self.max_bucket
+        if mb is None or len(counts) == 0 or int(counts.max()) <= mb:
+            return self._dispatch(local_terms, probes, cuts)
+        # round r takes cursors [cuts[s] + r*mb, +mb) of EVERY shard, so no
+        # dispatch stages more than max_bucket rows per shard
+        n = int(cuts[-1])
+        outs = None
+        for r in range(-(-int(counts.max()) // mb)):
+            lo = np.minimum(cuts[:-1] + r * mb, cuts[1:])
+            hi = np.minimum(lo + mb, cuts[1:])
+            idx = np.concatenate(
+                [np.arange(int(a), int(b)) for a, b in zip(lo, hi)]
+            )
+            sub_cuts = np.zeros(len(cuts), np.int64)
+            np.cumsum(hi - lo, out=sub_cuts[1:])
+            res = self._dispatch(local_terms[idx], probes[idx], sub_cuts)
+            if outs is None:
+                outs = [np.empty(n, o.dtype) for o in res]
+            for o, ro in zip(outs, res):
+                o[idx] = ro
+        return outs
+
+
+class ShardMapSearch(_ShardMapDispatch):
+    """Fused locate -> decode_search over every shard in one dispatch.
+
+    Returns (value, rank) int64 arrays aligned with the sorted cursor
+    order; past-the-end cursors are pre-masked to -1 (same contract as the
+    unsharded device pipeline).
+    """
+
+    def _body(self, arrs, terms, probes):
+        import jax.numpy as jnp
+
+        from repro.core.engine_core import decode_search_graph, locate_graph
+
+        rows, pe, past = locate_graph(
+            arrs["block_keys"],
+            arrs["list_blk_offsets"],
+            self.stride,
+            arrs["block_keys"].shape[0],
+            terms,
+            probes,
+        )
+        value, rank_in = decode_search_graph(
+            arrs["lens"][rows],
+            arrs["data"][rows],
+            arrs["block_base"][rows],
+            pe,
+            self.backend,
+            self.interpret,
+        )
+        part = arrs["part_of_block"][rows]
+        rank = (rows - arrs["first_blk"][part]) * BLOCK_VALS + rank_in
+        return jnp.where(past, -1, value), jnp.where(past, -1, rank)
+
+    def __call__(self, local_terms, probes, cuts):
+        value, rank = super().__call__(local_terms, probes, cuts)
+        return value.astype(np.int64), rank.astype(np.int64)
+
+
+class ShardMapBM25(_ShardMapDispatch):
+    """Fused bm25 locate -> decode+score+match over every shard at once.
+
+    Returns f32 contributions aligned with the sorted cursor order (0.0
+    past the end / non-member, as the unsharded device pipeline).
+    """
+
+    def __init__(
+        self, sharded, backend, interpret, k1p1: float, max_bucket: int | None = None
+    ):
+        if sharded.arena.ranked is None:
+            raise ValueError("ShardMapBM25 needs a ranked arena")
+        super().__init__(sharded, backend, interpret, max_bucket=max_bucket)
+        self.k1p1 = float(k1p1)
+        self.norm_table = sharded.arena.ranked.norm_table
+
+    def _body(self, arrs, terms, probes):
+        import jax.numpy as jnp
+
+        from repro.core.engine_core import locate_graph
+        from repro.kernels.bm25_score.ops import score_probe_graph
+
+        rows, pe, past = locate_graph(
+            arrs["block_keys"],
+            arrs["list_blk_offsets"],
+            self.stride,
+            arrs["block_keys"].shape[0],
+            terms,
+            probes,
+        )
+        contrib = score_probe_graph(
+            arrs["lens"][rows],
+            arrs["data"][rows],
+            arrs["freq_lens"][rows],
+            arrs["freq_data"][rows],
+            arrs["norm_q"][rows].astype(jnp.int32),
+            arrs["block_base"][rows],
+            pe,
+            arrs["idf"][arrs["lob"][rows]],
+            self.norm_table,
+            self.k1p1,
+            self.backend,
+            self.interpret,
+        )
+        return (jnp.where(past, jnp.float32(0.0), contrib),)
+
+    def __call__(self, local_terms, probes, cuts):
+        (contrib,) = super().__call__(local_terms, probes, cuts)
+        return contrib

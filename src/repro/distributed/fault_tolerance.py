@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Iterator
+from typing import Any, Callable
 
 from repro.checkpoint import CheckpointManager
 
@@ -77,7 +77,6 @@ class FaultTolerantRunner:
     ):
         """``batches(step)`` must be resumable by step (deterministic data)."""
         step = 0
-        last_saved = -1
         if self.manager.latest_step() is None:
             # step-0 checkpoint: a crash before the first save restarts from
             # the true initial state, not a half-mutated in-memory one
@@ -100,7 +99,6 @@ class FaultTolerantRunner:
                     self.stats.steps_completed += 1
                     if step % self.save_every == 0:
                         self.manager.save(step, state)
-                        last_saved = step
             except SimulatedFailure:
                 self.stats.restarts += 1
                 if self.stats.restarts > self.max_restarts:

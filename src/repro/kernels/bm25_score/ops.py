@@ -67,6 +67,38 @@ def _fmeta(idf_rows: np.ndarray, k1p1) -> np.ndarray:
     return fmeta
 
 
+def score_probe_graph(
+    lens_g, data_g, flens_g, fdata_g, norms_g, base_g, pe, idf_g, table,
+    k1p1, backend: str, interpret: bool,
+):
+    """Fused decode+score+match over GATHERED rows, inside a jit graph.
+
+    The kernel-dispatch epilogue shared by ``TopKEngine``'s jitted
+    pipeline and the ``ShardMapBM25`` body (``core.shard``): pallas stages
+    (base, probe) / (idf, k1+1) into the META/FMETA lanes, ref calls the
+    jnp oracle.  Bit-identical across backends; lives ONCE, here.
+    """
+    if backend == "pallas":
+        meta = jnp.zeros((pe.shape[0], BLOCK_VALS), jnp.int32)
+        meta = meta.at[:, META_BASE].set(base_g)
+        meta = meta.at[:, META_PROBE].set(pe)
+        fmeta = jnp.zeros((pe.shape[0], BLOCK_VALS), jnp.float32)
+        fmeta = fmeta.at[:, FMETA_IDF].set(idf_g)
+        fmeta = fmeta.at[:, FMETA_K1P1].set(jnp.float32(k1p1))
+        tile = jnp.broadcast_to(
+            jnp.asarray(table, jnp.float32), (BM, NORM_LEVELS)
+        )
+        out = bm25_score_probe_blocks(
+            lens_g, data_g, flens_g, fdata_g, norms_g, tile, meta, fmeta,
+            interpret=interpret,
+        )
+        return out[:, 0]
+    return score_probe_ref(
+        lens_g, data_g, flens_g, fdata_g, norms_g, base_g, pe, idf_g,
+        jnp.asarray(table, jnp.float32), jnp.float32(k1p1),
+    )
+
+
 def score_rows_np(flens, fdata, norms, idf_rows, table, k1p1):
     """Numpy mirror of ``bm25_score_blocks``: [nr, 128] float32 scores."""
     tf = (decode_blocks_np(flens, fdata) + 1).astype(np.float32)

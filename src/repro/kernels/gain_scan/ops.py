@@ -13,7 +13,6 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.costs import DEFAULT_F
-from repro.core.partition import optimal_partitioning
 
 from .kernel import BLOCK, gain_scan
 from .ref import gain_scan_ref

@@ -9,12 +9,12 @@ Pallas kernel (interpret mode) when no accelerator is present.  Passing
 
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-
-from repro.core.costs import bit_length_np
 
 from .kernel import (
     BLOCK_BYTES,
@@ -29,7 +29,19 @@ from .ref import decode_blocks_ref, decode_search_ref
 
 
 def default_backend() -> str:
-    """"pallas" (compiled) on an accelerator, vectorized numpy otherwise."""
+    """"pallas" (compiled) on an accelerator, vectorized numpy otherwise.
+
+    ``REPRO_BACKEND=numpy|ref|pallas`` overrides the choice -- the knob the
+    CI matrix uses to run the whole suite through the jitted device
+    pipeline (``ref``) on CPU-only runners.
+    """
+    env = os.environ.get("REPRO_BACKEND", "").strip()
+    if env:
+        if env not in ("numpy", "ref", "pallas"):
+            raise ValueError(
+                f"REPRO_BACKEND={env!r}: expected numpy, ref, or pallas"
+            )
+        return env
     try:
         if jax.default_backend() in ("tpu", "gpu"):
             return "pallas"
@@ -56,6 +68,10 @@ def pack_blocks(values: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
     Returns (lens [nb,128] int32, data [nb,512] uint8, n_values).  Blocks are
     padded to a multiple of BM * BLOCK_VALS values (pad value 0 -> len 1).
     """
+    # lazy: repro.core.costs pulls in the repro.core package, whose engines
+    # import back into this module (a cycle when ops is imported first)
+    from repro.core.costs import bit_length_np
+
     values = np.asarray(values, dtype=np.uint32)
     n = values.size
     per_super = BM * BLOCK_VALS

@@ -61,7 +61,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_name: str, out_dir: pathlib.Pat
             t_compile = time.time() - t0 - t_lower
             summary = summarize_compiled(lowered, compiled, n_dev)
             mem = compiled.memory_analysis()
-            print(compiled.memory_analysis())
+            print(mem)
             cost = compiled.cost_analysis()
             print({k: v for k, v in (cost[0] if isinstance(cost, list) else cost).items()
                    if k in ("flops", "bytes accessed")})

@@ -19,6 +19,12 @@ block-max sidecar, and queries run through the Block-Max MaxScore/WAND
 ``repro.ranked.TopKEngine``.  ``--compare-scalar`` then verifies every
 batch against the exhaustive-scoring oracle (identical top-k, ties by
 docID) and reports the speedup.
+
+``--shards N`` list-hash-partitions the arena into N shards (DESIGN.md §6)
+and routes every cursor batch per shard: one device per shard under
+``shard_map`` when the process has enough jax devices, a host-side loop of
+per-shard engines otherwise.  Results are identical to unsharded serving
+-- the merge is a pure scatter at the result boundary.
 """
 
 from __future__ import annotations
@@ -52,6 +58,25 @@ def serve_batches(
     return results, latencies
 
 
+def _print_shard_layout(engine) -> None:
+    sa = engine.sharded
+    if sa is None:
+        return
+    sizes = [len(f) for f in sa.lists_of]
+    mode = (
+        f"shard_map over {sa.mesh.devices.size} devices"
+        if sa.mesh is not None else "host loop (too few devices for a mesh)"
+    )
+    # sizes from ROUTING METADATA only: forcing sa.shards here would
+    # materialize the per-shard arena slices even on backends (numpy)
+    # that never route -- exactly what ShardedArena keeps lazy
+    lbo = engine.arena.list_blk_offsets
+    blocks = [int((lbo[f + 1] - lbo[f]).sum()) for f in sa.lists_of]
+    per_blk = engine.arena.nbytes() / max(engine.arena.n_blocks, 1)
+    print(f"[serve] shards: {sa.n_shards} ({mode}); lists/shard {sizes}; "
+          f"~MB/shard {[round(b * per_blk / 1e6, 1) for b in blocks]}")
+
+
 def serve_ranked(args, rng, corpus) -> None:
     """The --ranked endpoint: batched BM25 top-k over the freq arena."""
     from repro.ranked.bm25 import exhaustive_topk
@@ -71,7 +96,8 @@ def serve_ranked(args, rng, corpus) -> None:
         [int(t) for t in q]
         for q in make_queries(rng, args.n_lists, args.queries, args.arity)
     ]
-    engine = TopKEngine(idx, backend=args.backend)
+    engine = TopKEngine(idx, backend=args.backend, shards=args.shards)
+    _print_shard_layout(engine)
     engine.topk_batch(queries[: args.batch], args.topk)  # warm mirror + jit
 
     results: list = []
@@ -126,12 +152,20 @@ def main() -> None:
                          "instead of boolean AND")
     ap.add_argument("--topk", type=int, default=10,
                     help="k for --ranked serving")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="list-hash-partition the arena into N shards "
+                         "(DESIGN.md §6): shard_map over a device mesh "
+                         "when possible, host-side shard loop otherwise")
     ap.add_argument("--compare-scalar", action="store_true",
                     help="also time the per-query NextGEQ loop (or, with "
                          "--ranked, the exhaustive-scoring oracle) and "
                          "verify the batched results against it")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.shards is not None and not args.fused and not args.ranked:
+        # the ranked engine has no fused= knob; only boolean-AND serving
+        # needs the fused pipeline for sharding
+        ap.error("--shards requires the fused engine (drop --no-fused)")
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -159,7 +193,9 @@ def main() -> None:
         [int(t) for t in q]
         for q in make_queries(rng, args.n_lists, args.queries, args.arity)
     ]
-    engine = QueryEngine(idx, backend=args.backend, fused=args.fused)
+    engine = QueryEngine(idx, backend=args.backend, fused=args.fused,
+                         shards=args.shards)
+    _print_shard_layout(engine)
     # warm-up batch: triggers the one-time arena transcode + jit on device
     engine.intersect_batch(queries[: args.batch])
 

@@ -16,7 +16,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import tempfile
-from functools import partial
 
 import numpy as np
 
@@ -48,7 +47,6 @@ def _recsys_setup(cfg, batch: int, seed: int):
     from repro.data.recsys_data import make_ctr_batch
     from repro.models import recsys as R
 
-    rng = np.random.default_rng(seed)
     params = R.init_params(jax.random.PRNGKey(seed), cfg)
 
     def batches(step):

@@ -17,13 +17,12 @@ functional/stateless (noted in DESIGN.md as an adaptation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .common import dense_init, layer_norm, split_keys
+from .common import dense_init, layer_norm
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any
 
 import jax
@@ -663,7 +662,6 @@ def prefill_step(params, tokens, cfg: TransformerConfig):
 
 def serve_step(params, cache, token, cache_pos, cfg: TransformerConfig):
     """One decode step.  cache: [L,2,B,Sc,KV,D]; token: [B] int32."""
-    B = token.shape[0]
     positions = jnp.full((1,), cache_pos, jnp.int32)
     x = params["embed"][token[:, None]].astype(cfg.compute_dtype)
 
@@ -686,8 +684,6 @@ def serve_step(params, cache, token, cache_pos, cfg: TransformerConfig):
 
 def input_specs(cfg: TransformerConfig, shape_kind: str, seq_len: int, batch: int):
     """ShapeDtypeStructs + PartitionSpecs for each entry point."""
-    import numpy as np
-
     tok = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
     if shape_kind == "train":
         return {"tokens": tok, "labels": tok}

@@ -40,19 +40,32 @@ flip near-tied docs -- breaking the "identical top-k" contract that makes
 the exhaustive oracle a usable correctness harness.  The fused
 ``bm25_score_probe`` pipeline (jitted locate -> gather -> decode+score+match
 over the resident arena) serves the point-lookup ``contributions()`` API.
+
+The flat lane mirror, the lane-key padding clamp, the pow2 staging, and the
+int32 probe clip all come from the shared ``core.engine_core.EngineCore``
+(the same machinery ``QueryEngine`` runs on).  With ``shards=N`` the
+contributions hot path routes (term, doc) cursors to per-shard sub-arenas
+(``core.shard.ShardedArena``) and runs the fused bm25 kernel per shard --
+under one ``shard_map`` dispatch when a mesh with one device per shard
+exists -- while the pruning structures (bounds, RMQ, candidate generation)
+stay host-global: only f32 contributions cross the merge boundary, so the
+sharded engine is bit-identical to the unsharded one.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.kernels.bm25_score.ops import bm25_score_rows
-from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
-from repro.kernels.vbyte_decode.ops import (
-    decode_block_rows,
-    default_backend,
-    default_interpret,
+from repro.core.engine_core import (
+    EngineCore,
+    build_locate_dev,
+    group_cursors,
+    pow2_bucket,
+    stage_cursors,
 )
+from repro.kernels.bm25_score.ops import bm25_score_rows
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
+from repro.kernels.vbyte_decode.ops import default_interpret
 from repro.ranked.bm25 import topk_select
 
 
@@ -75,10 +88,16 @@ class TopKEngine:
         rows through the fused kernel every batch -- the HBM-resident
         accelerator configuration.  "auto" picks "kernel" on a real
         accelerator, "mirror" elsewhere.
+    shards: list-hash-partition the arena and route the device
+        contributions dispatch per shard (see module docstring).  None =
+        unsharded.
+    shard_mesh: "auto" | None | a Mesh with a "shard" axis, as in
+        ``QueryEngine``.
     """
 
     def __init__(self, index, backend: str = "auto", seed_blocks: int = 4,
-                 resident: str = "auto"):
+                 resident: str = "auto", shards: int | None = None,
+                 shard_mesh="auto"):
         self.index = index
         self.arena = index.arena
         if self.arena.ranked is None:
@@ -87,25 +106,6 @@ class TopKEngine:
                 "(build_partitioned_index(lists, freqs=...))"
             )
         self.ranked = self.arena.ranked
-        self.backend = default_backend() if backend == "auto" else backend
-        self.interpret = default_interpret()
-        if resident == "auto":
-            resident = "mirror" if default_interpret() else "kernel"
-        if resident not in ("mirror", "kernel"):
-            raise ValueError(f"unknown resident mode {resident!r}")
-        self.resident = resident
-        self.seed_blocks = int(seed_blocks)
-        a, r = self.arena, self.ranked
-        self.k1p1 = np.float32(r.params.k1 + 1.0)
-        self.lob = a.part_list[a.part_of_block]  # owning list per block
-        self.bounds = r.block_bounds().astype(np.float64)  # [nb]
-        self.list_ub = r.list_ub.astype(np.float64)        # [n_lists]
-        # host flat mirror (lazy): per-lane docIDs / keys / contract scores
-        self._flat_vals: np.ndarray | None = None
-        self._flat_keys: np.ndarray | None = None
-        self._flat_scores: np.ndarray | None = None
-        self._lane_end: np.ndarray | None = None
-        self._jax_fn = None
         self.stats = {
             "batches": 0,
             "seed_pairs": 0,
@@ -116,56 +116,63 @@ class TopKEngine:
             "blocks_kept": 0,
             "blocks_total": 0,
         }
+        a, r = self.arena, self.ranked
+        self.k1p1 = np.float32(r.params.k1 + 1.0)
+        self.lob = a.part_list[a.part_of_block]  # owning list per block
+        self.bounds = r.block_bounds().astype(np.float64)  # [nb]
+        self.list_ub = r.list_ub.astype(np.float64)        # [n_lists]
+        if resident == "auto":
+            resident = "mirror" if default_interpret() else "kernel"
+        if resident not in ("mirror", "kernel"):
+            raise ValueError(f"unknown resident mode {resident!r}")
+        self.resident = resident
+        self.seed_blocks = int(seed_blocks)
+        # shared flat-mirror/locate machinery: the doc/key mirror is a HOST
+        # structure, decoded with the numpy mirror whatever the scoring
+        # backend (values are exact ints); the per-lane impact mirror rides
+        # along under resident="mirror"
+        self.core = EngineCore(
+            a, backend=backend, cache_bytes=None, mirror_backend="numpy",
+            lane_scores_fn=(
+                self._lane_scores if resident == "mirror" else None
+            ),
+            stats=self.stats,
+        )
+        self.backend = self.core.backend
+        self.interpret = self.core.interpret
+        self._jax_fn = None
+        self.sharded = None
+        self._shard_fns: list = []
+        self._smap_fn = None
+        if shards is not None:
+            from repro.core.shard import ShardedArena
+
+            self.sharded = ShardedArena.build(
+                self.arena, int(shards), mesh=shard_mesh
+            )
+            self._shard_fns = [None] * self.sharded.n_shards
+
+    def _lane_scores(self) -> np.ndarray:
+        """The impact mirror: every lane scored ONCE through the chosen
+        backend's kernel (bit-identical across backends)."""
+        a, r = self.arena, self.ranked
+        return bm25_score_rows(
+            r.freq_lens, r.freq_data, r.norm_q,
+            np.arange(a.n_blocks, dtype=np.int64), r.idf[self.lob],
+            r.norm_table, self.k1p1,
+            backend=self.backend, interpret=self.interpret,
+        )
 
     # ------------------------------------------------------------------
-    # host flat mirror: decoded lane docIDs + per-lane contract scores
+    # host flat mirror (shared EngineCore): decoded docIDs + lane scores
     # ------------------------------------------------------------------
     def _flat_init(self) -> None:
-        """Decode the arena once into flat (docIDs, keys, lane scores).
-
-        Keys are the lane-granular extension of ``block_keys`` (same
-        construction as ``QueryEngine._flat_init``); scores are the f32
-        contract value of every lane (idf is a function of the owning list,
-        so they are fully precomputable).  Sentinel lane: value -1, score 0,
-        key int64 max -- a past-the-end searchsorted result stays a valid
-        gather that can never match a probe.
-        """
-        if self._flat_keys is not None:
-            return
-        a, r = self.arena, self.ranked
-        nb = a.n_blocks
-        # the doc/key mirror is a HOST structure: decode it with the numpy
-        # mirror whatever the scoring backend (values are exact ints)
-        gaps = decode_block_rows(a.lens[:nb], a.data[:nb], backend="numpy")
-        vals = a.block_base[:, None] + np.cumsum(gaps + 1, axis=1)
-        self._flat_vals = np.append(vals.reshape(-1), -1)
-        list_of_block = self.lob
-        self._flat_keys = np.append(
-            np.minimum(
-                vals + (list_of_block * a.stride)[:, None],
-                a.block_keys[:, None],
-            ).reshape(-1),
-            np.iinfo(np.int64).max,
-        )
-        self._lane_end = a.list_blk_offsets * BLOCK_VALS
-        if self.resident == "mirror" and nb:
-            # the impact mirror: every lane scored ONCE through the chosen
-            # backend's kernel (bit-identical across backends)
-            scores = bm25_score_rows(
-                r.freq_lens, r.freq_data, r.norm_q,
-                np.arange(nb, dtype=np.int64), r.idf[list_of_block],
-                r.norm_table, self.k1p1,
-                backend=self.backend, interpret=self.interpret,
-            )
-            scores = np.where(a.lane_valid, scores, np.float32(0.0))
-            self._flat_scores = np.append(
-                scores.reshape(-1).astype(np.float32), np.float32(0.0)
-            )
+        self.core.flat_init()
 
     def _block_docs(self, rows: np.ndarray) -> np.ndarray:
         """Real docIDs of the given arena rows (flat mirror)."""
         self._flat_init()
-        vals = self._flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows]
+        vals = self.core.flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows]
         return vals[self.arena.lane_valid[rows]]
 
     def _block_docs_filtered(
@@ -192,11 +199,12 @@ class TopKEngine:
         self._flat_init()
         if len(rows) == 0:
             return np.zeros(0, np.int64)
-        vals = self._flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows]
+        vals = self.core.flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows]
         lv = self.arena.lane_valid[rows]
-        if self._flat_scores is None or not np.isfinite(theta):
+        scores = self.core.flat_scores
+        if scores is None or not np.isfinite(theta):
             return vals[lv]
-        c = mult_t * self._flat_scores[:-1].reshape(-1, BLOCK_VALS)[rows]
+        c = mult_t * scores[:-1].reshape(-1, BLOCK_VALS)[rows]
         ok = lv & (c + rest[:, None] >= theta) & (c >= share)
         return vals[ok]
 
@@ -239,12 +247,12 @@ class TopKEngine:
     def _contrib_np(self, terms: np.ndarray, docs: np.ndarray) -> np.ndarray:
         """Host path: one searchsorted over the flat keys per batch."""
         self._flat_init()
-        a = self.arena
+        a, core = self.arena, self.core
         key = np.clip(docs, 0, a.stride - 1) + terms * a.stride
-        pos = np.searchsorted(self._flat_keys, key, "left")
-        past = pos >= self._lane_end[terms + 1]
-        hit = (self._flat_vals[pos] == docs) & ~past
-        if self._flat_scores is None:  # resident="kernel": no score mirror
+        pos = np.searchsorted(core.flat_keys, key, "left")
+        past = pos >= core.lane_end[terms + 1]
+        hit = (core.flat_vals[pos] == docs) & ~past
+        if core.flat_scores is None:  # resident="kernel": no score mirror
             rows_n = np.minimum(pos, a.n_blocks * BLOCK_VALS - 1) >> 7
             urows, inv = np.unique(rows_n[hit], return_inverse=True)
             row_scores = bm25_score_rows(
@@ -256,62 +264,33 @@ class TopKEngine:
             out = np.zeros(len(terms), np.float32)
             out[hit] = row_scores[inv, (pos[hit] & (BLOCK_VALS - 1))]
             return out
-        return np.where(hit, self._flat_scores[pos], np.float32(0.0))
+        return np.where(hit, core.flat_scores[pos], np.float32(0.0))
 
-    def _build_jax_fn(self):
+    def _build_jax_fn(self, arena, ranked):
+        """Jitted locate -> gather -> decode+score+match over ONE arena
+        (the global one, or a shard's sub-arena).  Both graph halves come
+        from the shared single-source helpers (``locate_graph`` via
+        ``build_locate_dev``, ``score_probe_graph``)."""
         import jax
         import jax.numpy as jnp
 
-        from repro.kernels.bm25_score.kernel import (
-            FMETA_IDF,
-            FMETA_K1P1,
-            NORM_LEVELS,
-            bm25_score_probe_blocks,
-        )
-        from repro.kernels.bm25_score.ref import score_probe_ref
-        from repro.kernels.vbyte_decode.kernel import META_BASE, META_PROBE
+        from repro.kernels.bm25_score.ops import score_probe_graph
 
-        a, r = self.arena, self.ranked
-        dev, rdev = a.dev, r.dev
-        lob_dev = jnp.asarray(self.lob.astype(np.int32))
-        stride, nb = a.stride, a.n_blocks
+        dev, rdev = arena.dev, ranked.dev
+        lob = arena.part_list[arena.part_of_block]
+        lob_dev = jnp.asarray(lob.astype(np.int32))
+        locate = build_locate_dev(arena)
         backend, interpret = self.backend, self.interpret
         k1p1 = float(self.k1p1)
-        table_tile = jnp.asarray(
-            np.broadcast_to(r.norm_table, (BM, NORM_LEVELS)).copy()
-        )
 
         def fn(terms, probes):
-            pc = jnp.clip(probes, 0, stride - 1)
-            k = jnp.searchsorted(
-                dev.block_keys, pc + terms * stride, side="left"
-            ).astype(jnp.int32)
-            past = k >= dev.list_blk_offsets[terms + 1]
-            rows = jnp.minimum(k, nb - 1)
-            pe = jnp.where(past, 0, pc)
-            lens_g, data_g = dev.lens[rows], dev.data[rows]
-            flens_g = rdev.freq_lens[rows]
-            fdata_g = rdev.freq_data[rows]
-            norms_g = rdev.norm_q[rows].astype(jnp.int32)
-            base_g = dev.block_base[rows]
-            idf_g = rdev.idf[lob_dev[rows]]
-            if backend == "pallas":
-                meta = jnp.zeros((terms.shape[0], BLOCK_VALS), jnp.int32)
-                meta = meta.at[:, META_BASE].set(base_g)
-                meta = meta.at[:, META_PROBE].set(pe)
-                fmeta = jnp.zeros((terms.shape[0], BLOCK_VALS), jnp.float32)
-                fmeta = fmeta.at[:, FMETA_IDF].set(idf_g)
-                fmeta = fmeta.at[:, FMETA_K1P1].set(jnp.float32(k1p1))
-                out = bm25_score_probe_blocks(
-                    lens_g, data_g, flens_g, fdata_g, norms_g, table_tile,
-                    meta, fmeta, interpret=interpret,
-                )
-                contrib = out[:, 0]
-            else:
-                contrib = score_probe_ref(
-                    lens_g, data_g, flens_g, fdata_g, norms_g, base_g, pe,
-                    idf_g, rdev.norm_table, jnp.float32(k1p1),
-                )
+            rows, pe, past = locate(terms, probes)
+            contrib = score_probe_graph(
+                dev.lens[rows], dev.data[rows], rdev.freq_lens[rows],
+                rdev.freq_data[rows], rdev.norm_q[rows].astype(jnp.int32),
+                dev.block_base[rows], pe, rdev.idf[lob_dev[rows]],
+                rdev.norm_table, k1p1, backend, interpret,
+            )
             return jnp.where(past, jnp.float32(0.0), contrib)
 
         return jax.jit(fn)
@@ -321,31 +300,66 @@ class TopKEngine:
     # tiles (~2.3 KB/cursor) stay bounded
     MAX_BUCKET = 16_384
 
-    def _contrib_dev(self, terms: np.ndarray, docs: np.ndarray) -> np.ndarray:
-        """Device path: jitted locate->gather->decode+score+match, resident
-        arena, pow2 cursor buckets (padding cursors probe list 0 / doc 0)."""
+    def _contrib_dev_on(self, fn, stride, terms, docs) -> np.ndarray:
+        """Device dispatch of one arena's jitted fn: pow2 cursor buckets
+        (padding cursors probe list 0 / doc 0), chunked at MAX_BUCKET."""
         import jax.numpy as jnp
 
-        if self._jax_fn is None:
-            self._jax_fn = self._build_jax_fn()
         n = len(terms)
         out = np.empty(n, np.float32)
-        docs_c = np.clip(docs, 0, self.arena.stride - 1)
         for s in range(0, n, self.MAX_BUCKET):
             e = min(s + self.MAX_BUCKET, n)
-            m = e - s
-            bucket = max(BM, 1 << (m - 1).bit_length())
-            tp = np.zeros(bucket, np.int32)
-            pp = np.zeros(bucket, np.int32)
-            tp[:m] = terms[s:e]
-            pp[:m] = docs_c[s:e]
-            res = self._jax_fn(jnp.asarray(tp), jnp.asarray(pp))
-            out[s:e] = np.asarray(res)[:m]
+            tp, pp = stage_cursors(
+                terms[s:e], docs[s:e], stride, pow2_bucket(e - s)
+            )
+            res = fn(jnp.asarray(tp), jnp.asarray(pp))
+            out[s:e] = np.asarray(res)[: e - s]
+        return out
+
+    def _contrib_dev(self, terms: np.ndarray, docs: np.ndarray) -> np.ndarray:
+        """Device path; with ``shards=`` cursors route to their owning
+        shard's sub-arena and merge back by pure scatter (contributions are
+        scalars -- nothing to rebase)."""
+        if self.sharded is None:
+            if self._jax_fn is None:
+                self._jax_fn = self._build_jax_fn(self.arena, self.ranked)
+            return self._contrib_dev_on(
+                self._jax_fn, self.arena.stride, terms, docs
+            )
+        sa = self.sharded
+        owner = sa.owner[terms]
+        local = sa.local_list[terms]
+        order = np.argsort(owner, kind="stable")
+        cuts = np.searchsorted(owner[order], np.arange(sa.n_shards + 1))
+        out = np.zeros(len(terms), np.float32)
+        if sa.mesh is not None:
+            if self._smap_fn is None:
+                from repro.core.shard import ShardMapBM25
+
+                self._smap_fn = ShardMapBM25(
+                    sa, backend=self.backend, interpret=self.interpret,
+                    k1p1=float(self.k1p1), max_bucket=self.MAX_BUCKET,
+                )
+            out[order] = self._smap_fn(local[order], docs[order], cuts)
+            return out
+        for s in range(sa.n_shards):
+            idx = order[cuts[s] : cuts[s + 1]]
+            if len(idx) == 0:
+                continue
+            if self._shard_fns[s] is None:
+                sub = sa.shards[s]
+                self._shard_fns[s] = self._build_jax_fn(sub, sub.ranked)
+            out[idx] = self._contrib_dev_on(
+                self._shard_fns[s], sa.shards[s].stride, local[idx], docs[idx]
+            )
         return out
 
     @property
     def _use_device(self) -> bool:
-        return self.backend in ("ref", "pallas") and self.arena.device_ok
+        if self.sharded is not None:
+            # routing-metadata-only check: must not force the shard slices
+            return self.backend in ("ref", "pallas") and self.sharded.all_device_ok
+        return self.core.use_device
 
     def contributions(self, terms, docs) -> np.ndarray:
         """f32 BM25 contribution of doc in list(term), 0.0 when absent.
@@ -360,9 +374,9 @@ class TopKEngine:
         if len(terms) == 0:
             return np.zeros(0, np.float32)
         if self._use_device:
-            key = np.clip(docs, 0, self.arena.stride - 1) + terms * self.arena.stride
-            uk, idx, inv = np.unique(key, return_index=True, return_inverse=True)
-            if len(uk) < len(terms):
+            g = group_cursors(terms, docs, self.arena.stride)
+            if g is not None:
+                idx, inv = g
                 out = self._contrib_dev(terms[idx], docs[idx])[inv]
             else:
                 out = self._contrib_dev(terms, docs)
@@ -402,7 +416,7 @@ class TopKEngine:
         provably outside the top-k (score <= UB < theta <= final k-th).
         """
         self._flat_init()
-        a = self.arena
+        a, core = self.arena, self.core
         nq = len(specs)
         t_chunks, d_chunks, cuts = [], [], [0]
         for terms, _, docs in specs:
@@ -416,9 +430,9 @@ class TopKEngine:
             ]
         t_rep = np.concatenate(t_chunks)
         d_til = np.concatenate(d_chunks)
-        pos = np.searchsorted(self._flat_keys, d_til + t_rep * a.stride, "left")
-        past = pos >= self._lane_end[t_rep + 1]
-        member = (self._flat_vals[pos] == d_til) & ~past
+        pos = np.searchsorted(core.flat_keys, d_til + t_rep * a.stride, "left")
+        past = pos >= core.lane_end[t_rep + 1]
+        member = (core.flat_vals[pos] == d_til) & ~past
         row = np.minimum(pos, a.n_blocks * BLOCK_VALS - 1) >> 7
 
         need_ub = theta is not None
@@ -482,7 +496,7 @@ class TopKEngine:
                 )
                 contrib = row_scores[inv, lanes]
             else:
-                contrib = self._flat_scores[pos[g_idx]]
+                contrib = core.flat_scores[pos[g_idx]]
             out, start = [], 0
             for i in range(nq):
                 n_i = len(idx_l[i])

@@ -2,7 +2,6 @@
 fault-tolerant runner (restart determinism) + straggler watchdog."""
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +64,9 @@ def test_fault_tolerant_runner_determinism(tmp_path):
         mgr = CheckpointManager(run_dir, keep=2, async_save=False)
         return FaultTolerantRunner(step, mgr, save_every=5), {"w": jnp.zeros(3)}
 
-    batches = lambda step: jnp.float32(step + 1)
+    def batches(step):
+        return jnp.float32(step + 1)
+
     r1, s1 = make(tmp_path / "a")
     out1 = r1.run(s1, batches, 23)
     r2, s2 = make(tmp_path / "b")

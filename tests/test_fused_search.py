@@ -8,7 +8,6 @@ probes.  Runs under real hypothesis or the seeded shim in
 ``tests/_hypothesis_shim.py``."""
 
 import numpy as np
-import pytest
 
 from hypothesis import given, settings
 from hypothesis import strategies as st

@@ -1,8 +1,6 @@
 """The trip-count-aware HLO walker: validated against cost_analysis() on
 scan-free graphs and against unrolled references on scanned graphs."""
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 

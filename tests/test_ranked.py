@@ -22,9 +22,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.index import build_partitioned_index
-from repro.data.postings import make_freqs, make_queries, make_ranked_corpus
+from repro.data.postings import make_queries, make_ranked_corpus
 from repro.kernels.bm25_score.ops import bm25_score_probe, bm25_score_rows
-from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
 from repro.ranked.bm25 import (
     DEFAULT_BM25,
     dequant_norm,

@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Flag benchmark regressions from the BENCH_*.json history (ISSUE-3).
+"""Flag benchmark regressions from the BENCH_*.json history (ISSUE-3/4).
 
 Compares the NEWEST history entry of each BENCH_*.json against the BEST
 (minimum ``us_per_call``) previous measurement with the SAME profile (smoke
@@ -9,6 +9,14 @@ faster than ``--min-us`` are skipped (sub-millisecond smoke records time
 compile/dispatch noise, not the work), as are new records (no baseline) --
 the gate is for drift on work we still measure.
 
+CI plumbing (ISSUE-4 satellites):
+
+* when ``$GITHUB_STEP_SUMMARY`` is set, a one-line markdown verdict is
+  appended to it (the Actions job summary);
+* ``--emit-regressed PATH`` writes the benchmark MODULE names owning the
+  regressed records (one per line) so ``tools/tier1.sh`` can re-measure
+  only those via ``benchmarks.run --only`` instead of the whole suite.
+
   python tools/check_bench.py [--max-regression 2.0] [BENCH_a.json ...]
 """
 
@@ -17,23 +25,26 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import os
 import sys
 
 
-def check_file(path: str, max_ratio: float, min_us: float) -> list[str]:
+def check_file(
+    path: str, max_ratio: float, min_us: float
+) -> tuple[list[str], set[str], int]:
+    """(failure lines, regressed module names, records compared)."""
     with open(path) as fh:
         data = json.load(fh)
     history = data.get("history")
     if not history:
         print(f"[check_bench] {path}: no history, skipping")
-        return []
+        return [], set(), 0
     newest = history[-1]
-    prior = [e for e in history[:-1]
-             if e.get("profile") == newest.get("profile")]
+    profile = newest.get("profile")
+    prior = [e for e in history[:-1] if e.get("profile") == profile]
     if not prior:
-        print(f"[check_bench] {path}: no same-profile baseline "
-              f"({newest.get('profile')}), skipping")
-        return []
+        print(f"[check_bench] {path}: no {profile!r}-profile baseline, skipping")
+        return [], set(), 0
     # historical best per record: robust to one noisy baseline run
     best: dict[str, float] = {}
     for e in prior:
@@ -42,6 +53,7 @@ def check_file(path: str, max_ratio: float, min_us: float) -> list[str]:
             if us:
                 best[r["name"]] = min(best.get(r["name"], us), us)
     failures = []
+    modules: set[str] = set()
     compared = 0
     for rec in newest.get("records", []):
         prev = best.get(rec["name"])
@@ -50,33 +62,82 @@ def check_file(path: str, max_ratio: float, min_us: float) -> list[str]:
         compared += 1
         ratio = rec["us_per_call"] / prev
         if ratio > max_ratio:
+            drift = f"{prev:.1f} -> {rec['us_per_call']:.1f} us/call"
             failures.append(
-                f"{path}: {rec['name']} regressed {ratio:.2f}x over its "
-                f"historical best ({prev:.1f} -> "
-                f"{rec['us_per_call']:.1f} us/call)"
+                f"{path}: {rec['name']} regressed {ratio:.2f}x ({drift})"
             )
-    print(f"[check_bench] {path}: {compared} records vs best of "
-          f"{len(prior)} prior runs, {len(failures)} regressions")
-    return failures
+            if rec.get("module"):
+                modules.add(rec["module"])
+    n_prior = len(prior)
+    print(
+        f"[check_bench] {path}: {compared} records vs best of "
+        f"{n_prior} prior runs, {len(failures)} regressions"
+    )
+    return failures, modules, compared
+
+
+def _write_summary(
+    failures: list[str], compared: int, n_files: int, max_ratio: float
+) -> None:
+    """One markdown line into the Actions job summary, when available."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    if failures:
+        worst = "; ".join(f.split(": ", 1)[1] for f in failures[:3])
+        line = f"**bench gate:** :x: {len(failures)} regressed >{max_ratio:g}x: {worst}"
+    else:
+        line = (
+            f"**bench gate:** :white_check_mark: {compared} record(s) across "
+            f"{n_files} file(s) within {max_ratio:g}x of their historical best"
+        )
+    try:
+        with open(path, "a") as fh:
+            fh.write(line + "\n")
+    except OSError as e:  # a broken summary file must not flip the gate
+        print(f"[check_bench] could not write step summary: {e}", file=sys.stderr)
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("paths", nargs="*", default=None)
-    ap.add_argument("--max-regression", type=float, default=2.0,
-                    help="fail when us_per_call grows more than this factor")
-    ap.add_argument("--min-us", type=float, default=1_000.0,
-                    help="ignore records whose baseline is faster than this")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=2.0,
+        help="fail when us_per_call grows more than this factor",
+    )
+    ap.add_argument(
+        "--min-us",
+        type=float,
+        default=1_000.0,
+        help="ignore records whose baseline is faster than this",
+    )
+    ap.add_argument(
+        "--emit-regressed",
+        default=None,
+        metavar="PATH",
+        help="write regressed benchmark module names, one per line",
+    )
     args = ap.parse_args()
     paths = args.paths or sorted(glob.glob("BENCH_*.json"))
     if not paths:
         print("[check_bench] no BENCH_*.json files found")
         return 0
     failures: list[str] = []
+    modules: set[str] = set()
+    compared = 0
     for path in paths:
-        failures.extend(check_file(path, args.max_regression, args.min_us))
+        f, m, c = check_file(path, args.max_regression, args.min_us)
+        failures.extend(f)
+        modules.update(m)
+        compared += c
     for f in failures:
         print(f"[check_bench] FAIL {f}", file=sys.stderr)
+    _write_summary(failures, compared, len(paths), args.max_regression)
+    if args.emit_regressed is not None:
+        with open(args.emit_regressed, "w") as fh:
+            fh.write("".join(f"{m}\n" for m in sorted(modules)))
     return 1 if failures else 0
 
 

@@ -1,26 +1,72 @@
 #!/usr/bin/env bash
-# Tier-1 gate (ISSUE-3 satellite): the full pytest suite, a smoke pass of
-# every benchmark with JSON history recording, and a >2x bench-regression
-# check against the previous same-profile history entry.
+# Tier-1 gate (ISSUE-3/4): the full pytest suite, a smoke pass of every
+# benchmark with JSON history recording, and a >2x bench-regression check
+# against the per-profile historical best.
 #
-#   bash tools/tier1.sh
+#   bash tools/tier1.sh                     # everything
+#   TIER1_SKIP_BENCH=1 bash tools/tier1.sh  # pytest half only (the cheap
+#                                           # CI lint/matrix cells)
+#
+# A pass/fail recap prints on EVERY exit -- including when pytest -x stops
+# at the first failure -- and a flaked regression gate re-measures only the
+# regressed benchmark groups (benchmarks.run --only), not the whole suite.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+declare -A STATUS=()
+recap() {
+  rc=$?
+  rm -f .bench_regressed
+  echo
+  echo "== tier1 recap =="
+  for step in pytest bench gate; do
+    printf '   %-7s %s\n' "$step" "${STATUS[$step]:-SKIPPED}"
+  done
+  if [ "$rc" -eq 0 ]; then
+    echo "== tier1: OK =="
+  else
+    echo "== tier1: FAILED (rc=$rc) =="
+  fi
+  exit "$rc"
+}
+trap recap EXIT
+
 echo "== tier1: pytest =="
+STATUS[pytest]=FAIL
 python -m pytest -x -q
+STATUS[pytest]=PASS
 
-echo "== tier1: benchmark smoke (+ JSON history) =="
-python -m benchmarks.run --smoke --json
-
-echo "== tier1: bench regression check (>2x fails) =="
-if ! python tools/check_bench.py --max-regression 2.0; then
-  # timing gates flake under load: re-measure once before failing
-  echo "== tier1: regression flagged, re-measuring once =="
-  python -m benchmarks.run --smoke --json
-  python tools/check_bench.py --max-regression 2.0
+if [ "${TIER1_SKIP_BENCH:-0}" = "1" ]; then
+  echo "== tier1: bench + gate skipped (TIER1_SKIP_BENCH=1) =="
+  exit 0
 fi
 
-echo "== tier1: OK =="
+echo "== tier1: benchmark smoke (+ JSON history) =="
+STATUS[bench]=FAIL
+python -m benchmarks.run --smoke --json
+STATUS[bench]=PASS
+
+echo "== tier1: bench regression check (>2x fails) =="
+STATUS[gate]=FAIL
+if ! python tools/check_bench.py --max-regression 2.0 \
+       --emit-regressed .bench_regressed; then
+  # timing gates flake under load: re-measure ONCE before failing, and
+  # only the benchmark groups that actually regressed.  A check_bench
+  # CRASH (e.g. a corrupt cache-restored BENCH file) writes no file --
+  # fall back to the full re-measure instead of dying on a missing file.
+  mods=""
+  if [ -f .bench_regressed ]; then
+    mods=$(paste -sd, .bench_regressed)
+  fi
+  if [ -n "$mods" ]; then
+    echo "== tier1: regression flagged in [$mods], re-measuring those =="
+    python -m benchmarks.run --smoke --json --only "$mods"
+  else
+    echo "== tier1: regression flagged (module unknown), re-measuring all =="
+    python -m benchmarks.run --smoke --json
+  fi
+  python tools/check_bench.py --max-regression 2.0
+fi
+STATUS[gate]=PASS
