@@ -3,6 +3,7 @@ machine-readable result registry behind ``benchmarks.run --json``."""
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 
@@ -19,6 +20,20 @@ RESULTS: list[dict] = []
 
 def reset_results() -> None:
     RESULTS.clear()
+
+
+def perf_asserts() -> bool:
+    """Whether hard perf-RATIO asserts should run (BENCH_PERF_ASSERTS=0
+    disables them).
+
+    Identity/correctness asserts are never skippable.  The perf gates are
+    acceptance checks for interactive runs and tier-1; the nightly
+    workflow disables them so a loaded runner still APPENDS the history
+    entry and lets tools/check_bench.py -- which compares same-profile
+    history and tolerates noise -- deliver the drift verdict instead of
+    dying mid-suite with nothing recorded.
+    """
+    return os.environ.get("BENCH_PERF_ASSERTS", "1") != "0"
 
 
 def gov2_like_corpus(rng, n_lists=8, n=40_000):

@@ -40,6 +40,7 @@ core per shard (see ``repro.core.shard``) and route cursors between them.
 from __future__ import annotations
 
 from collections import OrderedDict
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -122,6 +123,97 @@ def build_locate_dev(arena):
         )
 
     return locate
+
+
+def pivot_graph(qb_g, qmins, nblk_g, backend, interpret):
+    """Block-Max pivot selection over GATHERED bound-chunk rows.
+
+    The third single-source jit-graph half, alongside ``locate_graph`` and
+    ``bm25_score.ops.score_probe_graph``: the jitted engine pipelines AND
+    the ``ShardMapPivot`` body of ``core.shard`` both open their pruning
+    dispatch with exactly this graph.  Traces int32 (chunk bound tiles,
+    per-lane qmin tiles, valid-lane counts) into ``(compact, count,
+    pivot, maxq)`` -- see ``kernels.blockmax_pivot``.  Integer contract,
+    so the pallas kernel and the jnp ref are bit-identical.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.blockmax_pivot.kernel import (
+        AUX_COUNT,
+        AUX_MAXQ,
+        AUX_PIVOT,
+        PMETA_NBLK,
+        pivot_select_blocks,
+    )
+    from repro.kernels.blockmax_pivot.ref import pivot_select_ref
+
+    if backend == "pallas":
+        meta = jnp.zeros((qb_g.shape[0], BLOCK_VALS), jnp.int32)
+        meta = meta.at[:, PMETA_NBLK].set(nblk_g)
+        out, aux = pivot_select_blocks(qb_g, qmins, meta, interpret=interpret)
+        return out, aux[:, AUX_COUNT], aux[:, AUX_PIVOT], aux[:, AUX_MAXQ]
+    return pivot_select_ref(qb_g, qmins, nblk_g)
+
+
+@dataclass
+class PivotChunks:
+    """``block_max_q`` re-tiled into per-list 128-lane chunks (§9).
+
+    The pivot kernel consumes bound CHUNKS -- up to 128 consecutive blocks
+    of one list per row -- so the ranked sidecar's flat [n_blocks] u8
+    array is re-tiled once per arena into a [n_chunks, 128] int32 table
+    plus per-chunk metadata.  Chunks never span lists; a list with b
+    blocks owns ceil(b / 128) consecutive chunk rows.
+    """
+
+    qb: np.ndarray  # [nc, 128] int32  block_max_q per lane (0 past nblk)
+    nblk: np.ndarray  # [nc] int32  valid lanes in the chunk
+    base: np.ndarray  # [nc] int64  arena row of lane 0
+    offsets: np.ndarray  # [n_lists + 1] int64  chunk range per list
+    _dev: object = field(default=None, repr=False, compare=False)
+
+    @property
+    def dev(self):
+        """jnp copies of the gatherable halves, uploaded once."""
+        if self._dev is None:
+            import jax.numpy as jnp
+            from types import SimpleNamespace
+
+            self._dev = SimpleNamespace(
+                qb=jnp.asarray(self.qb), nblk=jnp.asarray(self.nblk)
+            )
+        return self._dev
+
+
+def build_pivot_chunks(arena) -> PivotChunks:
+    """Re-tile one arena's ``block_max_q`` into ``PivotChunks``."""
+    r = arena.ranked
+    if r is None:
+        raise ValueError("pivot chunks need a ranked arena")
+    counts = np.diff(arena.list_blk_offsets)
+    nch = -(-counts // BLOCK_VALS)  # ceil: chunks per list
+    offsets = np.zeros(len(counts) + 1, np.int64)
+    np.cumsum(nch, out=offsets[1:])
+    nc = int(offsets[-1])
+    if nc == 0:
+        return PivotChunks(
+            qb=np.zeros((0, BLOCK_VALS), np.int32),
+            nblk=np.zeros(0, np.int32),
+            base=np.zeros(0, np.int64),
+            offsets=offsets,
+        )
+    list_of_chunk = np.repeat(np.arange(len(counts), dtype=np.int64), nch)
+    k_in = np.arange(nc, dtype=np.int64) - offsets[list_of_chunk]
+    base = arena.list_blk_offsets[list_of_chunk] + k_in * BLOCK_VALS
+    nblk = np.minimum(
+        counts[list_of_chunk] - k_in * BLOCK_VALS, BLOCK_VALS
+    ).astype(np.int32)
+    lane = np.arange(BLOCK_VALS, dtype=np.int64)
+    rows = np.minimum(base[:, None] + lane[None, :], arena.n_blocks - 1)
+    qb = np.where(
+        lane[None, :] < nblk[:, None], r.block_max_q[rows], 0
+    ).astype(np.int32)
+    return PivotChunks(qb=qb, nblk=nblk, base=base, offsets=offsets)
 
 
 def decode_search_graph(lens_g, data_g, base_g, pe, backend, interpret):
@@ -266,9 +358,7 @@ class EngineCore:
             )
             self.lane_end = a.list_blk_offsets * BLOCK_VALS
             if self.lane_scores_fn is not None and a.n_blocks:
-                scores = np.where(
-                    a.lane_valid, self.lane_scores_fn(), np.float32(0.0)
-                )
+                scores = np.where(a.lane_valid, self.lane_scores_fn(), np.float32(0.0))
                 self.flat_scores = np.append(
                     scores.reshape(-1).astype(np.float32), np.float32(0.0)
                 )

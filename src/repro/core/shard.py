@@ -46,6 +46,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.arena import DeviceArena, RankedSidecar
+from repro.kernels.blockmax_pivot.kernel import QMIN_NONE
 from repro.kernels.vbyte_decode.kernel import BLOCK_BYTES, BLOCK_VALS
 
 INT32_MAX = np.iinfo(np.int32).max
@@ -95,6 +96,11 @@ class ShardedArena:
     mesh: object = None                 # Mesh over "shard", or None
     _shards: list | None = field(default=None, repr=False, compare=False)
     _stacked_dev: dict | None = field(default=None, repr=False, compare=False)
+    _rows_of: list | None = field(default=None, repr=False, compare=False)
+    _pchunks: list | None = field(default=None, repr=False, compare=False)
+    _stacked_pivot_dev: dict | None = field(
+        default=None, repr=False, compare=False
+    )
 
     @classmethod
     def build(cls, arena: DeviceArena, n_shards: int, mesh="auto"):
@@ -119,9 +125,7 @@ class ShardedArena:
             # stage S rows over a smaller axis and misroute
             axis = int(dict(mesh.shape)["shard"])
             if axis != n_shards:
-                raise ValueError(
-                    f"mesh 'shard' axis is {axis}, need {n_shards} (1:1)"
-                )
+                raise ValueError(f"mesh 'shard' axis is {axis}, need {n_shards} (1:1)")
         return cls(
             n_shards=n_shards,
             arena=arena,
@@ -140,6 +144,34 @@ class ShardedArena:
                 for lists_s in self.lists_of
             ]
         return self._shards
+
+    @property
+    def rows_of(self) -> list[np.ndarray]:
+        """Per shard: the GLOBAL arena row of each shard-local row.
+
+        The merge half of the pivot dispatch: kept blocks come back as
+        shard-local rows and scatter onto the global address space through
+        this map.  Routing-metadata-sized (one int per arena row), cached
+        independently of the sub-arena slices (the mesh path releases
+        those after staging).
+        """
+        if self._rows_of is None:
+            lob = self.arena.part_list[self.arena.part_of_block]
+            owner_of_block = self.owner[lob]
+            self._rows_of = [
+                np.flatnonzero(owner_of_block == s)
+                for s in range(self.n_shards)
+            ]
+        return self._rows_of
+
+    @property
+    def pivot_chunks(self) -> list:
+        """Per shard: the ``PivotChunks`` bound tiles of its sub-arena."""
+        if self._pchunks is None:
+            from repro.core.engine_core import build_pivot_chunks
+
+            self._pchunks = [build_pivot_chunks(sub) for sub in self.shards]
+        return self._pchunks
 
     @property
     def all_device_ok(self) -> bool:
@@ -224,6 +256,39 @@ class ShardedArena:
         # so release them (the property rebuilds on demand if asked)
         self._shards = None
         return self._stacked_dev
+
+    def stacked_pivot_dev(self) -> dict:
+        """The [S, ...] pivot bound tiles, staged LAZILY and separately.
+
+        Only the ``ShardMapPivot`` dispatch of kernel-resident ranked
+        engines reads ``qb_chunks`` / ``chunk_nblk``; staging them inside
+        ``stacked_dev`` would charge every search/bm25 mesh engine the
+        host re-tiling plus ~n_blocks x 512 B of device memory for
+        arrays it never touches.  Padding chunks stage nblk 0 -- nothing
+        survives them.
+        """
+        if self._stacked_pivot_dev is not None:
+            return self._stacked_pivot_dev
+        if self.mesh is None:
+            raise ValueError("stacked_pivot_dev() needs a mesh")
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        S = self.n_shards
+        pcs = self.pivot_chunks
+        nc_m = max(1, max(len(pc.nblk) for pc in pcs))
+        qb = np.zeros((S, nc_m, BLOCK_VALS), np.int32)
+        nblk = np.zeros((S, nc_m), np.int32)
+        for s, pc in enumerate(pcs):
+            nc = len(pc.nblk)
+            qb[s, :nc] = pc.qb
+            nblk[s, :nc] = pc.nblk
+        sharding = NamedSharding(self.mesh, PartitionSpec("shard"))
+        self._stacked_pivot_dev = {
+            "qb_chunks": jax.device_put(qb, sharding),
+            "chunk_nblk": jax.device_put(nblk, sharding),
+        }
+        return self._stacked_pivot_dev
 
 
 def _slice_arena(
@@ -323,20 +388,30 @@ class _ShardMapDispatch:
         self._fn = None
         self._sharding = None
 
+    # padding value of the staged probe buffer; subclasses whose "probes"
+    # are not docIDs (the pivot dispatch stages qmin there) override both
+    PAD_PROBE = 0
+
+    def _clip_probes(self, p):
+        # clip BEFORE the int32 staging cast (probes >= 2^31 must
+        # resolve past-the-end after the merge, not wrap negative)
+        return np.clip(p, 0, self.stride - 1)
+
     def _stage(self, local_terms, probes, cuts):
         from repro.core.engine_core import pow2_bucket
 
         S = self.sharded.n_shards
         counts = np.diff(cuts)
         B = pow2_bucket(int(counts.max()) if len(counts) else 1)
+        probes = np.asarray(probes)
         tp = np.zeros((S, B), np.int32)
-        pp = np.zeros((S, B), np.int32)
+        # probes may carry trailing axes (the pivot dispatch stages a
+        # [128]-lane qmin tile per cursor); dim 0 stays the cursor axis
+        pp = np.full((S, B) + probes.shape[1:], self.PAD_PROBE, np.int32)
         for s in range(S):
             sl = slice(int(cuts[s]), int(cuts[s + 1]))
             tp[s, : counts[s]] = local_terms[sl]
-            # clip BEFORE the int32 staging cast (probes >= 2^31 must
-            # resolve past-the-end after the merge, not wrap negative)
-            pp[s, : counts[s]] = np.clip(probes[sl], 0, self.stride - 1)
+            pp[s, : counts[s]] = self._clip_probes(probes[sl])
         return tp, pp, counts
 
     def _put(self, arr):
@@ -352,7 +427,9 @@ class _ShardMapDispatch:
         merged = []
         for o in outs:
             o = np.asarray(o)
-            m = np.empty(int(cuts[-1]), o.dtype)
+            # per-cursor outputs may carry trailing axes (the pivot
+            # dispatch returns a [B, 128] lane list per shard)
+            m = np.empty((int(cuts[-1]),) + o.shape[2:], o.dtype)
             for s in range(self.sharded.n_shards):
                 m[int(cuts[s]) : int(cuts[s + 1])] = o[s, : counts[s]]
             merged.append(m)
@@ -380,11 +457,15 @@ class _ShardMapDispatch:
         )
         return jax.jit(smap)
 
+    def _arrs(self) -> dict:
+        """The stacked device arrays this dispatcher's body reads."""
+        return self.sharded.stacked_dev()
+
     def _dispatch(self, local_terms, probes, cuts):
         tp, pp, counts = self._stage(local_terms, probes, cuts)
         if self._fn is None:
             self._fn = self._build()
-        dev = self.sharded.stacked_dev()
+        dev = self._arrs()
         outs = self._fn(dev, self._put(tp), self._put(pp))
         return self._merge(outs, cuts, counts)
 
@@ -400,14 +481,12 @@ class _ShardMapDispatch:
         for r in range(-(-int(counts.max()) // mb)):
             lo = np.minimum(cuts[:-1] + r * mb, cuts[1:])
             hi = np.minimum(lo + mb, cuts[1:])
-            idx = np.concatenate(
-                [np.arange(int(a), int(b)) for a, b in zip(lo, hi)]
-            )
+            idx = np.concatenate([np.arange(int(a), int(b)) for a, b in zip(lo, hi)])
             sub_cuts = np.zeros(len(cuts), np.int64)
             np.cumsum(hi - lo, out=sub_cuts[1:])
             res = self._dispatch(local_terms[idx], probes[idx], sub_cuts)
             if outs is None:
-                outs = [np.empty(n, o.dtype) for o in res]
+                outs = [np.empty((n,) + o.shape[1:], o.dtype) for o in res]
             for o, ro in zip(outs, res):
                 o[idx] = ro
         return outs
@@ -500,3 +579,58 @@ class ShardMapBM25(_ShardMapDispatch):
     def __call__(self, local_terms, probes, cuts):
         (contrib,) = super().__call__(local_terms, probes, cuts)
         return contrib
+
+
+class ShardMapPivot(_ShardMapDispatch):
+    """Block-Max pivot selection over every shard in one dispatch (§9).
+
+    Cursors here are (shard-local chunk row, qmin) pairs -- the "probe"
+    slot carries the per-(query, term) minimal admissible bound code the
+    host reduced from (theta, multiplicities, co-candidate bounds), so
+    broadcasting a new theta to every shard is just staging fresh qmins.
+    Returns (compact [n, 128], count [n], pivot [n], maxq [n]) int64
+    aligned with the sorted cursor order; ``compact`` lists each cursor's
+    surviving SHARD-LOCAL block lanes (callers map lane -> local row ->
+    global row via ``PivotChunks.base`` and ``ShardedArena.rows_of``).
+    Padding cursors stage qmin = QMIN_NONE and keep nothing.
+    """
+
+    PAD_PROBE = QMIN_NONE  # padding cursors prune their whole chunk
+
+    def __init__(self, sharded, backend, interpret, max_bucket=None):
+        if sharded.arena.ranked is None:
+            raise ValueError("ShardMapPivot needs a ranked arena")
+        super().__init__(sharded, backend, interpret, max_bucket=max_bucket)
+
+    def _clip_probes(self, p):
+        # qmins are bound codes in [0, QMIN_NONE], not docIDs: clip to the
+        # code range (the docID clip could LOWER a qmin on tiny-stride
+        # corpora and desync the sharded kept set from the unsharded one)
+        return np.clip(p, 0, self.PAD_PROBE)
+
+    def _arrs(self) -> dict:
+        # only the pivot tiles: the bound chunks are staged lazily and
+        # separately from the search/bm25 arrays (stacked_pivot_dev), so
+        # mirror-resident mesh engines never pay for them
+        return self.sharded.stacked_pivot_dev()
+
+    def _body(self, arrs, rows, qmins):
+        from repro.core.engine_core import pivot_graph
+
+        compact, count, pivot, maxq = pivot_graph(
+            arrs["qb_chunks"][rows],
+            qmins,
+            arrs["chunk_nblk"][rows],
+            self.backend,
+            self.interpret,
+        )
+        return compact, count, pivot, maxq
+
+    def __call__(self, local_rows, qmins, cuts):
+        compact, count, pivot, maxq = super().__call__(local_rows, qmins, cuts)
+        return (
+            compact.astype(np.int64),
+            count.astype(np.int64),
+            pivot.astype(np.int64),
+            maxq.astype(np.int64),
+        )

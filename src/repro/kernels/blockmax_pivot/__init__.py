@@ -1,0 +1,12 @@
+"""Block-Max WAND pivot selection kernel family (DESIGN.md §9)."""
+
+from .kernel import (
+    AUX_COUNT,
+    AUX_MAXQ,
+    AUX_PIVOT,
+    PMETA_NBLK,
+    QMIN_NONE,
+    pivot_select_blocks,
+)
+from .ops import dequant_table, pivot_select, pivot_select_np, qmin_for
+from .ref import pivot_select_ref

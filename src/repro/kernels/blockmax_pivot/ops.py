@@ -1,0 +1,181 @@
+"""Wrappers + numpy mirror for the Block-Max pivot kernel (DESIGN.md §9).
+
+Same backend triple as ``vbyte_decode`` / ``bm25_score``: ``"pallas"`` (the
+MXU kernel), ``"ref"`` (jnp oracle), ``"numpy"`` (vectorized host mirror,
+the CPU serving path).  The contract is integer-only, so all three are
+bit-identical by construction -- property-tested in
+tests/test_pivot_kernel.py.
+
+The float -> integer reduction lives here too (``qmin_for``): the engines
+fold the admissibility envelope -- theta, the per-term multiplicity, and
+a per-block co-candidate rest bound -- into the minimal admissible u8
+bound code per block, in float64 on the host, once per (query, term) per
+round.  The per-lane test the device then runs (``block_max_q >= qmin``)
+is EXACTLY the host's float test ``mult * bound(b) + rest(b) >= theta``:
+no rounding hazard can make the device pivot skip a block the float math
+would keep.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
+from repro.kernels.vbyte_decode.ops import _resolve_interpret
+
+from .kernel import (
+    AUX_COUNT,
+    AUX_MAXQ,
+    AUX_PIVOT,
+    PMETA_NBLK,
+    QMIN_NONE,
+    pivot_select_blocks,
+)
+from .ref import pivot_select_ref
+
+_I32_MAX = 2**31 - 1
+
+# jitted oracle, called on pow2-padded row counts so traces are reused
+_pivot_ref_jit = None
+
+
+def _jitted_ref():
+    global _pivot_ref_jit
+    if _pivot_ref_jit is None:
+        import jax
+
+        _pivot_ref_jit = jax.jit(pivot_select_ref)
+    return _pivot_ref_jit
+
+
+def _pow2_rows(n: int) -> int:
+    return max(BM, 1 << (max(n, 1) - 1).bit_length())
+
+
+def _qmin_2d(qmins, n: int) -> np.ndarray:
+    """Accept per-row scalars or per-lane tiles; always return [n, 128]."""
+    q = np.asarray(qmins, np.int64)
+    if q.ndim == 1:
+        q = np.broadcast_to(q[:, None], (n, BLOCK_VALS))
+    return q
+
+
+def dequant_table(bound_scale) -> np.ndarray:
+    """[256] float64 dequantized bound per u8 code, via the f32 contract.
+
+    Entry q is ``float64(float32(q) * bound_scale)`` -- the exact value
+    ``RankedSidecar.block_bounds()`` assigns a block with code q, so float
+    tests against these entries reproduce the engine's bound math bit for
+    bit.
+    """
+    return (
+        np.arange(QMIN_NONE, dtype=np.float32) * np.float32(bound_scale)
+    ).astype(np.float64)
+
+
+def qmin_for(mult, rest, theta, deq64: np.ndarray) -> np.ndarray:
+    """Minimal admissible bound code per block: the smallest q with
+    ``mult[b] * deq64[q] + rest[b] >= theta[b]`` (QMIN_NONE when none
+    passes).
+
+    rest: [B] float64 per-block co-candidate upper bound; mult / theta:
+    per-block term multiplicity and threshold, scalars or [B] vectors
+    (the engines batch every (query, term) pair of a round into ONE call
+    -- a ``theta[b] = -inf`` block keeps everything).  All math float64:
+    exact over the f32 contract values, so the integer reduction loses
+    nothing.  ``deq64`` ascends with q and mult > 0, so the predicate is
+    monotone in q and an 8-step vectorized bisection (the EXACT predicate
+    at every probe -- no rearranged division that could shift the
+    boundary) pins the minimal code per block.
+    """
+    rest = np.asarray(rest, np.float64)
+    mult = np.asarray(mult, np.float64)
+    theta = np.asarray(theta, np.float64)
+    lo = np.zeros(len(rest), np.int64)
+    hi = np.full(len(rest), QMIN_NONE, np.int64)  # 256 = "no code passes"
+    while True:
+        open_ = hi > lo
+        if not open_.any():
+            return lo
+        mid = (lo + hi) >> 1  # open rows: < hi <= 256, a real code
+        # resolved rows may sit at lo == hi == 256; clamp their (unused)
+        # probe index and let the open_ mask discard the result
+        ok = mult * deq64[np.minimum(mid, QMIN_NONE - 1)] + rest >= theta
+        hi = np.where(open_ & ok, mid, hi)
+        lo = np.where(open_ & ~ok, mid + 1, lo)
+
+
+def pivot_select_np(qb, qmins, nblks):
+    """Numpy mirror of ``pivot_select_blocks``.
+
+    qb: [nr, 128] bound codes; qmins: [nr, 128] per-lane codes (or [nr]
+    scalars, broadcast); nblks: [nr].  Returns (compact [nr, 128],
+    count [nr], pivot [nr], maxq [nr]) int64 with the kernel contract
+    (compact = kept lane indices ascending, -1 padded).
+    """
+    qb = np.asarray(qb, np.int64)
+    nr = qb.shape[0]
+    lane = np.arange(BLOCK_VALS, dtype=np.int64)
+    keep = (qb >= _qmin_2d(qmins, nr)) & (
+        lane[None, :] < np.asarray(nblks, np.int64)[:, None]
+    )
+    count = keep.sum(axis=1)
+    compact = np.full((nr, BLOCK_VALS), -1, np.int64)
+    rows_i, lanes_i = np.nonzero(keep)
+    if len(rows_i):
+        pos = (np.cumsum(keep, axis=1) - 1)[rows_i, lanes_i]
+        compact[rows_i, pos] = lanes_i
+    maxq = np.where(keep, qb, -1).max(axis=1) if nr else np.zeros(0, np.int64)
+    pivot = np.where(keep & (qb == maxq[:, None]), lane[None, :], _I32_MAX).min(axis=1)
+    pivot = np.where(count > 0, pivot, -1)
+    return compact, count, pivot, maxq
+
+
+def pivot_select(
+    qb, qmins, nblks, backend: str = "numpy", interpret: bool | None = None
+):
+    """Pivot selection over gathered bound chunks; numpy in/out, all
+    backends.  Returns (compact, count, pivot, maxq) as
+    ``pivot_select_np`` -- bit-identical whatever the backend.
+    """
+    if backend == "numpy":
+        return pivot_select_np(qb, qmins, nblks)
+    if backend not in ("ref", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    qb = np.asarray(qb, np.int64)
+    n = qb.shape[0]
+    if n == 0:
+        z = np.zeros(0, np.int64)
+        return np.zeros((0, BLOCK_VALS), np.int64), z, z, z
+    pad = _pow2_rows(n) - n  # pow2 buckets: jit traces are reused
+    qb_p = np.zeros((n + pad, BLOCK_VALS), np.int32)
+    qb_p[:n] = qb
+    qmins_p = np.full((n + pad, BLOCK_VALS), QMIN_NONE, np.int32)
+    qmins_p[:n] = _qmin_2d(qmins, n)
+    nblks_p = np.zeros(n + pad, np.int32)
+    nblks_p[:n] = np.asarray(nblks, np.int64)
+    if backend == "ref":
+        compact, count, pivot, maxq = _jitted_ref()(
+            jnp.asarray(qb_p), jnp.asarray(qmins_p), jnp.asarray(nblks_p)
+        )
+    else:
+        meta = np.zeros((n + pad, BLOCK_VALS), np.int32)
+        meta[:, PMETA_NBLK] = nblks_p
+        out, aux = pivot_select_blocks(
+            jnp.asarray(qb_p),
+            jnp.asarray(qmins_p),
+            jnp.asarray(meta),
+            interpret=_resolve_interpret(interpret),
+        )
+        compact = out
+        count = aux[:, AUX_COUNT]
+        pivot = aux[:, AUX_PIVOT]
+        maxq = aux[:, AUX_MAXQ]
+    return (
+        np.asarray(compact)[:n].astype(np.int64),
+        np.asarray(count)[:n].astype(np.int64),
+        np.asarray(pivot)[:n].astype(np.int64),
+        np.asarray(maxq)[:n].astype(np.int64),
+    )

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the Block-Max pivot selection kernel (DESIGN.md §9).
+
+Integer-only arithmetic, so it is bit-identical to the pallas kernel and
+the numpy mirror by construction.  Compaction here is a stable argsort
+(kept lanes keyed below dropped ones) instead of the kernel's one-hot
+matmul -- same result, idiomatic XLA.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
+
+_I32_MAX = 2**31 - 1
+
+
+def pivot_select_ref(qb, qmins, nblks):
+    """Keep-test + compaction + pivot over gathered bound chunks.
+
+    qb: [nr, 128] int32 bound codes; qmins: [nr, 128] int32 per-lane
+    minimal admissible codes; nblks: [nr] int32 valid-lane counts.
+    Returns (compact [nr, 128], count [nr], pivot [nr], maxq [nr]), all
+    int32, with the exact contract of ``kernel.pivot_select_blocks``
+    (compact is the kept lane indices ascending, -1 past the count; pivot
+    is the lowest lane attaining the max surviving bound, -1 when none).
+    """
+    nr = qb.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (nr, BLOCK_VALS), 1)
+    keep = (qb >= qmins) & (lane < nblks[:, None])
+    count = jnp.sum(keep.astype(jnp.int32), axis=1)
+    # stable sort: kept lanes (key = lane) precede dropped ones (key =
+    # lane + 128), each group ascending -- the compacted candidate list
+    order = jnp.argsort(
+        jnp.where(keep, lane, lane + BLOCK_VALS), axis=1
+    ).astype(jnp.int32)
+    compact = jnp.where(lane < count[:, None], order, -1)
+    maxq = jnp.max(jnp.where(keep, qb, -1), axis=1)
+    pivot = jnp.min(jnp.where(keep & (qb == maxq[:, None]), lane, _I32_MAX), axis=1)
+    pivot = jnp.where(count > 0, pivot, -1).astype(jnp.int32)
+    return compact, count, pivot, maxq.astype(jnp.int32)

@@ -18,7 +18,10 @@ gains a clustered term-frequency stream, the arena its freq blocks and
 block-max sidecar, and queries run through the Block-Max MaxScore/WAND
 ``repro.ranked.TopKEngine``.  ``--compare-scalar`` then verifies every
 batch against the exhaustive-scoring oracle (identical top-k, ties by
-docID) and reports the speedup.
+docID) and reports the speedup.  ``--resident kernel`` drops the host
+impact mirror and runs the Block-Max pruning through the
+``blockmax_pivot`` kernel over resident bound tiles (DESIGN.md §9) --
+same top-k, HBM-resident configuration.
 
 ``--shards N`` list-hash-partitions the arena into N shards (DESIGN.md §6)
 and routes every cursor batch per shard: one device per shard under
@@ -96,7 +99,8 @@ def serve_ranked(args, rng, corpus) -> None:
         [int(t) for t in q]
         for q in make_queries(rng, args.n_lists, args.queries, args.arity)
     ]
-    engine = TopKEngine(idx, backend=args.backend, shards=args.shards)
+    engine = TopKEngine(idx, backend=args.backend, shards=args.shards,
+                        resident=args.resident)
     _print_shard_layout(engine)
     engine.topk_batch(queries[: args.batch], args.topk)  # warm mirror + jit
 
@@ -152,6 +156,14 @@ def main() -> None:
                          "instead of boolean AND")
     ap.add_argument("--topk", type=int, default=10,
                     help="k for --ranked serving")
+    ap.add_argument("--resident", default="auto",
+                    choices=["auto", "mirror", "kernel"],
+                    help="ranked residency: 'mirror' prunes on the host "
+                         "impact mirror; 'kernel' keeps only compressed "
+                         "blocks + bound tiles resident and runs the "
+                         "Block-Max pruning through the blockmax_pivot "
+                         "kernel (DESIGN.md §9); 'auto' picks kernel on "
+                         "a real accelerator")
     ap.add_argument("--shards", type=int, default=None,
                     help="list-hash-partition the arena into N shards "
                          "(DESIGN.md §6): shard_map over a device mesh "

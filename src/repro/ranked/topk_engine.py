@@ -47,9 +47,25 @@ int32 probe clip all come from the shared ``core.engine_core.EngineCore``
 contributions hot path routes (term, doc) cursors to per-shard sub-arenas
 (``core.shard.ShardedArena``) and runs the fused bm25 kernel per shard --
 under one ``shard_map`` dispatch when a mesh with one device per shard
-exists -- while the pruning structures (bounds, RMQ, candidate generation)
-stay host-global: only f32 contributions cross the merge boundary, so the
-sharded engine is bit-identical to the unsharded one.
+exists -- while the merge stays a pure scatter: only f32 contributions
+cross the boundary, so the sharded engine is bit-identical to the
+unsharded one.
+
+Residency decides WHERE phase 2 runs (DESIGN.md §9).  ``"mirror"`` keeps
+the host impact mirror and prunes with the range-aligned RMQ bounds plus
+lane-exact filters above.  ``"kernel"`` -- the HBM-resident accelerator
+configuration -- runs the pruning itself through the third kernel family
+(``kernels/blockmax_pivot``): theta and the per-term upper bounds reduce
+to ONE integer per (query, term) on the host (the minimal admissible
+bound code, float64-exact), and the device keeps/compacts the candidate
+blocks of every term of every query in one dispatch over the resident
+``block_max_q`` chunk tiles -- sharded, the qmins broadcast to every
+shard's cursors and the kept blocks scatter back through
+``ShardedArena.rows_of``, so per-round pruning never syncs the mesh.  The
+kept sets are identical across backends and shard counts (the integer
+test is exactly the float test), and the final top-k is identical to the
+oracle in every mode because rescoring is exact wherever candidate
+generation is admissible.
 """
 
 from __future__ import annotations
@@ -59,9 +75,16 @@ import numpy as np
 from repro.core.engine_core import (
     EngineCore,
     build_locate_dev,
+    build_pivot_chunks,
     group_cursors,
     pow2_bucket,
     stage_cursors,
+)
+from repro.kernels.blockmax_pivot.kernel import QMIN_NONE
+from repro.kernels.blockmax_pivot.ops import (
+    dequant_table,
+    pivot_select,
+    qmin_for,
 )
 from repro.kernels.bm25_score.ops import bm25_score_rows
 from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
@@ -84,10 +107,12 @@ class TopKEngine:
         into a host per-lane impact mirror (through the chosen backend's
         kernel -- all backends are bit-identical) and serves batches from
         it, which also enables lane-exact candidate filtering; "kernel"
-        keeps only compressed blocks resident and re-scores the touched
-        rows through the fused kernel every batch -- the HBM-resident
-        accelerator configuration.  "auto" picks "kernel" on a real
-        accelerator, "mirror" elsewhere.
+        keeps only compressed blocks + bound tiles resident, runs the
+        Block-Max pruning itself through the ``blockmax_pivot`` kernel
+        (DESIGN.md §9) and re-scores the touched rows through the fused
+        bm25 kernel every batch -- the HBM-resident accelerator
+        configuration.  "auto" picks "kernel" on a real accelerator,
+        "mirror" elsewhere.  Both return the oracle's exact top-k.
     shards: list-hash-partition the arena and route the device
         contributions dispatch per shard (see module docstring).  None =
         unsharded.
@@ -115,6 +140,8 @@ class TopKEngine:
             "scored_rows": 0,
             "blocks_kept": 0,
             "blocks_total": 0,
+            "pivot_chunks": 0,
+            "score_evictions": 0,  # hot-block score cache flushes (rows)
         }
         a, r = self.arena, self.ranked
         self.k1p1 = np.float32(r.params.k1 + 1.0)
@@ -144,6 +171,15 @@ class TopKEngine:
         self.sharded = None
         self._shard_fns: list = []
         self._smap_fn = None
+        # device-pivot state (resident="kernel"): bound-chunk tiles + the
+        # f64 dequant table behind the exact theta -> qmin reduction
+        self._deq64 = dequant_table(r.bound_scale)
+        self._pchunks = None
+        self._pivot_fn = None
+        self._shard_pivot_fns: list = []
+        self._smap_pivot = None
+        self._scache_rows = np.zeros(0, np.int64)  # sorted hot rows
+        self._scache = np.zeros((0, BLOCK_VALS), np.float32)
         if shards is not None:
             from repro.core.shard import ShardedArena
 
@@ -151,6 +187,7 @@ class TopKEngine:
                 self.arena, int(shards), mesh=shard_mesh
             )
             self._shard_fns = [None] * self.sharded.n_shards
+            self._shard_pivot_fns = [None] * self.sharded.n_shards
 
     def _lane_scores(self) -> np.ndarray:
         """The impact mirror: every lane scored ONCE through the chosen
@@ -240,6 +277,384 @@ class TopKEngine:
         hi_s = np.clip(np.maximum(hi - (1 << lvl), lo), 0, nb - 1)
         m = np.maximum(self._rmq[lvl, lo_s], self._rmq[lvl, hi_s])
         return np.where(ok, m, 0.0)
+
+    def _aligned_rest(self, terms, mult):
+        """Per term j: (rows, rest) over every block of list terms[j].
+
+        ``rest[b] = sum_{j2 != j} mult[j2] * max bound of the terms[j2]-
+        blocks overlapping b's docID span`` (an O(1) sparse-table
+        range-max per pair) -- the range-aligned co-candidate bound behind
+        BOTH residencies' pruning: the mirror path tests ``mult[j] *
+        bound(b) + rest(b) >= theta`` directly, the kernel path reduces
+        the identical test to per-block integer codes (``qmin_for``).
+        The own-term bound is deliberately NOT folded in; every term of
+        the sum is an exact float64 over f32 contract values, so the sum
+        is exact and the two residencies prune bit-identically.
+        """
+        a = self.arena
+        out = []
+        for j, t in enumerate(terms):
+            t = int(t)
+            r0 = int(a.list_blk_offsets[t])
+            r1 = int(a.list_blk_offsets[t + 1])
+            rows = np.arange(r0, r1, dtype=np.int64)
+            lo = a.block_base[rows] + 1  # first docID a block can hold
+            hi = a.block_keys[rows] - t * a.stride  # last real docID
+            rest = np.zeros(len(rows), np.float64)
+            for j2, t2 in enumerate(terms):
+                if j2 == j:
+                    continue
+                t2 = int(t2)
+                s1 = int(a.list_blk_offsets[t2 + 1])
+                ks = np.searchsorted(
+                    a.block_keys, lo + t2 * a.stride, side="left"
+                )
+                ke = np.searchsorted(
+                    a.block_keys, hi + t2 * a.stride, side="left"
+                )
+                rest += mult[j2] * self._rmq_max(ks, np.minimum(ke + 1, s1))
+            out.append((rows, rest))
+        return out
+
+    # ------------------------------------------------------------------
+    # device Block-Max pivot (resident="kernel"): candidate blocks via
+    # the blockmax_pivot kernel over resident bound-chunk tiles
+    # ------------------------------------------------------------------
+    def _pivot_chunks_init(self):
+        if self._pchunks is None:
+            self._pchunks = build_pivot_chunks(self.arena)
+        return self._pchunks
+
+    # hot-block score cache bound (rows): 2^17 rows x 512 B = 64 MB max
+    SCORE_CACHE_ROWS = 1 << 17
+
+    def _score_rows_batch(self, urows: np.ndarray) -> np.ndarray:
+        """[len(urows), 128] f32 lane scores of UNIQUE SORTED arena rows
+        through the fused kernel, cached across batches.
+
+        resident="kernel" holds no arena-wide impact mirror -- that is
+        the point -- but hot blocks recur across batches (and within one:
+        the pivot's lane-exact candidate filter and the rescore's member
+        scoring touch heavily overlapping row sets), so scored rows live
+        in a sorted-array hot-block cache with fully vectorized lookups
+        (one searchsorted per call; a python dict walk here costs more
+        than the scoring).  The cache is row-BOUNDED, not an
+        unconditional mirror: past ``SCORE_CACHE_ROWS`` it is flushed
+        (counted in ``stats["score_evictions"]``) -- eviction-correct
+        because a re-scored row is bit-identical."""
+        out = np.empty((len(urows), BLOCK_VALS), np.float32)
+        n = len(self._scache_rows)
+        if n:
+            pos = np.minimum(
+                np.searchsorted(self._scache_rows, urows), n - 1
+            )
+            hit = self._scache_rows[pos] == urows
+            if hit.any():
+                out[hit] = self._scache[pos[hit]]
+        else:
+            hit = np.zeros(len(urows), bool)
+        miss = ~hit
+        if miss.any():
+            mrows = urows[miss]
+            self.stats["scored_rows"] += len(mrows)
+            scored = bm25_score_rows(
+                self.ranked.freq_lens, self.ranked.freq_data,
+                self.ranked.norm_q, mrows,
+                self.ranked.idf[self.lob[mrows]],
+                self.ranked.norm_table, self.k1p1,
+                backend=self.backend, interpret=self.interpret,
+            )
+            out[miss] = scored
+            if n + len(mrows) > self.SCORE_CACHE_ROWS:
+                # flush, and truncate an over-budget miss set so the row
+                # bound holds even for one giant batch (mrows is sorted,
+                # so the kept prefix keeps the cache sorted too)
+                self.stats["score_evictions"] += n
+                keep = min(len(mrows), self.SCORE_CACHE_ROWS)
+                self._scache_rows = mrows[:keep].copy()
+                self._scache = scored[:keep].copy()
+            else:
+                rows2 = np.concatenate([self._scache_rows, mrows])
+                order = np.argsort(rows2, kind="stable")
+                self._scache_rows = rows2[order]
+                self._scache = np.concatenate([self._scache, scored])[order]
+        return out
+
+    def _build_pivot_fn(self, pc):
+        """Jitted gather -> pivot_graph over ONE arena's resident chunk
+        tiles (the global ones, or a shard's)."""
+        import jax
+
+        from repro.core.engine_core import pivot_graph
+
+        qb_dev, nblk_dev = pc.dev.qb, pc.dev.nblk
+        backend, interpret = self.backend, self.interpret
+
+        def fn(rows, qmins):
+            return pivot_graph(
+                qb_dev[rows], qmins, nblk_dev[rows], backend, interpret
+            )
+
+        return jax.jit(fn)
+
+    def _pivot_dev_on(self, fn, rows, qmins):
+        """Device dispatch of one arena's jitted pivot fn: pow2 cursor
+        buckets (padding cursors stage qmin = QMIN_NONE and keep nothing),
+        chunked at MAX_BUCKET.  Returns (kept lanes [n, 128], counts)."""
+        import jax.numpy as jnp
+
+        n = len(rows)
+        kept = np.empty((n, BLOCK_VALS), np.int64)
+        cnt = np.empty(n, np.int64)
+        for s in range(0, n, self.MAX_BUCKET):
+            e = min(s + self.MAX_BUCKET, n)
+            b = pow2_bucket(e - s)
+            rp = np.zeros(b, np.int32)
+            qp = np.full((b, BLOCK_VALS), QMIN_NONE, np.int32)
+            rp[: e - s] = rows[s:e]
+            qp[: e - s] = qmins[s:e]
+            out, c, _, _ = fn(jnp.asarray(rp), jnp.asarray(qp))
+            kept[s:e] = np.asarray(out)[: e - s]
+            cnt[s:e] = np.asarray(c)[: e - s]
+        return kept, cnt
+
+    def _pivot_select(self, specs, theta):
+        """Emission + ONE device pivot dispatch for a whole batch.
+
+        The host reduces the float admissibility envelope to u8 codes in
+        float64 -- per block b of term t,
+
+          ``mult_t * bound(b) + rest(b) >= theta``   (aligned bound) and
+          ``mult_t * bound(b) >= theta * ub_t / total_ub``  (share floor)
+
+        <=> ``block_max_q[b] >= qmin[b]`` exactly, with rest the range-
+        aligned co-candidate bound of ``_aligned_rest``.  The share floor
+        is admissible at block level for the same reason the mirror's
+        lane-exact version is: a doc with score >= theta must beat its
+        proportional share in SOME term, and the generator runs once per
+        term, so the doc materializes where it does -- a block whose
+        BOUND misses the share cannot contain a lane that beats it.
+
+        Every chunk of every surviving term then goes through ONE pivot
+        dispatch over the resident bound tiles (per shard under
+        ``shards=``, qmin tiles broadcast to each shard's cursor runs,
+        kept blocks scattered back to global rows via ``rows_of``).
+        Admissible by construction: a block whose bound clears the
+        envelope always comes back, on every backend and shard count.
+
+        Returns ``(segments, params)``: ``segments[(i, j)] = (kept global
+        rows, aligned rest of those rows)`` per query i / term slot j;
+        ``params[(i, j)] = (mult_j, share_j)``.
+        """
+        use_dev = self._use_device
+        routed = self.sharded is not None and use_dev
+        pc = None if routed else self._pivot_chunks_init()
+        pcs = self.sharded.pivot_chunks if routed else None
+        segments: dict = {}
+        params: dict = {}
+        rests: dict = {}
+        # ---- collect every (query, term) pair, then ONE batched qmin
+        # reduction over all their blocks (the theta "broadcast" of the
+        # round is this single float64 -> u8 fold)
+        pair_meta, rest_l, mult_l, theta_l, share_l = [], [], [], [], []
+        for i, (terms, mult) in enumerate(specs):
+            if len(terms) == 0:
+                continue
+            ub = mult * self.list_ub[terms]
+            total_ub = float(ub.sum())
+            aligned = self._aligned_rest(terms, mult)
+            for j, (rows_t, rest) in enumerate(aligned):
+                nb_t = len(rows_t)
+                self.stats["blocks_total"] += nb_t
+                if nb_t == 0:
+                    continue
+                share = (
+                    float(theta[i]) * float(ub[j]) / total_ub
+                    if total_ub > 0 and np.isfinite(theta[i])
+                    else -np.inf
+                )
+                pair_meta.append((i, j, int(terms[j]), nb_t))
+                rest_l.append(rest)
+                mult_l.append(float(mult[j]))
+                theta_l.append(float(theta[i]))
+                share_l.append(share)
+                params[(i, j)] = (float(mult[j]), share)
+                rests[(i, j)] = (int(rows_t[0]), rest)
+        if not pair_meta:
+            return segments, params
+        sizes = np.array([m[3] for m in pair_meta])
+        qmin_all = qmin_for(
+            np.repeat(mult_l, sizes),
+            np.concatenate(rest_l),
+            np.repeat(theta_l, sizes),
+            self._deq64,
+        )
+        # the proportional-share floor, one bisection over the pairs
+        q_share = qmin_for(
+            np.asarray(mult_l), np.zeros(len(pair_meta)),
+            np.asarray(share_l), self._deq64,
+        )
+        qmin_all = np.maximum(qmin_all, np.repeat(q_share, sizes))
+
+        rows_l, qmin_l, shard_l, cur_ij = [], [], [], []
+        pair_cuts = np.zeros(len(pair_meta) + 1, np.int64)
+        np.cumsum(sizes, out=pair_cuts[1:])
+        for p, (i, j, t, nb_t) in enumerate(pair_meta):
+            qmin_b = qmin_all[pair_cuts[p] : pair_cuts[p + 1]]
+            if qmin_b.min() >= QMIN_NONE:
+                del params[(i, j)], rests[(i, j)]
+                continue  # no block of this term can reach theta
+            if routed:
+                s = int(self.sharded.owner[t])
+                lt = int(self.sharded.local_list[t])
+                offs = pcs[s].offsets
+                c0, c1 = int(offs[lt]), int(offs[lt + 1])
+                shard_l.append(np.full(c1 - c0, s, np.int64))
+            else:
+                c0, c1 = int(pc.offsets[t]), int(pc.offsets[t + 1])
+            tile = np.full(((c1 - c0) * BLOCK_VALS,), QMIN_NONE, np.int64)
+            tile[:nb_t] = qmin_b
+            rows_l.append(np.arange(c0, c1, dtype=np.int64))
+            qmin_l.append(tile.reshape(c1 - c0, BLOCK_VALS))
+            cur_ij.extend([(i, j)] * (c1 - c0))
+        if not rows_l:
+            return segments, params
+        rows = np.concatenate(rows_l)
+        qmins_c = np.concatenate(qmin_l)
+        self.stats["pivot_chunks"] += len(rows)
+
+        # ---- one pivot dispatch (per shard when routed)
+        if not use_dev:
+            kept, cnt, _, _ = pivot_select(
+                pc.qb[rows], qmins_c, pc.nblk[rows],
+                backend=self.backend, interpret=self.interpret,
+            )
+            grows = (pc.base[rows][:, None] + kept)[kept >= 0]
+        elif not routed:
+            if self._pivot_fn is None:
+                self._pivot_fn = self._build_pivot_fn(pc)
+            kept, cnt = self._pivot_dev_on(self._pivot_fn, rows, qmins_c)
+            grows = (pc.base[rows][:, None] + kept)[kept >= 0]
+        else:
+            sa = self.sharded
+            shards = np.concatenate(shard_l)
+            order = np.argsort(shards, kind="stable")
+            cuts = np.searchsorted(shards[order], np.arange(sa.n_shards + 1))
+            rows_o, qmins_o = rows[order], qmins_c[order]
+            cur_ij = [cur_ij[c] for c in order]
+            kept = np.empty((len(rows), BLOCK_VALS), np.int64)
+            cnt = np.empty(len(rows), np.int64)
+            if sa.mesh is not None:
+                if self._smap_pivot is None:
+                    from repro.core.shard import ShardMapPivot
+
+                    self._smap_pivot = ShardMapPivot(
+                        sa, backend=self.backend, interpret=self.interpret,
+                        max_bucket=self.MAX_BUCKET,
+                    )
+                kept, cnt, _, _ = self._smap_pivot(rows_o, qmins_o, cuts)
+            else:
+                for s in range(sa.n_shards):
+                    sl = slice(int(cuts[s]), int(cuts[s + 1]))
+                    if sl.start == sl.stop:
+                        continue
+                    if self._shard_pivot_fns[s] is None:
+                        self._shard_pivot_fns[s] = self._build_pivot_fn(
+                            pcs[s]
+                        )
+                    kept[sl], cnt[sl] = self._pivot_dev_on(
+                        self._shard_pivot_fns[s], rows_o[sl], qmins_o[sl]
+                    )
+        self.stats["blocks_kept"] += int(cnt.sum())
+        # per-cursor output cuts: shared by the routed scatter below and
+        # the segment grouping (one cumsum, one source of truth)
+        gcuts = np.zeros(len(rows) + 1, np.int64)
+        np.cumsum(cnt, out=gcuts[1:])
+        if routed:
+            # shard-local lanes -> local rows -> GLOBAL rows (pure scatter)
+            sa = self.sharded
+            grows = np.empty(int(cnt.sum()), np.int64)
+            for s in range(sa.n_shards):
+                sl = slice(int(cuts[s]), int(cuts[s + 1]))
+                if sl.start == sl.stop:
+                    continue
+                k_s = kept[sl]
+                local = (pcs[s].base[rows_o[sl]][:, None] + k_s)[k_s >= 0]
+                grows[gcuts[sl.start] : gcuts[sl.stop]] = sa.rows_of[s][
+                    local
+                ]
+
+        # ---- group surviving rows into per-(query, term) segments with
+        # their aligned rest values (cursors of one term are contiguous)
+        acc: dict = {}
+        for c, ij in enumerate(cur_ij):
+            sl = slice(int(gcuts[c]), int(gcuts[c + 1]))
+            if sl.start != sl.stop:
+                acc.setdefault(ij, []).append(grows[sl])
+        for ij, chunks in acc.items():
+            rows_k = np.concatenate(chunks)
+            r0, rest = rests[ij]
+            segments[ij] = (rows_k, rest[rows_k - r0])
+        return segments, params
+
+    def _pivot_rows(self, specs, theta) -> list[np.ndarray]:
+        """Per query: ALL arena rows (blocks) surviving the device pivot
+        at the query's theta (the block-level keep-set; property-tested
+        for admissibility in tests/test_pivot_kernel.py)."""
+        segments, _ = self._pivot_select(specs, theta)
+        out = [np.zeros(0, np.int64) for _ in specs]
+        by_q: dict = {}
+        for (i, _), (rows_k, _) in sorted(segments.items()):
+            by_q.setdefault(i, []).append(rows_k)
+        for i, chunks in by_q.items():
+            out[i] = np.concatenate(chunks)
+        return out
+
+    def _pivot_candidates(self, specs, theta) -> list[np.ndarray]:
+        """Per query: candidate docIDs from the surviving blocks, lane-
+        exactly filtered through the fused scoring kernel.
+
+        The kept blocks' lane scores come from ``_score_rows_batch`` (the
+        row-bounded hot-block score cache shared with the rescore phase,
+        so a hot row is scored once however many phases or batches touch
+        it), and the same two admissible tests as the mirror path's
+        ``_block_docs_filtered`` run on the true contributions:
+        ``c + rest >= theta`` and ``c >= share``.  Scores are
+        bit-identical across backends and residencies, so the candidate
+        sets are too.
+        """
+        segments, params = self._pivot_select(specs, theta)
+        self._flat_init()
+        a = self.arena
+        out: list[list[np.ndarray]] = [[] for _ in specs]
+        # only finite-theta segments get lane-filtered, so only THEIR rows
+        # are worth scoring: a theta = -inf query (under-filled seed) keeps
+        # whole posting lists, and scoring them would just flush hot rows
+        # out of the bounded cache to produce scores nobody reads
+        fin = [
+            rows_k
+            for (i, _), (rows_k, _) in segments.items()
+            if np.isfinite(theta[i])
+        ]
+        scores_u = None
+        if fin:
+            urows = np.unique(np.concatenate(fin))
+            scores_u = self._score_rows_batch(urows)
+        for (i, j), (rows_k, rest_k) in sorted(segments.items()):
+            vals = self.core.flat_vals[:-1].reshape(-1, BLOCK_VALS)[rows_k]
+            lv = a.lane_valid[rows_k]
+            if scores_u is None or not np.isfinite(theta[i]):
+                out[i].append(vals[lv])
+                continue
+            mult_t, share = params[(i, j)]
+            pos = np.searchsorted(urows, rows_k)
+            c = mult_t * scores_u[pos]
+            ok = lv & (c + rest_k[:, None] >= theta[i]) & (c >= share)
+            out[i].append(vals[ok])
+        return [
+            np.concatenate(chunks) if chunks else np.zeros(0, np.int64)
+            for chunks in out
+        ]
 
     # ------------------------------------------------------------------
     # batched per-(term, doc) contributions
@@ -394,9 +809,12 @@ class TopKEngine:
         specs: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
         theta: np.ndarray | None = None,
         k: int | None = None,
-    ) -> list[tuple[np.ndarray, np.ndarray]]:
+    ) -> tuple[list[tuple[np.ndarray, np.ndarray]], np.ndarray | None]:
         """specs: per query (unique terms, multiplicities, candidate docs).
-        Returns per query (surviving docs, exact f64 scores).
+        Returns (per query (surviving docs, exact f64 scores), the raised
+        per-query theta -- None when no threshold pass ran).  The raised
+        theta is monotone: never below the theta passed in (property-
+        tested in tests/test_pivot_kernel.py).
 
         One membership pass over the flat lane mirror resolves EVERY
         (term, doc) pair of the batch at once (a single searchsorted; no
@@ -427,7 +845,7 @@ class TopKEngine:
             return [
                 (np.zeros(0, np.int64), np.zeros(0, np.float64))
                 for _ in specs
-            ]
+            ], (None if theta is None else theta.copy())
         t_rep = np.concatenate(t_chunks)
         d_til = np.concatenate(d_chunks)
         pos = np.searchsorted(core.flat_keys, d_til + t_rep * a.stride, "left")
@@ -486,14 +904,7 @@ class TopKEngine:
                 g_pos = pos[g_idx]
                 rows_n, lanes = g_pos >> 7, g_pos & (BLOCK_VALS - 1)
                 urows, inv = np.unique(rows_n, return_inverse=True)
-                self.stats["scored_rows"] += len(urows)
-                row_scores = bm25_score_rows(
-                    self.ranked.freq_lens, self.ranked.freq_data,
-                    self.ranked.norm_q, urows,
-                    self.ranked.idf[self.lob[urows]],
-                    self.ranked.norm_table, self.k1p1,
-                    backend=self.backend, interpret=self.interpret,
-                )
+                row_scores = self._score_rows_batch(urows)
                 contrib = row_scores[inv, lanes]
             else:
                 contrib = core.flat_scores[pos[g_idx]]
@@ -514,7 +925,7 @@ class TopKEngine:
             scores = score_subset(sels)
             return [
                 (docs, sc) for (_, _, docs), sc in zip(specs, scores)
-            ]
+            ], None
 
         # ---- round A: the max(4k, 64) highest-UB docs, scored exactly
         # (argpartition: ANY k-superset works here, order does not matter)
@@ -549,7 +960,7 @@ class TopKEngine:
             docs_i = np.concatenate([docs[sel_a[i]], docs[sel_b[i]]])
             sc_i = np.concatenate([scores_a[i], scores_b[i]])
             out.append((docs_i, sc_i))
-        return out
+        return out, theta2
 
     # ------------------------------------------------------------------
     # the Block-Max MaxScore batch loop
@@ -590,7 +1001,7 @@ class TopKEngine:
             docs = np.unique(np.concatenate(chunks))
             seed_specs.append((terms, mult, docs))
             seed_qids.append(i)
-        seed_scored = self._score_specs(seed_specs)
+        seed_scored, _ = self._score_specs(seed_specs)
         self.stats["seed_pairs"] += sum(
             len(t) * len(d) for t, _, d in seed_specs
         )
@@ -603,8 +1014,36 @@ class TopKEngine:
             if len(docs) >= k:
                 theta[i] = np.partition(sc, len(sc) - k)[len(sc) - k]
 
-        # ---- phase 2: range-aligned block pivot (Block-Max WAND).  A doc
-        # in block b of term t scores at most
+        # ---- phase 2, resident="kernel": the device Block-Max pivot.
+        # Theta reduces to one qmin per (query, term) on the host; the
+        # blockmax_pivot kernel keeps/compacts candidate blocks over the
+        # resident bound tiles in ONE dispatch (per shard when sharded,
+        # qmins broadcast to every shard) -- no host work per block, no
+        # sync per pruning round.  Admissible, so phase 3's exact rescore
+        # still reproduces the oracle bit for bit.
+        if self.resident == "kernel":
+            cand_docs = self._pivot_candidates(specs, theta)
+            final_specs = []
+            for i, (terms, mult) in enumerate(specs):
+                if len(terms) == 0:
+                    final_specs.append((terms, mult, np.zeros(0, np.int64)))
+                    continue
+                cand_chunks = [seeds[i]] if i in seeds else []
+                if len(cand_docs[i]):
+                    cand_chunks.append(cand_docs[i])
+                cand = (
+                    np.unique(np.concatenate(cand_chunks))
+                    if cand_chunks
+                    else np.zeros(0, np.int64)
+                )
+                self.stats["candidates"] += len(cand)
+                final_specs.append((terms, mult, cand))
+            final_scored, _ = self._score_specs(final_specs, theta, k)
+            return [topk_select(docs, sc, k) for docs, sc in final_scored]
+
+        # ---- phase 2, resident="mirror": range-aligned block pivot
+        # (Block-Max WAND) on the host.  A doc in block b of term t scores
+        # at most
         #   mult_t * bound(b) + sum_{t' != t} mult_t' * max bound of the
         #                       t'-blocks overlapping b's docID span
         # so a block whose aligned upper bound misses theta generates no
@@ -618,32 +1057,11 @@ class TopKEngine:
             ub = mult * self.list_ub[terms]
             total_ub = float(ub.sum())
             cand_chunks = [seeds[i]] if i in seeds else []
-            for j, t in enumerate(terms):
-                t = int(t)
-                r0 = int(a.list_blk_offsets[t])
-                r1 = int(a.list_blk_offsets[t + 1])
-                rows = np.arange(r0, r1, dtype=np.int64)
-                lo = a.block_base[rows] + 1  # first docID a block can hold
-                hi = a.block_keys[rows] - t * a.stride  # last real docID
-                acc = mult[j] * self.bounds[rows]
-                for j2, t2 in enumerate(terms):
-                    if j2 == j:
-                        continue
-                    t2 = int(t2)
-                    s1 = int(a.list_blk_offsets[int(t2) + 1])
-                    ks = np.searchsorted(
-                        a.block_keys, lo + t2 * a.stride, side="left"
-                    )
-                    ke = np.searchsorted(
-                        a.block_keys, hi + t2 * a.stride, side="left"
-                    )
-                    acc += mult[j2] * self._rmq_max(
-                        ks, np.minimum(ke + 1, s1)
-                    )
-                keep = acc >= theta[i]
+            aligned = self._aligned_rest(terms, mult)
+            for j, (rows, rest) in enumerate(aligned):
+                keep = mult[j] * self.bounds[rows] + rest >= theta[i]
                 self.stats["blocks_kept"] += int(keep.sum())
                 self.stats["blocks_total"] += len(rows)
-                rest = acc - mult[j] * self.bounds[rows]
                 share = (
                     float(theta[i]) * float(ub[j]) / total_ub
                     if total_ub > 0 and np.isfinite(theta[i])
@@ -665,5 +1083,5 @@ class TopKEngine:
 
         # ---- phase 3: doc-aligned block-max pivot filter (UB >= theta) +
         # two-round threshold+compact rescore + (score desc, docID asc) cut
-        final_scored = self._score_specs(final_specs, theta, k)
+        final_scored, _ = self._score_specs(final_specs, theta, k)
         return [topk_select(docs, sc, k) for docs, sc in final_scored]

@@ -1,0 +1,123 @@
+"""Unit tests for tools/check_bench.py (ISSUE-5 satellite).
+
+The drift gate must tolerate partial histories: entries carrying records
+of a module group the current run no longer produces, current-run records
+the history has never seen (a bench added after the history began),
+records missing keys, and outright corrupt files -- none of those are
+drift, and none may crash the gate.  Real regressions must still fail it.
+
+The checker is exercised through its CLI (a subprocess per case), exactly
+as tools/tier1.sh and the CI workflows invoke it.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).parent.parent
+CHECK = REPO / "tools" / "check_bench.py"
+
+
+def _entry(records, profile="smoke", sha="abc"):
+    return {"sha": sha, "timestamp": None, "profile": profile, "records": records}
+
+
+def _rec(name, us, module="table5"):
+    return {"name": name, "us_per_call": us, "module": module}
+
+
+def _write(tmp_path, name, history):
+    path = tmp_path / name
+    path.write_text(
+        json.dumps(
+            {
+                "profile": history[-1].get("profile") if history else None,
+                "records": history[-1].get("records", []) if history else [],
+                "history": history,
+            }
+        )
+    )
+    return path
+
+
+def _run(tmp_path, *paths, env_extra=None, args=()):
+    import os
+
+    env = dict(os.environ)
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run(
+        [sys.executable, str(CHECK), *map(str, paths), *args],
+        capture_output=True,
+        text=True,
+        cwd=tmp_path,
+        env=env,
+    )
+
+
+def test_module_group_absent_from_current_run_is_tolerated(tmp_path):
+    """A history entry whose module group vanished from the newest run
+    (bench renamed/retired, or added after the history began) must not
+    KeyError -- only records present on both sides are compared."""
+    history = [
+        _entry([_rec("old_bench", 5e4, module="retired"), _rec("a", 4e4)]),
+        _entry([_rec("a", 4.1e4), _rec("brand_new", 9e4, module="ranked")]),
+    ]
+    path = _write(tmp_path, "BENCH_queries.json", history)
+    out = _run(tmp_path, path)
+    assert out.returncode == 0, out.stderr
+    assert "1 records vs best" in out.stdout  # only "a" is comparable
+
+
+def test_malformed_records_are_skipped(tmp_path):
+    """Records missing name/us_per_call (or not dicts at all) are skipped,
+    not fatal."""
+    history = [
+        _entry([_rec("a", 5e4), {"us_per_call": 3e4}, {"name": "no_us"}]),
+        _entry([_rec("a", 5.2e4), {"name": "no_us"}, "not-a-dict"]),
+    ]
+    path = _write(tmp_path, "BENCH_kernels.json", history)
+    out = _run(tmp_path, path)
+    assert out.returncode == 0, out.stderr
+
+
+def test_corrupt_file_is_skipped(tmp_path):
+    bad = tmp_path / "BENCH_bad.json"
+    bad.write_text("{not json")
+    lst = tmp_path / "BENCH_list.json"
+    lst.write_text(json.dumps([1, 2, 3]))
+    out = _run(tmp_path, bad, lst)
+    assert out.returncode == 0, out.stderr
+    assert "skipping" in out.stdout
+
+
+def test_real_regression_still_fails_and_emits_modules(tmp_path):
+    history = [
+        _entry([_rec("hot", 5e4, module="ranked"), _rec("ok", 5e4)]),
+        _entry([_rec("hot", 2e5, module="ranked"), _rec("ok", 5.5e4)]),
+    ]
+    path = _write(tmp_path, "BENCH_ranked.json", history)
+    emit = tmp_path / "regressed.txt"
+    summary = tmp_path / "summary.md"
+    out = _run(
+        tmp_path,
+        path,
+        args=("--emit-regressed", str(emit)),
+        env_extra={"GITHUB_STEP_SUMMARY": str(summary)},
+    )
+    assert out.returncode == 1
+    assert "hot regressed 4.00x" in out.stderr
+    assert emit.read_text().strip() == "ranked"
+    assert "bench gate" in summary.read_text()
+
+
+def test_different_profiles_never_compared(tmp_path):
+    history = [
+        _entry([_rec("a", 1e4)], profile="quick"),
+        _entry([_rec("a", 9e6)], profile="smoke"),
+    ]
+    path = _write(tmp_path, "BENCH_queries.json", history)
+    out = _run(tmp_path, path)
+    assert out.returncode == 0, out.stderr
+    assert "no 'smoke'-profile baseline" in out.stdout

@@ -1,0 +1,341 @@
+"""Property tests for the Block-Max pivot kernel family (ISSUE-5, §9).
+
+Covers the acceptance surface of the device-resident candidate generation:
+
+* the integer pivot-selection contract is bit-identical across the three
+  kernel backends (numpy mirror / jnp ref / pallas) and matches a scalar
+  brute force (compaction order, counts, pivot lane, max bound);
+* the host theta -> qmin reduction is exact: the integer keep-test the
+  device runs is precisely the float admissibility test, element for
+  element over the whole u8 code grid;
+* pivot admissibility on real engines: the device pivot NEVER skips a
+  block whose ``block_max_q`` upper bound clears theta -- across all
+  three backends and under sharding (kept sets bit-identical to the
+  unsharded numpy mirror);
+* theta monotonicity: the threshold+compact rescore only ever RAISES the
+  per-query theta.
+
+Runs under real hypothesis or the seeded shim in tests/_hypothesis_shim.py.
+"""
+
+import numpy as np
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine_core import build_pivot_chunks
+from repro.core.index import build_partitioned_index
+from repro.data.postings import make_queries, make_ranked_corpus
+from repro.kernels.blockmax_pivot.kernel import QMIN_NONE
+from repro.kernels.blockmax_pivot.ops import (
+    dequant_table,
+    pivot_select,
+    qmin_for,
+)
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
+from repro.ranked.topk_engine import TopKEngine
+
+BACKENDS = ("numpy", "ref", "pallas")
+
+
+def _mk_index(seed, n_lists=6, max_len=1_200, min_len=80):
+    rng = np.random.default_rng(seed)
+    lists, freqs = make_ranked_corpus(
+        rng, n_lists=n_lists, min_len=min_len, max_len=max_len,
+        mean_dense_gap=2.13, frac_dense=0.8,
+    )
+    return build_partitioned_index(lists, "optimal", freqs=freqs)
+
+
+# ---------------------------------------------------------------------------
+# kernel contract
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_pivot_select_backends_bit_identical(seed):
+    """All three backends produce the same integers on random tiles --
+    per-lane qmin tiles and broadcast per-row scalars alike, including
+    edge rows (qmin 0 / QMIN_NONE, nblk 0 / 128)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 40))
+    qb = rng.integers(0, 256, (n, BLOCK_VALS))
+    qmin_tile = rng.integers(0, QMIN_NONE + 1, (n, BLOCK_VALS))
+    qmin_row = rng.integers(0, QMIN_NONE + 1, n)
+    nblks = rng.integers(0, BLOCK_VALS + 1, n)
+    qmin_row[: min(n, 2)] = (0, QMIN_NONE)[: min(n, 2)]
+    nblks[-min(n, 2):] = (0, BLOCK_VALS)[: min(n, 2)]
+    for qmins in (qmin_tile, qmin_row):
+        outs = {
+            be: pivot_select(qb, qmins, nblks, backend=be) for be in BACKENDS
+        }
+        for be in ("ref", "pallas"):
+            for a, b, part in zip(
+                outs["numpy"], outs[be], ("compact", "count", "pivot", "maxq")
+            ):
+                assert np.array_equal(a, b), (be, part, qmins.ndim)
+
+
+def test_pivot_select_matches_brute_force():
+    rng = np.random.default_rng(7)
+    n = 25
+    qb = rng.integers(0, 256, (n, BLOCK_VALS))
+    qmins = rng.integers(0, QMIN_NONE + 1, n)
+    nblks = rng.integers(0, BLOCK_VALS + 1, n)
+    compact, count, pivot, maxq = pivot_select(qb, qmins, nblks)
+    for i in range(n):
+        kept = [
+            l for l in range(int(nblks[i])) if qb[i, l] >= qmins[i]
+        ]
+        assert count[i] == len(kept)
+        assert list(compact[i, : count[i]]) == kept
+        assert (compact[i, count[i]:] == -1).all()
+        if kept:
+            m = max(int(qb[i, l]) for l in kept)
+            assert maxq[i] == m
+            assert pivot[i] == min(l for l in kept if qb[i, l] == m)
+        else:
+            assert maxq[i] == -1 and pivot[i] == -1
+
+
+def test_pivot_select_empty():
+    z = np.zeros(0, np.int64)
+    for be in BACKENDS:
+        compact, count, pivot, maxq = pivot_select(
+            np.zeros((0, BLOCK_VALS), np.int64), z, z, backend=be
+        )
+        assert compact.shape == (0, BLOCK_VALS)
+        assert len(count) == len(pivot) == len(maxq) == 0
+
+
+# ---------------------------------------------------------------------------
+# theta -> qmin reduction
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_qmin_reduction_exact(seed):
+    """qmin_for is EXACTLY the float admissibility test: for every code q,
+    q >= qmin[b]  <=>  mult * dequant(q) + rest[b] >= theta."""
+    rng = np.random.default_rng(seed)
+    scale = float(rng.choice([0.0, 1e-6, 0.037, 1.0, 117.3]))
+    deq = dequant_table(scale)
+    mult = float(rng.integers(1, 5))
+    rest = rng.uniform(0, 50, 8)
+    rest[0] = 0.0
+    theta = float(rng.choice([
+        -np.inf, 0.0, rng.uniform(0, 300), float(mult * deq[-1] + 100)
+    ]))
+    qmin = qmin_for(mult, rest, theta, deq)
+    grid = np.arange(256)
+    for b in range(8):
+        passes = mult * deq[grid] + rest[b] >= theta
+        assert np.array_equal(grid >= qmin[b], passes), (b, theta, qmin[b])
+
+
+# ---------------------------------------------------------------------------
+# chunk tiling
+# ---------------------------------------------------------------------------
+
+def test_pivot_chunks_cover_arena():
+    """Every block of every list appears in exactly one chunk lane, with
+    the right bound code; chunks never span lists."""
+    idx = _mk_index(5)
+    a, r = idx.arena, idx.arena.ranked
+    pc = build_pivot_chunks(a)
+    for t in range(idx.n_lists):
+        r0, r1 = int(a.list_blk_offsets[t]), int(a.list_blk_offsets[t + 1])
+        rows = []
+        for c in range(int(pc.offsets[t]), int(pc.offsets[t + 1])):
+            nb = int(pc.nblk[c])
+            assert 1 <= nb <= BLOCK_VALS
+            crows = pc.base[c] + np.arange(nb)
+            assert np.array_equal(
+                pc.qb[c, :nb], r.block_max_q[crows].astype(np.int64)
+            )
+            assert (pc.qb[c, nb:] == 0).all()
+            rows.append(crows)
+        got = np.concatenate(rows) if rows else np.zeros(0, np.int64)
+        assert np.array_equal(got, np.arange(r0, r1))
+
+
+# ---------------------------------------------------------------------------
+# engine properties: admissibility + sharded/backends identity
+# ---------------------------------------------------------------------------
+
+def _seeded_specs_theta(eng, queries, k):
+    """Run the engine's real seed phase to get (specs, theta) for a batch
+    (phase 1 of ``topk_batch``, verbatim inputs to the pivot)."""
+    a = eng.arena
+    specs = [eng._query_spec(q) for q in queries]
+    eng._flat_init()
+    seed_specs, seed_qids = [], []
+    for i, (terms, mult) in enumerate(specs):
+        if len(terms) == 0:
+            continue
+        chunks = []
+        for t in terms:
+            r0 = int(a.list_blk_offsets[int(t)])
+            r1 = int(a.list_blk_offsets[int(t) + 1])
+            rows = np.arange(r0, r1, dtype=np.int64)
+            top = rows[np.argsort(-eng.bounds[rows], kind="stable")]
+            chunks.append(eng._block_docs(top[: eng.seed_blocks]))
+        seed_specs.append((terms, mult, np.unique(np.concatenate(chunks))))
+        seed_qids.append(i)
+    scored, _ = eng._score_specs(seed_specs)
+    theta = np.full(len(queries), -np.inf)
+    for (terms, mult, docs), (_, sc), i in zip(seed_specs, scored, seed_qids):
+        if len(docs) >= k:
+            theta[i] = np.partition(sc, len(sc) - k)[len(sc) - k]
+    return specs, theta
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_device_pivot_admissible_and_identical(seed):
+    """The device pivot never skips a block whose block_max_q bound
+    clears theta, and the kept sets are identical across all three
+    backends and shard counts (1-shard bit-identical to unsharded)."""
+    idx = _mk_index(seed)
+    rng = np.random.default_rng(seed + 1)
+    queries = [
+        [int(t) for t in q]
+        for ar in (1, 2, 3)
+        for q in make_queries(rng, idx.n_lists, 3, ar)
+    ]
+    k = 5
+    base = TopKEngine(idx, backend="numpy", resident="kernel")
+    specs, theta = _seeded_specs_theta(base, queries, k)
+    want_rows = base._pivot_rows(specs, theta)
+
+    # admissibility vs a brute-force recomputation of the envelope --
+    # per block b of term t: the range-aligned co-candidate bound
+    #   rest(b) = sum_{t' != t} mult' * max bound over the t'-blocks from
+    #             the first whose last docID >= b's span start through
+    #             the first whose last docID >= b's span end (inclusive)
+    # and the proportional-share floor.  The device pivot must keep
+    # EVERY block passing both float tests (and, being an exact integer
+    # reduction, keep nothing else).
+    a, lob = idx.arena, base.lob
+    spans_lo = a.block_base + 1
+    spans_hi = a.block_keys - lob * a.stride
+    for i, (terms, mult) in enumerate(specs):
+        if len(terms) == 0:
+            assert len(want_rows[i]) == 0
+            continue
+        kept = set(want_rows[i].tolist())
+        ub = mult * base.list_ub[terms]
+        total_ub = float(ub.sum())
+        for j, t in enumerate(terms):
+            t = int(t)
+            r0 = int(a.list_blk_offsets[t])
+            r1 = int(a.list_blk_offsets[t + 1])
+            rows = np.arange(r0, r1)
+            rest = np.zeros(len(rows), np.float64)
+            for j2, t2 in enumerate(terms):
+                if j2 == j:
+                    continue
+                t2 = int(t2)
+                rows2 = np.arange(
+                    int(a.list_blk_offsets[t2]),
+                    int(a.list_blk_offsets[t2 + 1]),
+                )
+                for bi, b in enumerate(rows):
+                    cand2 = rows2[spans_hi[rows2] >= spans_lo[b]]
+                    if not len(cand2):
+                        continue
+                    after = cand2[spans_hi[cand2] >= spans_hi[b]]
+                    end_blk = after[0] if len(after) else cand2[-1]
+                    over = cand2[cand2 <= end_blk]
+                    rest[bi] += mult[j2] * base.bounds[over].max()
+            passes = mult[j] * base.bounds[rows] + rest >= theta[i]
+            if np.isfinite(theta[i]) and total_ub > 0:
+                share = float(theta[i]) * float(ub[j]) / total_ub
+                passes &= mult[j] * base.bounds[rows] >= share
+            for b in rows[passes]:
+                assert int(b) in kept, (i, t, int(b), theta[i])
+            # and the keep-set is exactly the float envelope (no
+            # over-keep: the integer reduction is exact)
+            kept_t = np.array(
+                sorted(b for b in kept if lob[b] == t), np.int64
+            )
+            assert np.array_equal(kept_t, rows[passes]), (i, t)
+
+    # backend + sharding identity of the kept sets
+    engines = [
+        TopKEngine(idx, backend="ref", resident="kernel"),
+        TopKEngine(idx, backend="pallas", resident="kernel"),
+        TopKEngine(idx, backend="ref", resident="kernel", shards=1),
+        TopKEngine(idx, backend="ref", resident="kernel", shards=3),
+    ]
+    for eng in engines:
+        got = eng._pivot_rows(specs, theta)
+        for i in range(len(queries)):
+            assert np.array_equal(
+                np.sort(got[i]), np.sort(want_rows[i])
+            ), (eng.backend, eng.sharded and eng.sharded.n_shards, i)
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_theta_monotone_under_rescore(seed):
+    """The two-round threshold+compact rescore only ever raises theta."""
+    idx = _mk_index(seed, n_lists=5, max_len=800)
+    rng = np.random.default_rng(seed + 3)
+    queries = [
+        [int(t) for t in q]
+        for ar in (2, 3)
+        for q in make_queries(rng, idx.n_lists, 3, ar)
+    ]
+    k = 4
+    for resident in ("mirror", "kernel"):
+        eng = TopKEngine(idx, backend="numpy", resident=resident)
+        specs, theta = _seeded_specs_theta(eng, queries, k)
+        if resident == "kernel":
+            kept = eng._pivot_rows(specs, theta)
+            final_specs = [
+                (
+                    terms,
+                    mult,
+                    np.unique(eng._block_docs(kept[i]))
+                    if len(kept[i])
+                    else np.zeros(0, np.int64),
+                )
+                for i, (terms, mult) in enumerate(specs)
+            ]
+        else:
+            final_specs = [
+                (terms, mult, np.arange(min(64, idx.arena.stride)))
+                for terms, mult in specs
+            ]
+        _, theta2 = eng._score_specs(final_specs, theta, k)
+        assert theta2 is not None
+        assert (theta2 >= theta).all(), (resident, theta, theta2)
+
+
+def test_kernel_resident_topk_sharded_all_backends():
+    """resident="kernel" top-k == oracle == mirror, sharded and not, on
+    every backend (the ISSUE-5 acceptance identity)."""
+    from repro.ranked.bm25 import exhaustive_topk
+
+    idx = _mk_index(77)
+    rng = np.random.default_rng(0)
+    queries = [
+        [int(t) for t in q]
+        for ar in (1, 2, 3)
+        for q in make_queries(rng, idx.n_lists, 3, ar)
+    ]
+    queries += [[], [0, 0, 1]]
+    k = 6
+    want = exhaustive_topk(idx, queries, k)
+    engines = [
+        TopKEngine(idx, backend=be, resident="kernel") for be in BACKENDS
+    ] + [
+        TopKEngine(idx, backend="ref", resident="kernel", shards=2),
+        TopKEngine(idx, backend="numpy", resident="mirror"),
+    ]
+    for eng in engines:
+        got = eng.topk_batch(queries, k)
+        for qi, ((gd, gs), (wd, ws)) in enumerate(zip(got, want)):
+            assert np.array_equal(gd, wd), (eng.backend, eng.resident, qi)
+            assert np.array_equal(gs, ws), (eng.backend, eng.resident, qi)

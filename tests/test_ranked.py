@@ -213,19 +213,24 @@ def test_topk_identical_to_exhaustive_all_backends(seed, k):
 
 
 def test_topk_kernel_residency_matches_mirror():
-    """resident="kernel" (HBM-style: no impact mirror, fused kernel per
-    batch) returns the same results as the mirror path."""
+    """resident="kernel" (HBM-style: no impact mirror; pruning through the
+    blockmax_pivot kernel, rescoring through the fused bm25 kernel)
+    returns the same results as the mirror path -- on every backend,
+    sharded and unsharded."""
     idx, lists, _ = _mk_index(21, n_lists=4, max_len=900)
     rng = np.random.default_rng(3)
     queries = [[int(t) for t in q] for q in make_queries(rng, 4, 6, 2)]
     want = exhaustive_topk(idx, queries, 5)
-    for be in ("numpy", "ref"):
-        got = TopKEngine(idx, backend=be, resident="kernel").topk_batch(
-            queries, 5
-        )
+    engines = [
+        TopKEngine(idx, backend=be, resident="kernel")
+        for be in ("numpy", "ref", "pallas")
+    ] + [TopKEngine(idx, backend="ref", resident="kernel", shards=2)]
+    for eng in engines:
+        got = eng.topk_batch(queries, 5)
         for (gd, gs), (wd, ws) in zip(got, want):
-            assert np.array_equal(gd, wd), be
-            assert np.array_equal(gs, ws), be
+            assert np.array_equal(gd, wd), (eng.backend, eng.sharded)
+            assert np.array_equal(gs, ws), (eng.backend, eng.sharded)
+        assert eng.stats["pivot_chunks"] > 0  # the pivot kernel really ran
 
 
 def test_topk_edge_cases():

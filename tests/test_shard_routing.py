@@ -321,6 +321,18 @@ def test_shard_map_multidevice_subprocess():
             c = e.contributions(ct, cd)
             assert e._smap_fn is not None, "bm25 shard_map path not taken"
             ok[f"r{S}"] = bool(same and np.array_equal(c, cw))
+        for S in (2, 4):
+            # kernel residency: the Block-Max pruning itself runs as a
+            # shard_map dispatch (ShardMapPivot) over the device mesh
+            e = TopKEngine(idx, backend="ref", seed_blocks=2, shards=S,
+                           resident="kernel")
+            got = e.topk_batch(queries, 10)
+            same = all(
+                np.array_equal(gd, wd) and np.array_equal(gs, ws)
+                for (gd, gs), (wd, ws) in zip(got, want)
+            )
+            assert e._smap_pivot is not None, "pivot shard_map not taken"
+            ok[f"rk{S}"] = bool(same)
         print(json.dumps(ok))
     """)
     out = subprocess.run(
@@ -330,4 +342,6 @@ def test_shard_map_multidevice_subprocess():
     assert out.returncode == 0, out.stderr[-2000:]
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["devices"] == 8
-    assert all(res[k] for k in ("q2", "q4", "q8", "r2", "r4")), res
+    assert all(
+        res[k] for k in ("q2", "q4", "q8", "r2", "r4", "rk2", "rk4")
+    ), res

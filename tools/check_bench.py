@@ -32,10 +32,26 @@ import sys
 def check_file(
     path: str, max_ratio: float, min_us: float
 ) -> tuple[list[str], set[str], int]:
-    """(failure lines, regressed module names, records compared)."""
-    with open(path) as fh:
-        data = json.load(fh)
-    history = data.get("history")
+    """(failure lines, regressed module names, records compared).
+
+    Tolerant of partial histories by design: a history entry may carry
+    records of a module group the current run no longer produces (a bench
+    renamed or retired mid-history), the current run may carry records the
+    history has never seen (a bench added after the history began), and
+    individual records may lack keys (a schema older than this checker).
+    None of those are drift -- the gate only compares records present on
+    BOTH sides with a usable ``us_per_call``, and skips the rest instead
+    of dying on them (ISSUE-5 fix; unit-tested in tests/test_check_bench.py).
+    """
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except (OSError, ValueError) as e:
+        # a corrupt cache-restored file must not crash the whole gate
+        print(f"[check_bench] {path}: unreadable ({e}), skipping")
+        return [], set(), 0
+    history = data.get("history") if isinstance(data, dict) else None
+    history = [e for e in history if isinstance(e, dict)] if history else []
     if not history:
         print(f"[check_bench] {path}: no history, skipping")
         return [], set(), 0
@@ -49,23 +65,26 @@ def check_file(
     best: dict[str, float] = {}
     for e in prior:
         for r in e.get("records", []):
+            if not isinstance(r, dict):
+                continue
             us = r.get("us_per_call")
-            if us:
+            if us and r.get("name"):
                 best[r["name"]] = min(best.get(r["name"], us), us)
     failures = []
     modules: set[str] = set()
     compared = 0
     for rec in newest.get("records", []):
-        prev = best.get(rec["name"])
-        if prev is None or prev < min_us:
+        if not isinstance(rec, dict):
+            continue
+        us = rec.get("us_per_call")
+        prev = best.get(rec.get("name"))
+        if not us or prev is None or prev < min_us:
             continue
         compared += 1
-        ratio = rec["us_per_call"] / prev
+        ratio = us / prev
         if ratio > max_ratio:
-            drift = f"{prev:.1f} -> {rec['us_per_call']:.1f} us/call"
-            failures.append(
-                f"{path}: {rec['name']} regressed {ratio:.2f}x ({drift})"
-            )
+            drift = f"{prev:.1f} -> {us:.1f} us/call"
+            failures.append(f"{path}: {rec['name']} regressed {ratio:.2f}x ({drift})")
             if rec.get("module"):
                 modules.add(rec["module"])
     n_prior = len(prior)

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Approximate line coverage of src/repro under the test suite (stdlib only).
+
+The development container carries no coverage.py / pytest-cov; CI does
+(requirements-ci.txt).  This tool exists to SEED and sanity-check the
+tier-1 coverage floor without installing anything: it traces line events
+for files under src/repro while running pytest in-process, then reports
+executed / executable lines per module and in total.  "Executable lines"
+come from walking every compiled code object's ``co_lines`` table -- the
+same statement universe coverage.py measures, approximated (docstring
+statements included, as coverage.py counts them).
+
+The tier-1 gate (`tools/tier1.sh`, TIER1_COV=1) uses pytest-cov's number,
+which differs from this one by a point or two; seed the floor a safe
+margin below the smaller of the two.
+
+  REPRO_BACKEND=ref PYTHONPATH=src python tools/measure_cov.py -x -q
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import threading
+from collections import defaultdict
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC = ROOT / "src" / "repro"
+
+executed: dict[str, set[int]] = defaultdict(set)
+_prefix = str(SRC) + os.sep
+
+
+def _local_tracer(frame, event, arg):
+    if event == "line":
+        executed[frame.f_code.co_filename].add(frame.f_lineno)
+    return _local_tracer
+
+
+def _tracer(frame, event, arg):
+    # cheap filter at call granularity: only repro frames get line events
+    if event == "call" and frame.f_code.co_filename.startswith(_prefix):
+        return _local_tracer
+    return None
+
+
+def executable_lines(path: pathlib.Path) -> set[int]:
+    code = compile(path.read_text(), str(path), "exec")
+    lines: set[int] = set()
+    stack = [code]
+    while stack:
+        co = stack.pop()
+        lines.update(ln for _, _, ln in co.co_lines() if ln)
+        stack.extend(c for c in co.co_consts if isinstance(c, type(co)))
+    return lines
+
+
+def main() -> int:
+    import pytest
+
+    sys.settrace(_tracer)
+    threading.settrace(_tracer)
+    rc = pytest.main(sys.argv[1:] or ["-x", "-q"])
+    sys.settrace(None)
+    threading.settrace(None)
+
+    total_exec = total_hit = 0
+    rows = []
+    for path in sorted(SRC.rglob("*.py")):
+        want = executable_lines(path)
+        hit = executed.get(str(path), set()) & want
+        total_exec += len(want)
+        total_hit += len(hit)
+        pct = 100.0 * len(hit) / len(want) if want else 100.0
+        rows.append((pct, len(hit), len(want), path.relative_to(ROOT)))
+    for pct, nh, nw, rel in rows:
+        print(f"{pct:6.1f}%  {nh:5d}/{nw:5d}  {rel}")
+    pct = 100.0 * total_hit / max(total_exec, 1)
+    print(f"TOTAL {pct:.2f}% ({total_hit}/{total_exec} lines), pytest rc={rc}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
