@@ -1,0 +1,19 @@
+"""repro.analyze: static analysis over the repo's jitted graphs (ISSUE-6).
+
+Four checkers, driven by ``tools/analyze.py`` and gated in CI:
+
+* ``contracts``  -- the kernel-family CONTRACT registry (AST-level triple
+  signature agreement; DESIGN.md §10),
+* ``hlo_check``  -- FMA/contraction sanitizer over the optimized HLO of
+  the single-source graph halves (``engine_core.GRAPH_CONTRACTS``),
+* ``sync_audit`` -- host-sync counter for the engine hot paths, ratcheted
+  by ``tools/analyze_baseline.json``,
+* ``idiom_lint`` -- AST rules for repo conventions.
+
+Submodules import jax lazily where possible; importing this package is
+cheap (``report`` / ``discovery`` are stdlib-only).
+"""
+
+from repro.analyze.report import Finding, render
+
+__all__ = ["Finding", "render"]

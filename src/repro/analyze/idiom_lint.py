@@ -1,0 +1,137 @@
+"""Repo-idiom lint (checker 4 of ``repro.analyze``): AST rules for
+conventions a type checker cannot see.  Suppress a single line by ending it
+with ``# analyze: allow``.
+
+Rules (DESIGN.md §10):
+
+* ``ranked-f32-math`` -- no bare ``jnp.float32(...)`` arithmetic in
+  ``src/repro/ranked/``: the BM25 pipeline's f32 constants must flow
+  through the dequant table / kernel contract (``kernels.bm25_score``),
+  where op order is pinned; an ad-hoc ``x * jnp.float32(c)`` in engine
+  code is exactly the kind of scalar that silently reassociates.
+  (``jnp.float32`` as a dtype or a non-arithmetic value is fine -- the
+  rule fires only when the call is an operand of a binary expression.)
+
+* ``bench-history-timestamp`` -- a bench-history entry literal (a dict
+  with both ``"sha"`` and ``"records"`` keys, the ``benchmarks.run``
+  schema) must also carry ``"timestamp"``: date-less entries break the
+  drift gate's history forensics.
+
+* ``backend-route`` -- kernel backend selection routes through
+  ``default_backend()`` (``kernels.vbyte_decode.ops``), the one reader of
+  ``REPRO_BACKEND`` / ``jax.default_backend()``.  Any other module reading
+  either re-introduces the per-module backend drift PR 4 removed.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analyze.discovery import REPO_ROOT, repro_source_files
+from repro.analyze.report import Finding
+
+SUPPRESS = "# analyze: allow"
+BACKEND_AUTHORITY = "src/repro/kernels/vbyte_decode/ops.py"
+
+
+def _is_jnp_float32_call(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr == "float32"
+        and isinstance(node.func.value, ast.Name)
+        and node.func.value.id == "jnp"
+    )
+
+
+def _const_eq(node: ast.AST, value: str) -> bool:
+    return isinstance(node, ast.Constant) and node.value == value
+
+
+def _is_repro_backend_read(node: ast.AST) -> bool:
+    """os.environ["REPRO_BACKEND"] / .get(...) / os.getenv(...) reads."""
+    if isinstance(node, ast.Subscript):
+        return (
+            isinstance(node.value, ast.Attribute)
+            and node.value.attr == "environ"
+            and _const_eq(node.slice, "REPRO_BACKEND")
+        )
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        if node.func.attr in ("get", "getenv") and node.args:
+            return _const_eq(node.args[0], "REPRO_BACKEND")
+    return False
+
+
+def _is_jax_default_backend(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr == "default_backend"
+        and isinstance(node.func.value, ast.Name)
+        and node.func.value.id == "jax"
+    )
+
+
+def _dict_keys(node: ast.Dict) -> set[str]:
+    return {k.value for k in node.keys if isinstance(k, ast.Constant)}
+
+
+def lint_source(src: str, rel_path: str) -> list[Finding]:
+    """Findings for one module, addressed by its repo-relative path."""
+    rel = rel_path.replace("\\", "/")
+    lines = src.splitlines()
+
+    def suppressed(lineno: int) -> bool:
+        return 0 < lineno <= len(lines) and SUPPRESS in lines[lineno - 1]
+
+    findings: list[Finding] = []
+
+    def add(rule: str, node: ast.AST, message: str) -> None:
+        if not suppressed(node.lineno):
+            findings.append(Finding("idiom", rule, f"{rel}:{node.lineno}", message))
+
+    tree = ast.parse(src, filename=rel)
+    in_ranked = rel.startswith("src/repro/ranked/")
+    in_bench = rel.startswith("benchmarks/")
+    for node in ast.walk(tree):
+        if in_ranked and isinstance(node, ast.BinOp):
+            if _is_jnp_float32_call(node.left) or _is_jnp_float32_call(node.right):
+                add(
+                    "ranked-f32-math",
+                    node,
+                    "bare jnp.float32(...) arithmetic in ranked/; route f32 "
+                    "constants through the kernel contract (dequant table)",
+                )
+        if in_bench and isinstance(node, ast.Dict):
+            keys = _dict_keys(node)
+            if {"sha", "records"} <= keys and "timestamp" not in keys:
+                add(
+                    "bench-history-timestamp",
+                    node,
+                    "bench-history entry literal lacks a 'timestamp' key",
+                )
+        if rel != BACKEND_AUTHORITY and (
+            _is_repro_backend_read(node) or _is_jax_default_backend(node)
+        ):
+            add(
+                "backend-route",
+                node,
+                "backend selection outside default_backend(); import it "
+                "from repro.kernels.vbyte_decode.ops instead",
+            )
+    return findings
+
+
+def lint_repo(root: pathlib.Path | None = None) -> list[Finding]:
+    """Lint every repro source module plus the benchmarks package."""
+    root = pathlib.Path(root) if root else REPO_ROOT
+    paths = list(repro_source_files())
+    bench = root / "benchmarks"
+    if bench.is_dir():
+        paths += sorted(bench.rglob("*.py"))
+    findings: list[Finding] = []
+    for path in paths:
+        rel = path.relative_to(root).as_posix()
+        findings += lint_source(path.read_text(), rel)
+    return findings

@@ -1,0 +1,27 @@
+"""One ``Finding`` type shared by every checker in ``repro.analyze``.
+
+A finding is a VERDICT, not a log line: ``tools/analyze.py --check`` exits
+non-zero iff the list of findings is non-empty, so a checker must emit a
+finding only for a real contract violation (no "info" severity -- the
+baseline-ratchet machinery in ``sync_audit`` handles the one case where a
+measurement is reported without failing the gate).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Finding:
+    checker: str  # "contracts" | "hlo" | "sync" | "idiom"
+    rule: str  # machine-readable rule id, e.g. "fma-contraction"
+    where: str  # "path:line", a graph name, or a hot-path name
+    message: str  # human-readable explanation
+
+    def __str__(self) -> str:
+        return f"[{self.checker}/{self.rule}] {self.where}: {self.message}"
+
+
+def render(findings: list[Finding]) -> str:
+    return "\n".join(str(f) for f in findings)

@@ -1,0 +1,212 @@
+"""Host-sync auditor (checker 3 of ``repro.analyze``; DESIGN.md §10).
+
+The top ROADMAP item ("fully-resident query rounds") is about REMOVING the
+device->host syncs left in the engine hot paths; this auditor is the
+instrument that counts them, and ``tools/analyze_baseline.json`` is the
+ratchet that stops new ones sneaking in while they are being removed.
+
+**What is counted.**  A *sync site* is a unique ``(repo-relative file,
+function)`` that materializes a ``jax.Array`` on the host (``np.asarray``
+/ ``np.array``) during one steady-state batch: jit-warm -- every trace
+reused -- but data-cold -- the ranked engine's hot-block score cache
+misses (see ``workload``).  Sites, not events: one site may fetch per
+chunk (``MAX_BUCKET`` chunking), so event counts scale with batch shape
+while site counts are a property of the CODE, which is what a ratchet
+must measure.  Complementing the dynamic count, the jaxprs of the graph
+halves each hot path dispatches are inspected for callback primitives
+(``pure_callback`` & co.) -- a host round-trip hiding INSIDE a jitted
+graph, expected 0 everywhere.
+
+**The ratchet.**  ``compare_baseline`` fails a hot path whose measured
+sync or callback count EXCEEDS the committed baseline; equal or lower
+passes (lower prints a hint to re-baseline).  ``tools/analyze.py
+--update-baseline`` rewrites the file, refusing to raise counts without
+``--force``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import sys
+
+import numpy as np
+
+from repro.analyze.discovery import REPO_ROOT, canon_frame_filename, is_repro_frame
+from repro.analyze.report import Finding
+
+HOT_PATHS = ("boolean_and", "ranked_topk")
+
+# graph halves dispatched per hot path (callback inspection quantifies
+# over these jaxprs; the names key into hlo_check.graph_specs)
+PATH_GRAPHS = {
+    "boolean_and": ("locate_graph", "decode_search_graph"),
+    "ranked_topk": ("locate_graph", "pivot_graph", "score_probe_graph"),
+}
+
+CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback", "callback"}
+
+_ANALYZE_DIR = os.sep + "analyze" + os.sep
+
+
+def _record_site(sites: set, value) -> None:
+    import jax
+
+    if not isinstance(value, jax.Array) or isinstance(value, jax.core.Tracer):
+        return
+    frame = sys._getframe(2)
+    while frame is not None:
+        filename = canon_frame_filename(frame.f_code.co_filename)
+        if is_repro_frame(filename) and _ANALYZE_DIR not in filename:
+            rel = os.path.relpath(filename, str(REPO_ROOT))
+            sites.add((rel.replace(os.sep, "/"), frame.f_code.co_name))
+            return
+        frame = frame.f_back
+
+
+@contextlib.contextmanager
+def trap_sync_sites(sites: set):
+    """Record the (file, fn) of every device->host materialization.
+
+    Patches ``numpy.asarray`` / ``numpy.array`` -- the repo's engines
+    fetch device results exclusively through them -- and attributes each
+    ``jax.Array`` argument to the innermost repro stack frame.
+    """
+    real_asarray, real_array = np.asarray, np.array
+
+    def spy_asarray(a, *args, **kw):
+        _record_site(sites, a)
+        return real_asarray(a, *args, **kw)
+
+    def spy_array(a, *args, **kw):
+        _record_site(sites, a)
+        return real_array(a, *args, **kw)
+
+    np.asarray, np.array = spy_asarray, spy_array
+    try:
+        yield sites
+    finally:
+        np.asarray, np.array = real_asarray, real_array
+
+
+def count_callbacks(jaxpr) -> int:
+    """Callback primitives in one (Closed)Jaxpr, recursing into sub-jaxprs."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    n = 0
+    for eqn in inner.eqns:
+        if eqn.primitive.name in CALLBACK_PRIMS:
+            n += 1
+        for param in eqn.params.values():
+            for sub in param if isinstance(param, (list, tuple)) else (param,):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    n += count_callbacks(sub)
+    return n
+
+
+def _path_callbacks(backend: str) -> dict[str, int]:
+    import jax
+
+    from repro.analyze.hlo_check import graph_specs
+
+    specs = graph_specs(backend)
+    per_graph = {
+        name: count_callbacks(jax.make_jaxpr(fn)(*args))
+        for name, (fn, args) in specs.items()
+    }
+    return {
+        path: sum(per_graph.get(g, 0) for g in graphs)
+        for path, graphs in PATH_GRAPHS.items()
+    }
+
+
+def audit_hot_paths(backend: str = "ref") -> dict:
+    """Measure each hot path's sync sites + callback count.
+
+    Returns the baseline-file shape: ``{"backend": ..., "hot_paths":
+    {name: {"syncs": int, "callbacks": int, "sync_sites": [...]}}}``.
+    """
+    from repro.analyze.workload import (
+        AUDIT_QUERIES,
+        WARM_QUERIES,
+        tiny_ranked_index,
+    )
+    from repro.core.query_engine import QueryEngine
+    from repro.ranked.topk_engine import TopKEngine
+
+    index = tiny_ranked_index()
+    qe = QueryEngine(index, backend=backend)
+    te = TopKEngine(index, backend=backend, resident="kernel")
+    qe.intersect_batch(WARM_QUERIES)
+    te.topk_batch(WARM_QUERIES, k=5)
+
+    callbacks = _path_callbacks(backend)
+    hot_paths = {}
+    for name, run in (
+        ("boolean_and", lambda: qe.intersect_batch(AUDIT_QUERIES)),
+        ("ranked_topk", lambda: te.topk_batch(AUDIT_QUERIES, k=5)),
+    ):
+        sites: set = set()
+        with trap_sync_sites(sites):
+            run()
+        hot_paths[name] = {
+            "syncs": len(sites),
+            "callbacks": callbacks[name],
+            "sync_sites": sorted(f"{f}::{fn}" for f, fn in sites),
+        }
+    return {"backend": backend, "hot_paths": hot_paths}
+
+
+def compare_baseline(measured: dict, baseline: dict | None) -> list[Finding]:
+    """Ratchet: a hot path may not exceed its baselined counts."""
+    if not baseline:
+        return [
+            Finding(
+                "sync",
+                "missing-baseline",
+                "tools/analyze_baseline.json",
+                "no committed sync baseline; run tools/analyze.py "
+                "--update-baseline and commit the file",
+            )
+        ]
+    findings = []
+    base_paths = baseline.get("hot_paths", {})
+    for path, m in measured.get("hot_paths", {}).items():
+        b = base_paths.get(path)
+        if b is None:
+            continue  # a new hot path baselines on the next --update-baseline
+        if m["syncs"] > b.get("syncs", 0):
+            findings.append(
+                Finding(
+                    "sync",
+                    "sync-regression",
+                    path,
+                    f"{m['syncs']} sync sites > baseline {b.get('syncs', 0)} "
+                    f"(measured: {', '.join(m['sync_sites'])})",
+                )
+            )
+        if m["callbacks"] > b.get("callbacks", 0):
+            findings.append(
+                Finding(
+                    "sync",
+                    "callback-regression",
+                    path,
+                    f"{m['callbacks']} jaxpr callbacks > baseline "
+                    f"{b.get('callbacks', 0)}",
+                )
+            )
+    return findings
+
+
+def improvements(measured: dict, baseline: dict | None) -> list[str]:
+    """Hot paths now BELOW baseline -- candidates for a ratchet-down."""
+    if not baseline:
+        return []
+    out = []
+    for path, m in measured.get("hot_paths", {}).items():
+        b = baseline.get("hot_paths", {}).get(path)
+        if b and m["syncs"] < b.get("syncs", 0):
+            out.append(
+                f"{path}: {m['syncs']} sync sites < baseline "
+                f"{b['syncs']} -- ratchet down with --update-baseline"
+            )
+    return out

@@ -4,86 +4,49 @@ than the installed jax (the container ships 0.4.37).
 The repo is written against the current jax surface (``jax.shard_map``,
 ``jax.set_mesh``, ``jax.sharding.AxisType`` / ``get_abstract_mesh``,
 ``jax.make_mesh(..., axis_types=...)``).  On an older jax each of those is
-re-expressed in terms of the legacy equivalent; on a new-enough jax every
-backfill below is a no-op, so this module can be imported unconditionally
-(``repro/__init__.py`` does).
+re-expressed in terms of the legacy equivalent; on a new-enough jax the
+whole install is skipped up front (see ``backfills_needed``), so this
+module can be imported unconditionally (``repro/__init__.py`` does).
 
 Everything here is attribute-level: ``from jax.sharding import AxisType``
 resolves through module attributes at import time, so assigning the shims
 onto ``jax`` / ``jax.sharding`` makes both call styles work.
+
+ROADMAP keeps "delete this module once the container jax catches up" as a
+housekeeping item; the version gate makes that deletion mechanical -- on
+jax >= 0.6 nothing below ``_install_backfills`` runs (a one-line notice is
+logged), and the only genuine export is ``get_abstract_mesh`` (imported by
+``repro.models``), which on deletion becomes
+``jax.sharding.get_abstract_mesh``.
 """
 
 from __future__ import annotations
 
 import enum
 import inspect
+import logging
 
 import jax
 import jax.sharding
 
-
-# --------------------------------------------------------------------------
-# jax.sharding.AxisType (new-style mesh axis kinds; legacy meshes are all
-# "auto", so the enum only needs to exist and round-trip through make_mesh).
-# --------------------------------------------------------------------------
-if not hasattr(jax.sharding, "AxisType"):
-
-    class _AxisType(enum.Enum):
-        Auto = "auto"
-        Explicit = "explicit"
-        Manual = "manual"
-
-    jax.sharding.AxisType = _AxisType
+# first jax minor where every API shimmed below is native; at >= this
+# version the backfills are a no-op by construction, so skip them outright
+NATIVE_SINCE = (0, 6)
 
 
-# --------------------------------------------------------------------------
-# jax.make_mesh(..., axis_types=...): legacy signature has no axis_types.
-# --------------------------------------------------------------------------
-if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
-    _legacy_make_mesh = jax.make_mesh
-
-    def _make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
-        del axis_types  # legacy meshes are implicitly all-Auto
-        if devices is None:
-            return _legacy_make_mesh(axis_shapes, axis_names)
-        return _legacy_make_mesh(axis_shapes, axis_names, devices=devices)
-
-    jax.make_mesh = _make_mesh
+def _version_tuple(version: str) -> tuple[int, int]:
+    parts = version.split(".")
+    try:
+        return int(parts[0]), int(parts[1])
+    except (IndexError, ValueError):
+        return (0, 0)
 
 
-# --------------------------------------------------------------------------
-# jax.set_mesh(mesh): used as ``with jax.set_mesh(mesh): ...``.  Legacy Mesh
-# is itself a context manager installing the ambient (thread-resource) mesh.
-# --------------------------------------------------------------------------
-if not hasattr(jax, "set_mesh"):
-
-    def _set_mesh(mesh):
-        return mesh
-
-    jax.set_mesh = _set_mesh
+def backfills_needed(version: str | None = None) -> bool:
+    """True when the installed jax predates the surface this repo targets."""
+    return _version_tuple(version or jax.__version__) < NATIVE_SINCE
 
 
-# --------------------------------------------------------------------------
-# jax.shard_map(..., check_vma=...): legacy spelling is
-# jax.experimental.shard_map.shard_map(..., check_rep=...).
-# --------------------------------------------------------------------------
-if not hasattr(jax, "shard_map"):
-    from jax.experimental.shard_map import shard_map as _legacy_shard_map
-
-    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
-        if check_vma is not None:
-            kw["check_rep"] = check_vma
-        return _legacy_shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
-        )
-
-    jax.shard_map = _shard_map
-
-
-# --------------------------------------------------------------------------
-# jax.sharding.get_abstract_mesh(): the ambient mesh set by jax.set_mesh /
-# ``with mesh:``.  Legacy equivalent is the thread-resource physical mesh.
-# --------------------------------------------------------------------------
 def get_abstract_mesh():
     """Ambient mesh, or None when no mesh context is active.
 
@@ -92,6 +55,11 @@ def get_abstract_mesh():
     written against the new surface.
     """
     native = getattr(jax.sharding, "_native_get_abstract_mesh", None)
+    if native is None:
+        # backfills skipped (new jax): resolve the native API directly
+        candidate = getattr(jax.sharding, "get_abstract_mesh", None)
+        if candidate is not None and candidate is not get_abstract_mesh:
+            native = candidate
     if native is not None:
         mesh = native()
         return None if mesh is None or not mesh.axis_names else mesh
@@ -101,51 +69,123 @@ def get_abstract_mesh():
     return None if mesh.empty else mesh
 
 
-if hasattr(jax.sharding, "get_abstract_mesh"):
-    jax.sharding._native_get_abstract_mesh = jax.sharding.get_abstract_mesh
+def _install_backfills() -> None:
+    # ----------------------------------------------------------------------
+    # jax.sharding.AxisType (new-style mesh axis kinds; legacy meshes are all
+    # "auto", so the enum only needs to exist and round-trip through
+    # make_mesh).
+    # ----------------------------------------------------------------------
+    if not hasattr(jax.sharding, "AxisType"):
+
+        class _AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = _AxisType
+
+    # ----------------------------------------------------------------------
+    # jax.make_mesh(..., axis_types=...): legacy signature has no axis_types.
+    # ----------------------------------------------------------------------
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _legacy_make_mesh = jax.make_mesh
+
+        def _make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+            del axis_types  # legacy meshes are implicitly all-Auto
+            if devices is None:
+                return _legacy_make_mesh(axis_shapes, axis_names)
+            return _legacy_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = _make_mesh
+
+    # ----------------------------------------------------------------------
+    # jax.set_mesh(mesh): used as ``with jax.set_mesh(mesh): ...``.  Legacy
+    # Mesh is itself a context manager installing the ambient
+    # (thread-resource) mesh.
+    # ----------------------------------------------------------------------
+    if not hasattr(jax, "set_mesh"):
+
+        def _set_mesh(mesh):
+            return mesh
+
+        jax.set_mesh = _set_mesh
+
+    # ----------------------------------------------------------------------
+    # jax.shard_map(..., check_vma=...): legacy spelling is
+    # jax.experimental.shard_map.shard_map(..., check_rep=...).
+    # ----------------------------------------------------------------------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+        def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+            if check_vma is not None:
+                kw["check_rep"] = check_vma
+            return _legacy_shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+            )
+
+        jax.shard_map = _shard_map
+
+    # ----------------------------------------------------------------------
+    # jax.sharding.get_abstract_mesh(): the ambient mesh set by jax.set_mesh
+    # / ``with mesh:``.  Legacy equivalent is the thread-resource physical
+    # mesh.
+    # ----------------------------------------------------------------------
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding._native_get_abstract_mesh = jax.sharding.get_abstract_mesh
+    else:
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+    # ----------------------------------------------------------------------
+    # jax.lax.axis_size(name): legacy spelling is psum of a unit constant,
+    # which jax constant-folds to the static mesh-axis size under tracing.
+    # ----------------------------------------------------------------------
+    if not hasattr(jax.lax, "axis_size"):
+
+        def _axis_size(axis_name):
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = _axis_size
+
+    # ----------------------------------------------------------------------
+    # jax.jit(in_shardings=PartitionSpec, ...): new jax resolves bare specs
+    # against the ambient mesh; legacy jit accepts only concrete Shardings,
+    # so wrap it to bind specs to the ambient mesh at jit-call time.
+    # ----------------------------------------------------------------------
+    if not hasattr(jax.sharding, "use_mesh"):  # proxy for "legacy jit"
+        from jax.sharding import NamedSharding as _NamedSharding
+        from jax.sharding import PartitionSpec as _PartitionSpec
+
+        _legacy_jit = jax.jit
+
+        def _bind_specs(tree):
+            mesh = get_abstract_mesh()
+            if mesh is None:
+                return tree
+
+            def conv(x):
+                return (
+                    _NamedSharding(mesh, x) if isinstance(x, _PartitionSpec) else x
+                )
+
+            return jax.tree_util.tree_map(
+                conv, tree, is_leaf=lambda x: isinstance(x, _PartitionSpec)
+            )
+
+        def _jit(fun=None, **kw):
+            for key in ("in_shardings", "out_shardings"):
+                if kw.get(key) is not None:
+                    kw[key] = _bind_specs(kw[key])
+            return _legacy_jit(fun, **kw)
+
+        jax.jit = _jit
+
+
+if backfills_needed():
+    _install_backfills()
 else:
-    jax.sharding.get_abstract_mesh = get_abstract_mesh
-
-
-# --------------------------------------------------------------------------
-# jax.lax.axis_size(name): legacy spelling is psum of a unit constant, which
-# jax constant-folds to the static mesh-axis size under tracing.
-# --------------------------------------------------------------------------
-if not hasattr(jax.lax, "axis_size"):
-
-    def _axis_size(axis_name):
-        return jax.lax.psum(1, axis_name)
-
-    jax.lax.axis_size = _axis_size
-
-
-# --------------------------------------------------------------------------
-# jax.jit(in_shardings=PartitionSpec, ...): new jax resolves bare specs
-# against the ambient mesh; legacy jit accepts only concrete Shardings, so
-# wrap it to bind specs to the ambient mesh at jit-call time.
-# --------------------------------------------------------------------------
-if not hasattr(jax.sharding, "use_mesh"):  # proxy for "legacy jit"
-    from jax.sharding import NamedSharding as _NamedSharding
-    from jax.sharding import PartitionSpec as _PartitionSpec
-
-    _legacy_jit = jax.jit
-
-    def _bind_specs(tree):
-        mesh = get_abstract_mesh()
-        if mesh is None:
-            return tree
-
-        def conv(x):
-            return _NamedSharding(mesh, x) if isinstance(x, _PartitionSpec) else x
-
-        return jax.tree_util.tree_map(
-            conv, tree, is_leaf=lambda x: isinstance(x, _PartitionSpec)
-        )
-
-    def _jit(fun=None, **kw):
-        for key in ("in_shardings", "out_shardings"):
-            if kw.get(key) is not None:
-                kw[key] = _bind_specs(kw[key])
-        return _legacy_jit(fun, **kw)
-
-    jax.jit = _jit
+    logging.getLogger(__name__).info(
+        "jax %s >= %s: repro.compat backfills skipped (module is deletable)",
+        jax.__version__,
+        ".".join(map(str, NATIVE_SINCE)),
+    )

@@ -241,6 +241,33 @@ def decode_search_graph(lens_g, data_g, base_g, pe, backend, interpret):
     return decode_search_ref(lens_g, data_g, base_g, pe)
 
 
+# Identity registry of the single-source jit-graph halves, checked by the
+# HLO sanitizer (repro.analyze.hlo_check; DESIGN.md §10).  "integer" graphs
+# must lower to float-free optimized HLO; "f32-bit-exact" graphs may use f32
+# but no contracted multiply-add (FMA reassociates the op order the triple
+# contract pins) and no dot contractions beyond the allow-list (the one-hot
+# norm-dequant matmul over the 256-entry table -- see bm25.norm_table).
+GRAPH_CONTRACTS = {
+    "locate_graph": {
+        "module": "repro.core.engine_core",
+        "identity": "integer",
+    },
+    "decode_search_graph": {
+        "module": "repro.core.engine_core",
+        "identity": "integer",
+    },
+    "pivot_graph": {
+        "module": "repro.core.engine_core",
+        "identity": "integer",
+    },
+    "score_probe_graph": {
+        "module": "repro.kernels.bm25_score.ops",
+        "identity": "f32-bit-exact",
+        "allow_dot_contractions": [256],
+    },
+}
+
+
 class EngineCore:
     """Flat-mirror / locate / dispatch machinery over ONE ``DeviceArena``.
 

@@ -179,3 +179,45 @@ def pivot_select(
         np.asarray(pivot)[:n].astype(np.int64),
         np.asarray(maxq)[:n].astype(np.int64),
     )
+
+
+# Machine-readable triple contract (DESIGN.md §10; see vbyte_decode.ops for
+# the role grammar).  Integer identity: quantized bound codes in, lane
+# indices out -- bit-identical across backends by construction.
+CONTRACT = {
+    "family": "blockmax_pivot",
+    "identity": "integer",
+    "ops": {
+        "pivot_select": {
+            "roles": ["qb", "qmin", "nblk"],
+            "out": [
+                "compact:int64[nr,128]",
+                "count:int64[nr]",
+                "pivot:int64[nr]",
+                "maxq:int64[nr]",
+            ],
+            "backends": {
+                "numpy": {
+                    "module": "ops",
+                    "fn": "pivot_select_np",
+                    "params": ["qb:qb", "qmins:qmin", "nblks:nblk"],
+                },
+                "ref": {
+                    "module": "ref",
+                    "fn": "pivot_select_ref",
+                    "params": ["qb:qb", "qmins:qmin", "nblks:nblk"],
+                },
+                "pallas": {
+                    "module": "kernel",
+                    "fn": "pivot_select_blocks",
+                    "params": [
+                        "qb:qb",
+                        "qmin:qmin",
+                        "meta:staging=nblk",
+                        "interpret:config",
+                    ],
+                },
+            },
+        },
+    },
+}

@@ -234,3 +234,123 @@ def bm25_score_rows(
         interpret=_resolve_interpret(interpret),
     )
     return np.asarray(out)[:n]
+
+
+# Machine-readable triple contract (DESIGN.md §10; see vbyte_decode.ops for
+# the role grammar).  f32-bit-exact: the three backends promise the same
+# f32 op ORDER, which is why the norm dequant is a table gather / one-hot
+# matmul (norm_table) and why the HLO sanitizer forbids FMA contraction in
+# score_probe_graph.
+CONTRACT = {
+    "family": "bm25_score",
+    "identity": "f32-bit-exact",
+    "ops": {
+        "score_rows": {
+            "roles": ["flens", "fdata", "norms", "idf", "table", "k1p1"],
+            "out": ["scores:float32[nr,128]"],
+            "backends": {
+                "numpy": {
+                    "module": "ops",
+                    "fn": "score_rows_np",
+                    "params": [
+                        "flens:flens",
+                        "fdata:fdata",
+                        "norms:norms",
+                        "idf_rows:idf",
+                        "table:table",
+                        "k1p1:k1p1",
+                    ],
+                },
+                "ref": {
+                    "module": "ref",
+                    "fn": "score_rows_ref",
+                    "params": [
+                        "flens:flens",
+                        "fdata:fdata",
+                        "norms:norms",
+                        "idf_rows:idf",
+                        "table:table",
+                        "k1p1:k1p1",
+                    ],
+                },
+                "pallas": {
+                    "module": "kernel",
+                    "fn": "bm25_score_blocks",
+                    "params": [
+                        "flens:flens",
+                        "fdata:fdata",
+                        "norms:norms",
+                        "table:table",
+                        "fmeta:staging=idf+k1p1",
+                        "interpret:config",
+                    ],
+                },
+            },
+        },
+        "score_probe": {
+            "roles": [
+                "lens",
+                "data",
+                "flens",
+                "fdata",
+                "norms",
+                "base",
+                "probe",
+                "idf",
+                "table",
+                "k1p1",
+            ],
+            "out": ["contrib:float32[nr]"],
+            "backends": {
+                "numpy": {
+                    "module": "ops",
+                    "fn": "score_probe_np",
+                    "params": [
+                        "lens:lens",
+                        "data:data",
+                        "flens:flens",
+                        "fdata:fdata",
+                        "norms:norms",
+                        "block_base:base",
+                        "rows:gather",
+                        "probes:probe",
+                        "idf_rows:idf",
+                        "table:table",
+                        "k1p1:k1p1",
+                    ],
+                },
+                "ref": {
+                    "module": "ref",
+                    "fn": "score_probe_ref",
+                    "params": [
+                        "lens:lens",
+                        "data:data",
+                        "flens:flens",
+                        "fdata:fdata",
+                        "norms:norms",
+                        "bases:base",
+                        "probes:probe",
+                        "idf_rows:idf",
+                        "table:table",
+                        "k1p1:k1p1",
+                    ],
+                },
+                "pallas": {
+                    "module": "kernel",
+                    "fn": "bm25_score_probe_blocks",
+                    "params": [
+                        "lens:lens",
+                        "data:data",
+                        "flens:flens",
+                        "fdata:fdata",
+                        "norms:norms",
+                        "table:table",
+                        "meta:staging=base+probe",
+                        "fmeta:staging=idf+k1p1",
+                        "interpret:config",
+                    ],
+                },
+            },
+        },
+    },
+}

@@ -244,3 +244,75 @@ def decode_search(
         np.asarray(value)[:n].astype(np.int64),
         np.asarray(rank)[:n].astype(np.int64),
     )
+
+
+# Machine-readable triple contract (DESIGN.md §10), verified on every PR by
+# repro.analyze.contracts: a PURE LITERAL (the checker ast.literal_eval's it
+# without importing jax).  Params are "name:role"; "meta:staging=a+b" marks
+# a pallas staging tile carrying roles a+b, ":gather" a numpy-only row
+# gather, ":config" a backend-local knob -- both excluded from the
+# cross-backend role agreement.
+CONTRACT = {
+    "family": "vbyte_decode",
+    "identity": "integer",
+    "ops": {
+        "decode": {
+            "roles": ["lens", "data"],
+            "out": ["vals:int64[nr,128]"],
+            "backends": {
+                "numpy": {
+                    "module": "ops",
+                    "fn": "decode_blocks_np",
+                    "params": ["lens:lens", "data:data"],
+                },
+                "ref": {
+                    "module": "ref",
+                    "fn": "decode_blocks_ref",
+                    "params": ["lens:lens", "data:data"],
+                },
+                "pallas": {
+                    "module": "kernel",
+                    "fn": "decode_blocks",
+                    "params": ["lens:lens", "data:data", "interpret:config"],
+                },
+            },
+        },
+        "decode_search": {
+            "roles": ["lens", "data", "base", "probe"],
+            "out": ["value:int64[nr]", "rank:int64[nr]"],
+            "backends": {
+                "numpy": {
+                    "module": "ops",
+                    "fn": "decode_search_np",
+                    "params": [
+                        "lens:lens",
+                        "data:data",
+                        "block_base:base",
+                        "rows:gather",
+                        "probes:probe",
+                    ],
+                },
+                "ref": {
+                    "module": "ref",
+                    "fn": "decode_search_ref",
+                    "params": [
+                        "lens_rows:lens",
+                        "data_rows:data",
+                        "bases:base",
+                        "probes:probe",
+                    ],
+                },
+                "pallas": {
+                    "module": "kernel",
+                    "fn": "decode_search_blocks",
+                    "params": [
+                        "lens:lens",
+                        "data:data",
+                        "meta:staging=base+probe",
+                        "interpret:config",
+                    ],
+                },
+            },
+        },
+    },
+}

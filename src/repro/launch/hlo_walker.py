@@ -61,6 +61,11 @@ def _shape_dims(type_str: str):
     return m.group(1), dims
 
 
+def shape_dtypes(type_str: str) -> set[str]:
+    """Every element dtype of a (possibly tuple) HLO type string."""
+    return {m.group(1) for m in _SHAPE_RE.finditer(type_str)}
+
+
 @dataclass
 class Instr:
     name: str
@@ -173,6 +178,10 @@ def _operand_names(line: str) -> list[str]:
     return names
 
 
+# public name of the bracket-aware operand splitter (shared walker API)
+operand_names = _operand_names
+
+
 @dataclass
 class WalkStats:
     dot_flops: float = 0.0
@@ -240,88 +249,115 @@ def _dot_flops(ins: Instr, comp: Computation) -> float:
     return 2.0 * result * contraction
 
 
-def walk(text: str, entry: str | None = None) -> WalkStats:
-    comps = parse_hlo(text)
-    if not comps:
-        return WalkStats()
-    if entry is None:
-        entry = next(
-            (n for n in comps if n.startswith("main") or ".main" in n),
-            list(comps)[0],
-        )
-    stats = WalkStats()
+# ops carrying called-computation edges the DFS must descend into
+_CALL_OPS = ("call", "fusion", "conditional", "custom-call",
+             "reduce", "sort", "scatter", "map", "reduce-window")
+
+
+def entry_computation(comps: dict[str, Computation],
+                      entry: str | None = None) -> str | None:
+    """Resolve the walk's entry computation (jax emits ``main.N``)."""
+    if entry is not None:
+        return entry
+    return next(
+        (n for n in comps if n.startswith("main") or ".main" in n),
+        next(iter(comps), None),
+    )
+
+
+def iter_graph(comps: dict[str, Computation], entry: str | None = None):
+    """DFS over call/fusion/while edges: the shared walker API.
+
+    Yields ``(computation, instr, multiplier, trip_count)`` for every
+    instruction reachable from ``entry``, where ``multiplier`` is the
+    product of enclosing while trip counts and ``trip_count`` is the
+    extracted count for ``while`` instrs themselves (None otherwise;
+    the while BODY's instructions are yielded with ``multiplier *
+    trip_count``).  Both the cost walker below (``walk``) and the
+    contract sanitizer (``repro.analyze.hlo_check``) consume this.
+    """
+    entry = entry_computation(comps, entry)
     visiting: set[str] = set()
 
-    def comp_cost(name: str, mult: float) -> None:
+    def rec(name: str, mult: float):
         comp = comps.get(name)
         if comp is None or name in visiting:
             return
         visiting.add(name)
         for ins in comp.instrs:
             if ins.op == "while":
-                body, cond = None, None
                 mb = re.search(r"body=%?([\w.\-]+)", ins.line)
                 mcnd = re.search(r"condition=%?([\w.\-]+)", ins.line)
-                if mb:
-                    body = mb.group(1)
-                if mcnd:
-                    cond = mcnd.group(1)
+                cond = mcnd.group(1) if mcnd else None
                 tc = _trip_count(comps[cond]) if cond and cond in comps else 1
-                stats.while_trip_counts.append(tc)
-                if body:
-                    comp_cost(body, mult * tc)
+                yield comp, ins, mult, tc
+                if mb:
+                    yield from rec(mb.group(1), mult * tc)
                 continue
-            if ins.op in ("call", "fusion", "conditional", "custom-call",
-                          "reduce", "sort", "scatter", "map", "reduce-window"):
+            yield comp, ins, mult, None
+            if ins.op in _CALL_OPS:
                 for c in _called(ins.line):
-                    comp_cost(c, mult)
-            if ins.op == "dot":
-                stats.dot_flops += mult * _dot_flops(ins, comp)
-            if ins.op in _COLL_FACTORS or any(
-                ins.op == c + "-start" for c in _COLL_FACTORS
-            ):
-                base_op = ins.op.replace("-start", "")
-                size = _shape_bytes(ins.type_str)
-                if ins.op.endswith("-start"):
-                    size //= 2  # start op type is (operand, result) tuple
-                g = _coll_group(ins.line)
-                frac = (g - 1) / g if g > 1 else 0.0
-                stats.coll_counts[base_op] = stats.coll_counts.get(base_op, 0) + mult
-                stats.coll_result_bytes[base_op] = (
-                    stats.coll_result_bytes.get(base_op, 0) + mult * size
-                )
-                if base_op == "all-reduce":
-                    stats.coll_wire_bytes += mult * 2 * size * frac
-                elif base_op == "reduce-scatter":
-                    stats.coll_wire_bytes += mult * size * (g - 1)
-                elif base_op == "collective-permute":
-                    stats.coll_wire_bytes += mult * size
-                else:
-                    stats.coll_wire_bytes += mult * size * frac
-            # HBM traffic at fusion granularity (top-level materializing ops)
-            if ins.op not in _NO_TRAFFIC and not ins.op.endswith("-done"):
-                out_b = _shape_bytes(ins.type_str)
-                in_b = 0
-                for op_name in _operand_names(ins.line):
-                    t = comp.symbols.get(op_name)
-                    if t:
-                        in_b += _shape_bytes(t)
-                stats.hbm_bytes += mult * (out_b + in_b)
-                base = ins.op.replace("-start", "")
-                if base in _IDEAL_TRAFFIC_OPS:
-                    stats.hbm_bytes_ideal += mult * _ideal_traffic(
-                        base, ins, comp, out_b, in_b
-                    )
+                    yield from rec(c, mult)
         visiting.discard(name)
 
-    def _coll_group(line: str) -> int:
-        m = _GROUP_RE.search(line)
-        if m:
-            return int(m.group(2))
-        m = _GROUP_LIST_RE.search(line)
-        if m:
-            return len(m.group(1).split(","))
-        return 2
+    if entry is not None:
+        yield from rec(entry, 1.0)
 
-    comp_cost(entry, 1.0)
+
+def walk(text: str, entry: str | None = None) -> WalkStats:
+    comps = parse_hlo(text)
+    if not comps:
+        return WalkStats()
+    stats = WalkStats()
+    for comp, ins, mult, tc in iter_graph(comps, entry):
+        if ins.op == "while":
+            stats.while_trip_counts.append(tc)
+            continue
+        if ins.op == "dot":
+            stats.dot_flops += mult * _dot_flops(ins, comp)
+        if ins.op in _COLL_FACTORS or any(
+            ins.op == c + "-start" for c in _COLL_FACTORS
+        ):
+            base_op = ins.op.replace("-start", "")
+            size = _shape_bytes(ins.type_str)
+            if ins.op.endswith("-start"):
+                size //= 2  # start op type is (operand, result) tuple
+            g = _coll_group(ins.line)
+            frac = (g - 1) / g if g > 1 else 0.0
+            stats.coll_counts[base_op] = stats.coll_counts.get(base_op, 0) + mult
+            stats.coll_result_bytes[base_op] = (
+                stats.coll_result_bytes.get(base_op, 0) + mult * size
+            )
+            if base_op == "all-reduce":
+                stats.coll_wire_bytes += mult * 2 * size * frac
+            elif base_op == "reduce-scatter":
+                stats.coll_wire_bytes += mult * size * (g - 1)
+            elif base_op == "collective-permute":
+                stats.coll_wire_bytes += mult * size
+            else:
+                stats.coll_wire_bytes += mult * size * frac
+        # HBM traffic at fusion granularity (top-level materializing ops)
+        if ins.op not in _NO_TRAFFIC and not ins.op.endswith("-done"):
+            out_b = _shape_bytes(ins.type_str)
+            in_b = 0
+            for op_name in _operand_names(ins.line):
+                t = comp.symbols.get(op_name)
+                if t:
+                    in_b += _shape_bytes(t)
+            stats.hbm_bytes += mult * (out_b + in_b)
+            base = ins.op.replace("-start", "")
+            if base in _IDEAL_TRAFFIC_OPS:
+                stats.hbm_bytes_ideal += mult * _ideal_traffic(
+                    base, ins, comp, out_b, in_b
+                )
     return stats
+
+
+def _coll_group(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2

@@ -1,0 +1,291 @@
+"""repro.analyze: each checker fires on an injected violation and stays
+silent on the clean repo (ISSUE-6 acceptance criteria)."""
+
+import json
+import pathlib
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analyze import contracts, hlo_check, idiom_lint, sync_audit
+from repro.analyze.discovery import (
+    REPO_ROOT,
+    SRC_ROOT,
+    is_repro_frame,
+    repro_source_files,
+)
+
+BASELINE = pathlib.Path(__file__).resolve().parent.parent / "tools"
+BASELINE = BASELINE / "analyze_baseline.json"
+
+
+def _baseline():
+    return json.loads(BASELINE.read_text())
+
+
+# ---------------------------------------------------------------- discovery
+def test_discovery_agrees_with_tree():
+    files = repro_source_files()
+    assert SRC_ROOT / "core" / "engine_core.py" in files
+    assert all(f.suffix == ".py" for f in files)
+    assert is_repro_frame(str(SRC_ROOT / "core" / "engine_core.py"))
+    assert not is_repro_frame(str(REPO_ROOT / "tools" / "analyze.py"))
+
+
+# ------------------------------------------------------- contracts: checker 1
+def test_contracts_clean_repo():
+    assert contracts.check_contracts() == []
+
+
+def _write_family(tmp_path, ref_params="a, b"):
+    fam = tmp_path / "fake_fam"
+    fam.mkdir()
+    (fam / "ops.py").write_text(
+        textwrap.dedent(
+            """
+            CONTRACT = {
+                "family": "fake_fam",
+                "identity": "integer",
+                "ops": {
+                    "op1": {
+                        "roles": ["x", "y"],
+                        "out": ["vals:int64[nr]"],
+                        "backends": {
+                            "numpy": {
+                                "module": "ops",
+                                "fn": "f_np",
+                                "params": ["a:x", "b:y"],
+                            },
+                            "ref": {
+                                "module": "ref",
+                                "fn": "f_ref",
+                                "params": ["a:x", "b:y"],
+                            },
+                            "pallas": {
+                                "module": "kernel",
+                                "fn": "f_k",
+                                "params": [
+                                    "a:x",
+                                    "meta:staging=y",
+                                    "interpret:config",
+                                ],
+                            },
+                        },
+                    },
+                },
+            }
+
+
+            def f_np(a, b):
+                return a
+            """
+        )
+    )
+    (fam / "ref.py").write_text(f"def f_ref({ref_params}):\n    return a\n")
+    (fam / "kernel.py").write_text(
+        "def f_k(a, meta, interpret=True):\n    return a\n"
+    )
+    return fam
+
+
+def test_contracts_fixture_clean(tmp_path):
+    _write_family(tmp_path)
+    assert contracts.check_contracts(kernels_root=tmp_path) == []
+
+
+def test_contracts_signature_drift_fires(tmp_path):
+    # the ref renamed/reordered a parameter without updating the contract
+    _write_family(tmp_path, ref_params="a, probes")
+    findings = contracts.check_contracts(kernels_root=tmp_path)
+    assert any(f.rule == "signature-mismatch" for f in findings)
+
+
+def test_contracts_missing_required_fires(tmp_path):
+    (tmp_path / "bare_fam").mkdir()
+    (tmp_path / "bare_fam" / "ops.py").write_text("X = 1\n")
+    findings = contracts.check_contracts(
+        kernels_root=tmp_path, required=("bare_fam",)
+    )
+    assert any(f.rule == "missing-contract" for f in findings)
+
+
+def test_contracts_integer_float_out_fires(tmp_path):
+    fam = _write_family(tmp_path)
+    src = (fam / "ops.py").read_text()
+    (fam / "ops.py").write_text(
+        src.replace('"vals:int64[nr]"', '"vals:float32[nr]"')
+    )
+    findings = contracts.check_contracts(kernels_root=tmp_path)
+    assert any(f.rule == "integer-float-out" for f in findings)
+
+
+# ------------------------------------------------------------- HLO: checker 2
+def test_hlo_clean_graphs():
+    assert hlo_check.check_graphs(backend="ref") == []
+
+
+def test_hlo_fma_contraction_fires():
+    import jax
+    import jax.numpy as jnp
+
+    f32 = jnp.ones((8, 128), jnp.float32)
+    text = jax.jit(lambda a, b, c: a * b + c).lower(f32, f32, f32)
+    text = text.compile().as_text()
+    findings = hlo_check.check_hlo_text(text, "f32-bit-exact", "fixture")
+    assert any(f.rule == "fma-contraction" for f in findings)
+
+
+def test_hlo_float_in_integer_graph_fires():
+    import jax
+    import jax.numpy as jnp
+
+    i32 = jnp.ones((8, 128), jnp.int32)
+
+    def leaky(a):  # a float cast snuck into an integer pipeline
+        return (a.astype(jnp.float32) * 1.5).astype(jnp.int32)
+
+    text = jax.jit(leaky).lower(i32).compile().as_text()
+    findings = hlo_check.check_hlo_text(text, "integer", "fixture")
+    assert any(f.rule == "float-in-integer-graph" for f in findings)
+
+
+def test_hlo_dot_allowlist():
+    import jax
+    import jax.numpy as jnp
+
+    a = jnp.ones((8, 64), jnp.float32)
+    b = jnp.ones((64, 8), jnp.float32)
+    text = jax.jit(jnp.dot).lower(a, b).compile().as_text()
+    hit = hlo_check.check_hlo_text(text, "f32-bit-exact", "fixture")
+    ok = hlo_check.check_hlo_text(
+        text, "f32-bit-exact", "fixture", allow_dots=(64,)
+    )
+    assert any(f.rule == "dot-contraction" for f in hit)
+    assert not any(f.rule == "dot-contraction" for f in ok)
+
+
+# ------------------------------------------------------------ sync: checker 3
+def test_sync_audit_matches_baseline():
+    measured = sync_audit.audit_hot_paths(backend="ref")
+    assert measured["hot_paths"]["ranked_topk"]["syncs"] == 2
+    assert measured["hot_paths"]["boolean_and"]["syncs"] == 1
+    assert all(
+        m["callbacks"] == 0 for m in measured["hot_paths"].values()
+    )
+    assert sync_audit.compare_baseline(measured, _baseline()) == []
+
+
+def test_sync_injected_fetch_fires(monkeypatch):
+    # a refactor adds a device fetch to the ranked batch entry: the audited
+    # site set grows past the baseline and the ratchet trips
+    import jax.numpy as jnp
+
+    from repro.ranked import topk_engine
+
+    leak = jnp.arange(8)
+    orig = topk_engine.TopKEngine._query_spec
+
+    def leaky(self, terms):
+        np.asarray(leak)
+        return orig(self, terms)
+
+    monkeypatch.setattr(topk_engine.TopKEngine, "_query_spec", leaky)
+    measured = sync_audit.audit_hot_paths(backend="ref")
+    findings = sync_audit.compare_baseline(measured, _baseline())
+    assert any(
+        f.rule == "sync-regression" and f.where == "ranked_topk"
+        for f in findings
+    )
+
+
+def test_sync_ratchet_semantics():
+    baseline = _baseline()
+    worse = json.loads(json.dumps(baseline))
+    worse["hot_paths"]["boolean_and"]["syncs"] += 1
+    worse["hot_paths"]["ranked_topk"]["callbacks"] += 1
+    findings = sync_audit.compare_baseline(worse, baseline)
+    assert {f.rule for f in findings} == {
+        "sync-regression",
+        "callback-regression",
+    }
+    # equal-to-baseline passes; missing baseline is itself a finding
+    assert sync_audit.compare_baseline(baseline, baseline) == []
+    missing = sync_audit.compare_baseline(baseline, None)
+    assert [f.rule for f in missing] == ["missing-baseline"]
+    # below-baseline is not a failure, just a ratchet-down hint
+    better = json.loads(json.dumps(baseline))
+    better["hot_paths"]["ranked_topk"]["syncs"] = 0
+    assert sync_audit.compare_baseline(better, baseline) == []
+    assert sync_audit.improvements(better, baseline)
+
+
+def test_count_callbacks_sees_pure_callback():
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        shape = jax.ShapeDtypeStruct(x.shape, x.dtype)
+        return jax.pure_callback(lambda v: np.asarray(v) + 1, shape, x)
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones(4))
+    assert sync_audit.count_callbacks(jaxpr) == 1
+    clean = jax.make_jaxpr(lambda x: x + 1)(jnp.ones(4))
+    assert sync_audit.count_callbacks(clean) == 0
+
+
+# ----------------------------------------------------------- idiom: checker 4
+def test_idiom_clean_repo():
+    assert idiom_lint.lint_repo() == []
+
+
+@pytest.mark.parametrize(
+    "src,rel,rule",
+    [
+        (
+            "import jax.numpy as jnp\n\n\ndef f(x):\n"
+            "    return x * jnp.float32(1.5)\n",
+            "src/repro/ranked/fake.py",
+            "ranked-f32-math",
+        ),
+        (
+            'entry = {"sha": "abc", "records": []}\n',
+            "benchmarks/fake.py",
+            "bench-history-timestamp",
+        ),
+        (
+            'import os\n\nBACKEND = os.environ.get("REPRO_BACKEND", "numpy")\n',
+            "src/repro/core/fake.py",
+            "backend-route",
+        ),
+        (
+            "import jax\n\nBACKEND = jax.default_backend()\n",
+            "src/repro/launch/fake.py",
+            "backend-route",
+        ),
+    ],
+)
+def test_idiom_rules_fire(src, rel, rule):
+    findings = idiom_lint.lint_source(src, rel)
+    assert any(f.rule == rule for f in findings)
+
+
+def test_idiom_scoping_and_suppression():
+    # same constructs are fine outside the scoped tree / on the authority
+    f32 = (
+        "import jax.numpy as jnp\n\n\ndef f(x):\n"
+        "    return x * jnp.float32(1.5)\n"
+    )
+    assert idiom_lint.lint_source(f32, "src/repro/models/fake.py") == []
+    env = 'import os\n\nB = os.environ.get("REPRO_BACKEND", "numpy")\n'
+    assert idiom_lint.lint_source(env, idiom_lint.BACKEND_AUTHORITY) == []
+    suppressed = (
+        "import os\n\n"
+        'B = os.environ.get("REPRO_BACKEND")  # analyze: allow\n'
+    )
+    assert idiom_lint.lint_source(suppressed, "src/repro/core/fake.py") == []
+
+
+def test_idiom_timestamped_entry_passes():
+    src = 'entry = {"sha": s, "timestamp": t, "records": r}\n'
+    assert idiom_lint.lint_source(src, "benchmarks/fake.py") == []

@@ -1,0 +1,27 @@
+"""repro.compat: the jax-version gate around the backfill install."""
+
+import jax
+
+import repro.compat as compat
+
+
+def test_backfills_needed_versions():
+    assert compat.backfills_needed("0.4.37")
+    assert compat.backfills_needed("0.5.99")
+    assert not compat.backfills_needed("0.6.0")
+    assert not compat.backfills_needed("1.0.0")
+    assert compat.backfills_needed("nightly")  # unparseable -> legacy path
+
+
+def test_surface_exists_either_way():
+    # on the container's 0.4.37 the shims are installed; on a new-enough
+    # jax they are native and the install is skipped -- either way the
+    # surface the repo is written against must exist
+    assert hasattr(jax, "shard_map")
+    assert hasattr(jax, "set_mesh")
+    assert hasattr(jax.sharding, "AxisType")
+    assert hasattr(jax.sharding, "get_abstract_mesh")
+
+
+def test_get_abstract_mesh_no_ambient():
+    assert compat.get_abstract_mesh() is None

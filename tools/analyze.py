@@ -1,0 +1,140 @@
+#!/usr/bin/env python
+"""Static contract analyzer CLI (ISSUE-6): gate + ratchet.
+
+  PYTHONPATH=src python tools/analyze.py --check
+      run all four checkers (contract registry, HLO sanitizer, host-sync
+      audit vs the committed baseline, idiom lint); exit 1 on any finding.
+
+  PYTHONPATH=src python tools/analyze.py --update-baseline [--force]
+      re-measure the hot-path sync counts and rewrite
+      tools/analyze_baseline.json.  Refuses to RAISE a count without
+      --force: the baseline is a ratchet (ROADMAP: resident query rounds),
+      not a snapshot.
+
+CI runs ``--check`` on the ref backend (the lowering the bit-identity
+contract quantifies over) in its own tier1 job; like tools/check_bench.py
+it appends a one-line verdict to $GITHUB_STEP_SUMMARY when set.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+DEFAULT_BASELINE = ROOT / "tools" / "analyze_baseline.json"
+
+
+def _write_summary(line: str) -> None:
+    """One markdown line into the Actions job summary, when available."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    try:
+        with open(path, "a") as fh:
+            fh.write(line + "\n")
+    except OSError as e:  # a broken summary file must not flip the gate
+        print(f"[analyze] could not write step summary: {e}", file=sys.stderr)
+
+
+def _load_baseline(path: pathlib.Path) -> dict | None:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+
+
+def _sync_counts(measured: dict) -> str:
+    return " ".join(
+        f"{name}={m['syncs']}" for name, m in sorted(measured["hot_paths"].items())
+    )
+
+
+def update_baseline(measured: dict, path: pathlib.Path, force: bool) -> int:
+    from repro.analyze import sync_audit
+
+    baseline = _load_baseline(path)
+    regressions = [
+        f
+        for f in sync_audit.compare_baseline(measured, baseline)
+        if f.rule != "missing-baseline"
+    ]
+    if regressions and not force:
+        print("[analyze] refusing to RAISE the baseline (it is a ratchet):")
+        for f in regressions:
+            print(f"[analyze]   {f}")
+        print("[analyze] pass --force to accept the regression anyway")
+        return 1
+    path.write_text(json.dumps(measured, indent=2, sort_keys=True) + "\n")
+    print(f"[analyze] baseline written: {path} ({_sync_counts(measured)})")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true", help="run all checkers")
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the sync-count baseline from a fresh measurement",
+    )
+    ap.add_argument(
+        "--force", action="store_true", help="allow --update-baseline to raise counts"
+    )
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument(
+        "--backend",
+        default="ref",
+        choices=("ref", "pallas"),
+        help="lowering the HLO sanitizer / sync audit run against",
+    )
+    args = ap.parse_args()
+    if not (args.check or args.update_baseline):
+        args.check = True
+    baseline_path = pathlib.Path(args.baseline)
+
+    from repro.analyze import contracts, hlo_check, idiom_lint, sync_audit
+
+    findings = contracts.check_contracts()
+    print(f"[analyze] contracts: {len(findings)} finding(s)")
+
+    lint = idiom_lint.lint_repo()
+    print(f"[analyze] idiom lint: {len(lint)} finding(s)")
+    findings += lint
+
+    hlo = hlo_check.check_graphs(backend=args.backend)
+    print(f"[analyze] hlo sanitizer ({args.backend}): {len(hlo)} finding(s)")
+    findings += hlo
+
+    measured = sync_audit.audit_hot_paths(backend=args.backend)
+    print(f"[analyze] sync audit: {_sync_counts(measured)}")
+
+    if args.update_baseline:
+        return update_baseline(measured, baseline_path, args.force)
+
+    baseline = _load_baseline(baseline_path)
+    findings += sync_audit.compare_baseline(measured, baseline)
+    for hint in sync_audit.improvements(measured, baseline):
+        print(f"[analyze] NOTE {hint}")
+
+    for f in findings:
+        print(f"[analyze] FAIL {f}", file=sys.stderr)
+    if findings:
+        worst = "; ".join(str(f) for f in findings[:3])
+        _write_summary(f"**analyze:** :x: {len(findings)} finding(s): {worst}")
+        return 1
+    _write_summary(
+        f"**analyze:** :white_check_mark: contracts/HLO/idiom clean; "
+        f"syncs {_sync_counts(measured)} within baseline"
+    )
+    print("[analyze] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

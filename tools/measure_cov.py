@@ -10,6 +10,14 @@ come from walking every compiled code object's ``co_lines`` table -- the
 same statement universe coverage.py measures, approximated (docstring
 statements included, as coverage.py counts them).
 
+What counts as repro source -- both the file enumeration and the frame
+filter -- is answered by ``repro.analyze.discovery``, shared with the
+static analyzer (ISSUE-6).  The helper is loaded FILE-first (importlib,
+no ``repro`` package import) so tracing starts before anything imports
+jax; it also canonicalizes frame filenames, fixing a silent zeroing bug:
+tests/conftest.py's unnormalized ``tests/../src`` sys.path entry leaks
+into every ``co_filename``, so the old prefix filter matched nothing.
+
 The tier-1 gate (`tools/tier1.sh`, TIER1_COV=1) uses pytest-cov's number,
 which differs from this one by a point or two; seed the floor a safe
 margin below the smaller of the two.
@@ -19,30 +27,42 @@ margin below the smaller of the two.
 
 from __future__ import annotations
 
-import os
+import importlib.util
 import pathlib
 import sys
 import threading
 from collections import defaultdict
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-SRC = ROOT / "src" / "repro"
+
+
+def _load_discovery():
+    """repro.analyze.discovery, loaded WITHOUT importing the repro package
+    (which would pull jax before tracing starts)."""
+    path = ROOT / "src" / "repro" / "analyze" / "discovery.py"
+    spec = importlib.util.spec_from_file_location("_repro_discovery", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+discovery = _load_discovery()
 
 executed: dict[str, set[int]] = defaultdict(set)
-_prefix = str(SRC) + os.sep
-
-
-def _local_tracer(frame, event, arg):
-    if event == "line":
-        executed[frame.f_code.co_filename].add(frame.f_lineno)
-    return _local_tracer
 
 
 def _tracer(frame, event, arg):
     # cheap filter at call granularity: only repro frames get line events
-    if event == "call" and frame.f_code.co_filename.startswith(_prefix):
-        return _local_tracer
-    return None
+    if event != "call" or not discovery.is_repro_frame(frame.f_code.co_filename):
+        return None
+    lines = executed[discovery.canon_frame_filename(frame.f_code.co_filename)]
+
+    def _local(frame, event, arg):
+        if event == "line":
+            lines.add(frame.f_lineno)
+        return _local
+
+    return _local
 
 
 def executable_lines(path: pathlib.Path) -> set[int]:
@@ -67,7 +87,7 @@ def main() -> int:
 
     total_exec = total_hit = 0
     rows = []
-    for path in sorted(SRC.rglob("*.py")):
+    for path in discovery.repro_source_files():
         want = executable_lines(path)
         hit = executed.get(str(path), set()) & want
         total_exec += len(want)
