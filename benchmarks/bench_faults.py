@@ -1,0 +1,193 @@
+"""Fault-injected serving: availability, degraded fraction, recovery time.
+
+The DESIGN.md §11 acceptance bench: a sharded ``QueryEngine`` serves a
+fixed AND workload while ``ShardFaultInjector`` kills shards mid-run, in
+the three deployment configurations the recovery contract distinguishes:
+
+  * ``replicas=2``     -- the dead primary's lists fail over to replicas;
+                          every answer must stay BIT-IDENTICAL to the
+                          no-fault run (availability 1.0 by construction).
+  * ``recover``        -- no replicas, but an arena checkpoint: the DEAD
+                          shard's sub-arena restores (OptVB-packed
+                          sidecars) and re-admits; identical once whole,
+                          and the p99 death->re-admit time is reported.
+  * ``degraded``       -- no replicas, no checkpoint: queries touching
+                          dead lists answer restricted to live lists
+                          (exactly the no-fault answers of the restricted
+                          queries); the degraded-answer fraction is
+                          reported.
+
+Availability here is the exact-answer fraction across the two
+production-shaped lanes (replicas + recovery); the identity asserts are
+correctness, not perf, so they always run.  The numpy backend keeps the
+bench portable; the dispatch-boundary injection paths themselves are
+exercised across backends in tests/test_resilience.py.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from .common import emit, latency_fields, perf_asserts, timeit_samples
+
+
+def _workload(rng, smoke: bool, quick: bool):
+    from repro.core.index import build_partitioned_index
+    from repro.data.postings import make_corpus, make_queries
+
+    if smoke:
+        n_lists, min_len, max_len, n_queries, batch = 8, 200, 1_200, 24, 6
+    else:
+        n_lists, min_len, max_len, n_queries, batch = (
+            16, 1_000, 8_000 if quick else 40_000, 96, 12
+        )
+    corpus = make_corpus(
+        rng, n_lists=n_lists, min_len=min_len, max_len=max_len,
+        mean_dense_gap=2.13, frac_dense=0.8,
+    )
+    idx = build_partitioned_index(corpus, "optimal")
+    queries = [
+        [int(t) for t in q]
+        for q in make_queries(rng, n_lists, n_queries, 2)
+    ]
+    return idx, queries, batch
+
+
+def _serve_all(res, queries, batch):
+    """(results, per-batch seconds, degraded query count)."""
+    out, lat, degraded_q = [], [], 0
+    import time
+
+    for i in range(0, len(queries), batch):
+        chunk = queries[i : i + batch]
+        t0 = time.perf_counter()
+        got, info = res.intersect_batch(chunk)
+        lat.append(time.perf_counter() - t0)
+        out.extend(got)
+        if info.degraded:
+            miss = set(info.missing_lists.tolist())
+            degraded_q += sum(1 for q in chunk if any(t in miss for t in q))
+    return out, lat, degraded_q
+
+
+def run(quick: bool = True, smoke: bool = False, shards: int = 4) -> None:
+    from repro.core.query_engine import QueryEngine
+    from repro.checkpoint import CheckpointManager
+    from repro.distributed.resilient import ResilientEngine, ShardFaultInjector
+
+    rng = np.random.default_rng(0)
+    idx, queries, batch = _workload(rng, smoke, quick)
+    plain = QueryEngine(idx, backend="numpy")
+    samples, want = timeit_samples(
+        lambda: plain.intersect_batch(queries), repeat=2
+    )
+    emit(
+        "faults_baseline_nofault",
+        samples[-1] / len(queries) * 1e6,
+        f"queries={len(queries)};shards={shards}",
+        **latency_fields(samples, per=len(queries)),
+    )
+    total = exact = 0
+    lat_all: list[float] = []
+
+    # ---- lane 1: replica failover (kill one shard mid-run)
+    inj = ShardFaultInjector(at_batches=(1,), shards=(0,))
+    res = ResilientEngine(
+        QueryEngine(idx, backend="numpy", shards=shards, replicas=2,
+                    shard_mesh=None),
+        injector=inj, backoff_s=1e-4,
+    )
+    got, lat, degraded_q = _serve_all(res, queries, batch)
+    assert degraded_q == 0, "replicas=2 must serve every list through a fault"
+    for g, w in zip(got, want):
+        assert np.array_equal(g, w), "replica failover must be bit-identical"
+    total += len(queries)
+    exact += len(queries)
+    lat_all += lat
+    emit(
+        "faults_replica_failover",
+        sum(lat) / len(queries) * 1e6,
+        f"replicas=2;failovers={res.stats['failovers']};"
+        f"dead={int(res.sa.dead.sum())}",
+        **latency_fields(lat, per=batch),
+    )
+
+    # ---- lane 2: checkpoint recovery (no replicas; DEAD shard re-admits)
+    with tempfile.TemporaryDirectory() as d:
+        manager = CheckpointManager(d, async_save=False)
+        inj = ShardFaultInjector(at_batches=(1,), shards=(1,))
+        res = ResilientEngine(
+            QueryEngine(idx, backend="numpy", shards=shards, shard_mesh=None),
+            injector=inj, manager=manager, backoff_s=1e-4,
+        )
+        res.checkpoint()
+        got, lat, degraded_q = _serve_all(res, queries, batch)
+    assert degraded_q == 0, "sync recovery must re-admit within the batch"
+    for g, w in zip(got, want):
+        assert np.array_equal(g, w), "recovered serving must be bit-identical"
+    assert res.stats["recoveries"] >= 1
+    p99_rec = res.recovery_p99_s()
+    assert np.isfinite(p99_rec), "recovery p99 must be finite"
+    total += len(queries)
+    exact += len(queries)
+    lat_all += lat
+    emit(
+        "faults_ckpt_recovery",
+        sum(lat) / len(queries) * 1e6,
+        f"recoveries={res.stats['recoveries']};"
+        f"p99_recovery_ms={p99_rec * 1e3:.2f}",
+        recovery_p99_us=p99_rec * 1e6,
+        **latency_fields(lat, per=batch),
+    )
+
+    # ---- lane 3: graceful degradation (no replicas, no checkpoint)
+    inj = ShardFaultInjector(at_batches=(1,), shards=(2 % shards,))
+    res = ResilientEngine(
+        QueryEngine(idx, backend="numpy", shards=shards, shard_mesh=None),
+        injector=inj, backoff_s=1e-4,
+    )
+    got, lat, degraded_q = _serve_all(res, queries, batch)
+    missing = set(res.sa.unserved_lists().tolist())
+    live = [[t for t in q if t not in missing] for q in queries]
+    restricted = plain.intersect_batch(live)
+    # degraded answers = the no-fault answers of the live-restricted
+    # queries -- except the batches served BEFORE the fault fired, which
+    # must match the unrestricted no-fault answers
+    for i, (g, w, r) in enumerate(zip(got, want, restricted)):
+        assert np.array_equal(g, w) or np.array_equal(g, r), i
+    degraded_frac = degraded_q / len(queries)
+    emit(
+        "faults_degraded",
+        sum(lat) / len(queries) * 1e6,
+        f"degraded_frac={degraded_frac:.4f};"
+        f"missing_lists={len(missing)}",
+        degraded_fraction=degraded_frac,
+        **latency_fields(lat, per=batch),
+    )
+
+    # ---- the §11 acceptance summary: production-shaped lanes only
+    availability = exact / max(total, 1)
+    emit(
+        "faults_availability",
+        sum(lat_all) / max(total, 1) * 1e6,
+        f"availability={availability:.4f};total={total}",
+        availability=availability,
+        **latency_fields(lat_all, per=batch),
+    )
+    assert availability >= 0.99, (
+        f"availability {availability:.4f} < 0.99 under the default "
+        "injection schedule"
+    )
+    if perf_asserts() and not smoke:
+        # recovery must complete well inside a serving blip: a restored
+        # sub-arena is a row gather of the checkpointed arena, so p99
+        # death->re-admit beyond 5s means the restore path regressed
+        assert p99_rec < 5.0, f"p99 recovery {p99_rec:.2f}s"
+
+
+if __name__ == "__main__":
+    from .common import cli_main
+
+    cli_main(run)

@@ -25,6 +25,7 @@ import time
 from . import (
     bench_build_time,
     bench_competitors,
+    bench_faults,
     bench_fig1_distribution,
     bench_kernels,
     bench_nextgeq,
@@ -44,6 +45,7 @@ MODULES = {
     "table5": bench_queries,
     "table6": bench_competitors,
     "fig7": bench_nextgeq,
+    "faults": bench_faults,
     "kernels": bench_kernels,
     "ranked": bench_ranked,
     "roofline": roofline,
@@ -57,6 +59,7 @@ MAX_HISTORY = 40
 JSON_GROUPS = {
     "table5": "queries",
     "fig7": "queries",
+    "faults": "faults",
     "kernels": "kernels",
     "ranked": "ranked",
 }

@@ -19,8 +19,10 @@ from __future__ import annotations
 import json
 import pathlib
 import shutil
+import sys
 import threading
 import time
+import zipfile
 
 import numpy as np
 
@@ -67,6 +69,13 @@ def unpack_sorted_int_array(packed: dict) -> np.ndarray:
 
 def _is_strictly_increasing(a: np.ndarray) -> bool:
     return a.ndim == 1 and a.size > 1 and bool(np.all(a[1:] > a[:-1]))
+
+
+# everything a corrupt/truncated checkpoint can throw at restore time: bad
+# zip central directory (truncated npz), short member payload or shape
+# mismatch (ValueError), missing npz keys (KeyError), unreadable files
+# (OSError), bad JSON (json.JSONDecodeError is a ValueError)
+RESTORE_ERRORS = (OSError, ValueError, KeyError, zipfile.BadZipFile)
 
 
 # --------------------------------------------------------------------------
@@ -134,22 +143,53 @@ class CheckpointManager:
             shutil.rmtree(old, ignore_errors=True)
 
     # ---------------- restore ----------------
+    def steps(self) -> list[int]:
+        """All retained checkpoint steps, ascending."""
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+
     def latest_step(self) -> int | None:
-        ckpts = sorted(self.dir.glob("step_*"))
-        if not ckpts:
-            return None
-        return int(ckpts[-1].name.split("_")[1])
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def manifest(self, step: int) -> dict:
+        """Parsed manifest of one retained step (raises if unreadable)."""
+        path = self.dir / f"step_{step:010d}" / "manifest.json"
+        return json.loads(path.read_text())
 
     def restore(self, target_tree, step: int | None = None, shardings=None):
         """Load into the structure of ``target_tree``.
 
         ``shardings``: optional pytree of Sharding -- enables restore onto a
         different mesh than the checkpoint was written from (elastic).
+
+        With ``step=None`` a corrupt or truncated newest checkpoint (bad
+        JSON, short zip payload, missing members) is SKIPPED with a warning
+        and the newest *intact* retained step restores instead -- a
+        half-written checkpoint from a crashed host must degrade recovery
+        by one save interval, not kill it.  An explicit ``step`` never
+        falls back: the caller asked for that exact state.
         """
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        if step is not None:
+            return self._restore_step(target_tree, step, shardings)
+        steps = self.steps()
+        if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        last_err: Exception | None = None
+        for s in reversed(steps):
+            try:
+                return self._restore_step(target_tree, s, shardings)
+            except RESTORE_ERRORS as e:
+                print(
+                    f"[ckpt] step {s} unreadable ({type(e).__name__}: {e}); "
+                    "falling back to the previous retained step",
+                    file=sys.stderr,
+                )
+                last_err = e
+        raise FileNotFoundError(
+            f"no intact checkpoint in {self.dir}"
+        ) from last_err
+
+    def _restore_step(self, target_tree, step: int, shardings=None):
         path = self.dir / f"step_{step:010d}"
         manifest = json.loads((path / "manifest.json").read_text())
         data = np.load(path / "arrays.npz")

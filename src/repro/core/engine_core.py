@@ -296,8 +296,16 @@ class EngineCore:
         mirror_backend: str | None = None,
         lane_scores_fn=None,
         stats: dict | None = None,
+        shard_id: int | None = None,
+        injector=None,
     ):
         self.arena = arena
+        # host-loop shard-dispatch fault boundary (ISSUE-7): when this core
+        # serves one shard of a ShardedArena, a ShardFaultInjector is
+        # consulted at every fused dispatch -- the host-loop mirror of the
+        # shard_map dispatchers' check
+        self.shard_id = shard_id
+        self.injector = injector
         self.backend = default_backend() if backend == "auto" else backend
         # interpret mode only off-accelerator: on TPU/GPU the pallas backend
         # must COMPILE the kernel, not emulate it
@@ -568,6 +576,8 @@ class EngineCore:
         value/rank are meaningful only where ``~past`` (the device pipeline
         pre-masks them to -1, which is equivalent for every caller).
         """
+        if self.injector is not None and self.shard_id is not None:
+            self.injector.check(self.shard_id)
         if self.use_device:
             value, rank = self.search_jax(terms, probes)
             return value, rank, value < 0

@@ -109,6 +109,15 @@ class QueryEngine:
         axis.  "auto" builds a one-device-per-shard mesh when enough jax
         devices exist (the single ``shard_map`` dispatch); None (or too few
         devices) serves shards as a host-side loop instead.
+    replicas: place each list on this many shards (``core.shard``'s
+        splitmix64 replica placement); routing prefers the primary, so
+        R > 1 changes nothing until a shard is marked dead and its lists
+        fail over to live replicas -- bit-identically, the merge being a
+        pure scatter.
+    fault_injector: optional ``ShardFaultInjector`` consulted at every
+        shard dispatch (shard_map and host-loop paths) -- the query-path
+        mirror of ``SimulatedFailure``, normally wired by
+        ``ResilientEngine``.
     """
 
     def __init__(
@@ -121,6 +130,8 @@ class QueryEngine:
         group: bool = True,
         shards: int | None = None,
         shard_mesh="auto",
+        replicas: int = 1,
+        fault_injector=None,
     ):
         self.index = index
         self.cache_parts = int(cache_parts)
@@ -148,6 +159,7 @@ class QueryEngine:
         self.sharded = None
         self._shard_cores: list[EngineCore] = []
         self._smap_fn = None
+        self.fault_injector = fault_injector
         if shards is not None:
             if not self.fused:
                 raise ValueError("shards= requires the fused engine "
@@ -155,7 +167,8 @@ class QueryEngine:
             from repro.core.shard import ShardedArena
 
             self.sharded = ShardedArena.build(
-                self.arena, int(shards), mesh=shard_mesh
+                self.arena, int(shards), mesh=shard_mesh,
+                replicas=int(replicas),
             )
 
         a = self.arena
@@ -269,8 +282,9 @@ class QueryEngine:
                 EngineCore(
                     sub, backend=self.backend, cache_parts=self.cache_parts,
                     cache_bytes=self.cache_bytes, stats=self.stats,
+                    shard_id=i, injector=self.fault_injector,
                 )
-                for sub in self.sharded.shards
+                for i, sub in enumerate(self.sharded.shards)
             ]
         return self._shard_cores[s]
 
@@ -285,11 +299,14 @@ class QueryEngine:
         one device dispatch; the loop path serves each shard through its
         own ``EngineCore`` (numpy or per-shard jit).
         """
+        from repro.core.shard import ShardsUnavailable
+
         sa = self.sharded
         n = len(terms)
         self.stats["sharded_batches"] += 1
-        owner = sa.owner[terms]
-        local = sa.local_list[terms]
+        owner, local, served = sa.route(terms)
+        if not served.all():
+            raise ShardsUnavailable(np.unique(np.asarray(terms)[~served]))
         order = np.argsort(owner, kind="stable")
         cuts = np.searchsorted(owner[order], np.arange(sa.n_shards + 1))
         value = np.full(n, -1, np.int64)
@@ -300,7 +317,8 @@ class QueryEngine:
                 from repro.core.shard import ShardMapSearch
 
                 self._smap_fn = ShardMapSearch(
-                    sa, backend=self.backend, interpret=self.interpret
+                    sa, backend=self.backend, interpret=self.interpret,
+                    injector=self.fault_injector,
                 )
             v, r = self._smap_fn(local[order], probes[order], cuts)
             value[order] = v

@@ -34,6 +34,17 @@ smaller arena with the same invariants:
   backend) the shards are served as a host-side loop over per-shard
   ``EngineCore``s -- same results, same routing, no device collective.
 
+* **replication + health (ISSUE-7)**: with ``replicas=R`` each list lives
+  on R shards -- replica r of list t on ``(splitmix64(t) + r) % n_shards``,
+  still a pure function of (t, r, S).  ``route()`` honors a mutable
+  per-shard ``dead`` mask: healthy routing picks the primary (row 0, so the
+  no-fault path is byte-identical to R=1), a dead primary fails over to the
+  first live replica, and lists with NO live replica come back unserved for
+  the caller to degrade on (``ResilientEngine``) or raise
+  ``ShardsUnavailable``.  Because the merge is a pure scatter and every
+  replica slice carries the same global stride, replica-served answers are
+  bit-identical to primary-served ones.
+
 An empty shard (no lists hash to it) is a valid degenerate sub-arena: its
 ``list_blk_offsets`` are all zero, so every cursor staged to it (only
 padding cursors can be) resolves past-the-end.
@@ -66,6 +77,34 @@ def shard_of_list(lists: np.ndarray, n_shards: int) -> np.ndarray:
     return (x % np.uint64(n_shards)).astype(np.int64)
 
 
+class ShardsUnavailable(RuntimeError):
+    """Raised when routing finds lists with NO live replica shard."""
+
+    def __init__(self, lists):
+        self.lists = np.asarray(lists, dtype=np.int64)
+        super().__init__(f"no live replica serves lists {self.lists.tolist()}")
+
+
+def replica_owners(n_lists: int, n_shards: int, replicas: int) -> np.ndarray:
+    """[R, n_lists] owning shard of each list's replicas (row 0 = primary).
+
+    Replica r of list t lives on ``(shard_of_list(t) + r) % n_shards`` --
+    like the primary, a pure function of (t, r, S): any frontend (or a
+    checkpoint-recovery path re-routing onto a different shard count) can
+    compute the whole placement without a table.
+    """
+    primary = shard_of_list(np.arange(n_lists, dtype=np.int64), n_shards)
+    r = np.arange(replicas, dtype=np.int64)
+    return (primary[None, :] + r[:, None]) % n_shards
+
+
+def local_map_of(lists_s: np.ndarray, n_lists: int) -> np.ndarray:
+    """Global -> shard-local list-id map for one shard's ascending lists."""
+    m = np.zeros(n_lists, np.int64)
+    m[lists_s] = np.arange(len(lists_s), dtype=np.int64)
+    return m
+
+
 def make_shard_mesh(n_shards: int):
     """Mesh with a "shard" axis, one device per shard; None if the process
     has too few jax devices (the engines then loop over shards instead)."""
@@ -90,10 +129,14 @@ class ShardedArena:
 
     n_shards: int
     arena: DeviceArena                  # the global (unsharded) arena
-    owner: np.ndarray                   # [n_lists] owning shard per list
-    local_list: np.ndarray              # [n_lists] id within the owner
+    owner: np.ndarray                   # [n_lists] primary shard per list
+    local_list: np.ndarray              # [n_lists] id within the primary
     lists_of: list[np.ndarray]          # per shard: global list ids, asc
     mesh: object = None                 # Mesh over "shard", or None
+    replicas: int = 1                   # copies of each list (R <= S)
+    owner_r: np.ndarray | None = None   # [R, n_lists] replica owners
+    local_r: np.ndarray | None = None   # [R, n_lists] local id per replica
+    dead: np.ndarray | None = None      # [S] bool, honored by route()
     _shards: list | None = field(default=None, repr=False, compare=False)
     _stacked_dev: dict | None = field(default=None, repr=False, compare=False)
     _rows_of: list | None = field(default=None, repr=False, compare=False)
@@ -103,17 +146,24 @@ class ShardedArena:
     )
 
     @classmethod
-    def build(cls, arena: DeviceArena, n_shards: int, mesh="auto"):
+    def build(cls, arena: DeviceArena, n_shards: int, mesh="auto", replicas: int = 1):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        # R > S would place two copies of a list on one shard: no extra
+        # fault tolerance, just wasted rows -- clamp to full replication
+        replicas = min(int(replicas), n_shards)
         n_lists = len(arena.list_blk_offsets) - 1
-        owner = shard_of_list(np.arange(n_lists, dtype=np.int64), n_shards)
-        local_list = np.zeros(n_lists, np.int64)
+        owner_r = replica_owners(n_lists, n_shards, replicas)
+        local_r = np.zeros((replicas, n_lists), np.int64)
         lists_of = []
         for s in range(n_shards):
-            lists_s = np.flatnonzero(owner == s)
-            local_list[lists_s] = np.arange(len(lists_s), dtype=np.int64)
+            lists_s = np.flatnonzero((owner_r == s).any(axis=0))
             lists_of.append(lists_s)
+            for r in range(replicas):
+                sel = np.flatnonzero(owner_r[r] == s)
+                local_r[r, sel] = np.searchsorted(lists_s, sel)
         if mesh == "auto":
             mesh = make_shard_mesh(n_shards)
         elif mesh is not None:
@@ -129,18 +179,58 @@ class ShardedArena:
         return cls(
             n_shards=n_shards,
             arena=arena,
-            owner=owner,
-            local_list=local_list,
+            owner=owner_r[0],
+            local_list=local_r[0],
             lists_of=lists_of,
             mesh=mesh,
+            replicas=replicas,
+            owner_r=owner_r,
+            local_r=local_r,
+            dead=np.zeros(n_shards, bool),
         )
+
+    # ------------------------------------------------------------------
+    # health-aware routing
+    # ------------------------------------------------------------------
+    def route(self, terms) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(owner, local, served) per term, honoring the ``dead`` mask.
+
+        Picks each term's FIRST live replica (primary preferred, so the
+        no-fault routing is byte-identical to ``replicas=1``).  ``served``
+        is False where no live replica exists; engines raise
+        ``ShardsUnavailable`` on those, ``ResilientEngine`` pre-filters
+        them into degraded results instead.
+        """
+        terms = np.asarray(terms, dtype=np.int64)
+        if self.owner_r is None or not self.dead.any():
+            return self.owner[terms], self.local_list[terms], np.ones(len(terms), bool)
+        own = self.owner_r[:, terms]
+        alive = ~self.dead[own]
+        served = alive.any(axis=0)
+        pick = np.argmax(alive, axis=0)
+        idx = np.arange(own.shape[1])
+        return own[pick, idx], self.local_r[:, terms][pick, idx], served
+
+    def route_one(self, t: int) -> tuple[int, int]:
+        """Single-term routing; raises ``ShardsUnavailable`` if unserved."""
+        owner, local, served = self.route(np.asarray([t], dtype=np.int64))
+        if not served[0]:
+            raise ShardsUnavailable([t])
+        return int(owner[0]), int(local[0])
+
+    def unserved_lists(self) -> np.ndarray:
+        """Global list ids with NO live replica under the ``dead`` mask."""
+        if self.owner_r is None or not self.dead.any():
+            return np.zeros(0, np.int64)
+        return np.flatnonzero(self.dead[self.owner_r].all(axis=0))
 
     @property
     def shards(self) -> list[DeviceArena]:
         """Per-shard sub-arenas (materialized on first access)."""
+        n_lists = len(self.arena.list_blk_offsets) - 1
         if self._shards is None:
             self._shards = [
-                _slice_arena(self.arena, lists_s, self.local_list)
+                _slice_arena(self.arena, lists_s, local_map_of(lists_s, n_lists))
                 for lists_s in self.lists_of
             ]
         return self._shards
@@ -157,11 +247,15 @@ class ShardedArena:
         """
         if self._rows_of is None:
             lob = self.arena.part_list[self.arena.part_of_block]
-            owner_of_block = self.owner[lob]
-            self._rows_of = [
-                np.flatnonzero(owner_of_block == s)
-                for s in range(self.n_shards)
-            ]
+            n_lists = len(self.arena.list_blk_offsets) - 1
+            rows = []
+            # membership, not owner equality: with replicas a global row
+            # belongs to EVERY shard holding a copy of its list
+            for lists_s in self.lists_of:
+                in_s = np.zeros(n_lists, bool)
+                in_s[lists_s] = True
+                rows.append(np.flatnonzero(in_s[lob]))
+            self._rows_of = rows
         return self._rows_of
 
     @property
@@ -374,12 +468,17 @@ class _ShardMapDispatch:
         backend: str,
         interpret: bool,
         max_bucket: int | None = None,
+        injector=None,
     ):
         if sharded.mesh is None:
             raise ValueError("shard_map dispatch needs a mesh")
         self.sharded = sharded
         self.backend = backend
         self.interpret = interpret
+        # shard-dispatch fault boundary (ISSUE-7): a ShardFaultInjector
+        # consulted per dispatch for every shard that receives cursors --
+        # the mesh-path mirror of the per-shard EngineCore check
+        self.injector = injector
         self.stride = sharded.arena.stride
         # per-shard staging cap PER DISPATCH: batches whose fullest shard
         # exceeds it run in rounds, so gathered tiles stay bounded and jit
@@ -471,6 +570,8 @@ class _ShardMapDispatch:
 
     def __call__(self, local_terms, probes, cuts):
         counts = np.diff(cuts)
+        if self.injector is not None:
+            self.injector.check_shards(np.flatnonzero(counts > 0))
         mb = self.max_bucket
         if mb is None or len(counts) == 0 or int(counts.max()) <= mb:
             return self._dispatch(local_terms, probes, cuts)
@@ -538,11 +639,19 @@ class ShardMapBM25(_ShardMapDispatch):
     """
 
     def __init__(
-        self, sharded, backend, interpret, k1p1: float, max_bucket: int | None = None
+        self,
+        sharded,
+        backend,
+        interpret,
+        k1p1: float,
+        max_bucket: int | None = None,
+        injector=None,
     ):
         if sharded.arena.ranked is None:
             raise ValueError("ShardMapBM25 needs a ranked arena")
-        super().__init__(sharded, backend, interpret, max_bucket=max_bucket)
+        super().__init__(
+            sharded, backend, interpret, max_bucket=max_bucket, injector=injector
+        )
         self.k1p1 = float(k1p1)
         self.norm_table = sharded.arena.ranked.norm_table
 
@@ -597,10 +706,12 @@ class ShardMapPivot(_ShardMapDispatch):
 
     PAD_PROBE = QMIN_NONE  # padding cursors prune their whole chunk
 
-    def __init__(self, sharded, backend, interpret, max_bucket=None):
+    def __init__(self, sharded, backend, interpret, max_bucket=None, injector=None):
         if sharded.arena.ranked is None:
             raise ValueError("ShardMapPivot needs a ranked arena")
-        super().__init__(sharded, backend, interpret, max_bucket=max_bucket)
+        super().__init__(
+            sharded, backend, interpret, max_bucket=max_bucket, injector=injector
+        )
 
     def _clip_probes(self, p):
         # qmins are bound codes in [0, QMIN_NONE], not docIDs: clip to the

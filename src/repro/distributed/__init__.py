@@ -1,2 +1,19 @@
-from .fault_tolerance import FaultTolerantRunner, SimulatedFailure
+from .fault_tolerance import FaultTolerantRunner, RunStats, SimulatedFailure
+from .resilient import (
+    ResilientEngine,
+    ServeInfo,
+    ShardFailure,
+    ShardFaultInjector,
+)
 from .straggler import StragglerWatchdog
+
+__all__ = [
+    "FaultTolerantRunner",
+    "ResilientEngine",
+    "RunStats",
+    "ServeInfo",
+    "ShardFailure",
+    "ShardFaultInjector",
+    "SimulatedFailure",
+    "StragglerWatchdog",
+]

@@ -51,6 +51,10 @@ class RunStats:
     wasted_steps: int = 0
     straggler_events: int = 0
 
+    def as_dict(self) -> dict:
+        """Plain-dict view so benches and serving loops log it uniformly."""
+        return dataclasses.asdict(self)
+
 
 class FaultTolerantRunner:
     def __init__(
@@ -109,6 +113,9 @@ class FaultTolerantRunner:
                 step = restored_step
                 print(f"[train] RESTART #{self.stats.restarts} from step {restored_step}")
         self.manager.wait()
-        self.manager.save(step, state)
-        self.manager.wait()
+        if self.manager.latest_step() != step:
+            # final checkpoint -- skipped when the in-loop save at
+            # ``step % save_every == 0`` already wrote this exact state
+            self.manager.save(step, state)
+            self.manager.wait()
         return state

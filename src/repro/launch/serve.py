@@ -28,6 +28,14 @@ and routes every cursor batch per shard: one device per shard under
 ``shard_map`` when the process has enough jax devices, a host-side loop of
 per-shard engines otherwise.  Results are identical to unsharded serving
 -- the merge is a pure scatter at the result boundary.
+
+``--replicas R`` places every list on R shards, and ``--faults`` /
+``--fault-prob`` inject shard deaths at the dispatch boundary
+(DESIGN.md §11): serving then runs through ``ResilientEngine`` -- retry
+with backoff, replica failover, degradation to live lists -- and reports
+availability, degraded fraction, and recovery times.  ``--recover``
+checkpoints the arena up front so DEAD shards restore from it and
+re-admit.
 """
 
 from __future__ import annotations
@@ -80,6 +88,73 @@ def _print_shard_layout(engine) -> None:
           f"~MB/shard {[round(b * per_blk / 1e6, 1) for b in blocks]}")
 
 
+def _make_resilient(args, engine):
+    """Wrap the engine for fault-injected serving, or None without
+    --faults/--fault-prob.  The checkpoint tempdir (with --recover) lives
+    for the process -- real deployments point CheckpointManager at
+    durable storage instead."""
+    if not args.faults and args.fault_prob == 0.0:
+        return None
+    if args.shards is None:
+        raise SystemExit("--faults/--fault-prob require --shards")
+    from repro.distributed.resilient import ResilientEngine, ShardFaultInjector
+
+    at = tuple(int(b) for b in args.faults.split(",")) if args.faults else ()
+    injector = ShardFaultInjector(
+        at_batches=at, probability=args.fault_prob, seed=args.seed,
+        shards=tuple(range(args.shards)),
+    )
+    manager = None
+    if args.recover:
+        import tempfile
+
+        from repro.checkpoint import CheckpointManager
+
+        manager = CheckpointManager(
+            tempfile.mkdtemp(prefix="arena-ckpt-"), async_save=False
+        )
+    res = ResilientEngine(engine, injector=injector, manager=manager)
+    if manager is not None:
+        res.checkpoint()
+    return res
+
+
+def serve_resilient(res, queries, batch: int, topk: int | None = None):
+    """Serve all queries through a ResilientEngine; returns (results,
+    latencies, n_degraded_queries)."""
+    results: list = []
+    lat: list[float] = []
+    degraded_q = 0
+    for i in range(0, len(queries), batch):
+        chunk = queries[i : i + batch]
+        t0 = time.perf_counter()
+        if topk is None:
+            out, info = res.intersect_batch(chunk)
+        else:
+            out, info = res.topk_batch(chunk, topk)
+        lat.append(time.perf_counter() - t0)
+        results.extend(out)
+        if info.degraded:
+            miss = set(info.missing_lists.tolist())
+            degraded_q += sum(
+                1 for q in chunk if any(int(t) in miss for t in q)
+            )
+    return results, lat, degraded_q
+
+
+def _print_fault_summary(res, n_queries: int, degraded_q: int) -> None:
+    stats = res.stats
+    avail = (n_queries - degraded_q) / max(n_queries, 1)
+    p99 = res.recovery_p99_s()
+    rec = f"{p99 * 1e3:.1f} ms" if p99 == p99 else "n/a"
+    print(f"[serve] faults: availability {avail:.4f} "
+          f"({n_queries - degraded_q}/{n_queries} exact, "
+          f"{degraded_q} degraded), failures {stats['failures']}, "
+          f"retries {stats['retries']}, failovers {stats['failovers']}, "
+          f"recoveries {stats['recoveries']} (p99 {rec})")
+    print(f"[serve] shard health: {res.health}")
+
+
 def serve_ranked(args, rng, corpus) -> None:
     """The --ranked endpoint: batched BM25 top-k over the freq arena."""
     from repro.ranked.bm25 import exhaustive_topk
@@ -100,17 +175,24 @@ def serve_ranked(args, rng, corpus) -> None:
         for q in make_queries(rng, args.n_lists, args.queries, args.arity)
     ]
     engine = TopKEngine(idx, backend=args.backend, shards=args.shards,
-                        resident=args.resident)
+                        resident=args.resident, replicas=args.replicas)
     _print_shard_layout(engine)
     engine.topk_batch(queries[: args.batch], args.topk)  # warm mirror + jit
+    resilient = _make_resilient(args, engine)
 
-    results: list = []
-    lat: list[float] = []
     t0 = time.perf_counter()
-    for i in range(0, len(queries), args.batch):
-        b0 = time.perf_counter()
-        results.extend(engine.topk_batch(queries[i : i + args.batch], args.topk))
-        lat.append(time.perf_counter() - b0)
+    if resilient is not None:
+        results, lat, degraded_q = serve_resilient(
+            resilient, queries, args.batch, topk=args.topk
+        )
+    else:
+        results, lat = [], []
+        for i in range(0, len(queries), args.batch):
+            b0 = time.perf_counter()
+            results.extend(
+                engine.topk_batch(queries[i : i + args.batch], args.topk)
+            )
+            lat.append(time.perf_counter() - b0)
     wall = time.perf_counter() - t0
     sizes = [len(queries[i : i + args.batch])
              for i in range(0, len(queries), args.batch)]
@@ -124,6 +206,9 @@ def serve_ranked(args, rng, corpus) -> None:
           f"p99 {_percentile(lat, 99)*1e3:.2f} ms  "
           f"(per-query p50 {_percentile(per_q, 50)*1e3:.3f} ms)")
     print(f"[serve] engine stats: {engine.stats}")
+    if resilient is not None:
+        _print_fault_summary(resilient, len(queries), degraded_q)
+        return  # degraded batches must not be verified against the oracle
 
     if args.compare_scalar:
         n_check = min(len(queries), 64)
@@ -168,6 +253,21 @@ def main() -> None:
                     help="list-hash-partition the arena into N shards "
                          "(DESIGN.md §6): shard_map over a device mesh "
                          "when possible, host-side shard loop otherwise")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="place every list on R shards (DESIGN.md §11); "
+                         "routing prefers the primary, replicas carry its "
+                         "lists bit-identically when it dies")
+    ap.add_argument("--faults", default=None,
+                    help="comma-separated batch indices at which a shard "
+                         "dies (e.g. '2,5'); serves through the "
+                         "ResilientEngine health state machine")
+    ap.add_argument("--fault-prob", type=float, default=0.0,
+                    help="per-batch shard-death probability (seeded by "
+                         "--seed), instead of/alongside --faults")
+    ap.add_argument("--recover", action="store_true",
+                    help="checkpoint the arena up front (OptVB-packed "
+                         "sidecars) and restore DEAD shards' sub-arenas "
+                         "from it, re-admitting them")
     ap.add_argument("--compare-scalar", action="store_true",
                     help="also time the per-query NextGEQ loop (or, with "
                          "--ranked, the exhaustive-scoring oracle) and "
@@ -206,13 +306,17 @@ def main() -> None:
         for q in make_queries(rng, args.n_lists, args.queries, args.arity)
     ]
     engine = QueryEngine(idx, backend=args.backend, fused=args.fused,
-                         shards=args.shards)
+                         shards=args.shards, replicas=args.replicas)
     _print_shard_layout(engine)
     # warm-up batch: triggers the one-time arena transcode + jit on device
     engine.intersect_batch(queries[: args.batch])
+    resilient = _make_resilient(args, engine)
 
     t0 = time.perf_counter()
-    results, lat = serve_batches(engine, queries, args.batch)
+    if resilient is not None:
+        results, lat, degraded_q = serve_resilient(resilient, queries, args.batch)
+    else:
+        results, lat = serve_batches(engine, queries, args.batch)
     wall = time.perf_counter() - t0
     n_results = sum(r.size for r in results)
     sizes = [len(queries[i : i + args.batch])
@@ -228,6 +332,9 @@ def main() -> None:
           f"p99 {_percentile(lat, 99)*1e3:.2f} ms  "
           f"(per-query p50 {_percentile(per_q, 50)*1e3:.3f} ms)")
     print(f"[serve] engine stats: {engine.stats}")
+    if resilient is not None:
+        _print_fault_summary(resilient, len(queries), degraded_q)
+        return  # degraded batches must not be verified against the oracle
 
     if args.compare_scalar:
         n_check = min(len(queries), 128)

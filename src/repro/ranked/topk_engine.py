@@ -118,11 +118,16 @@ class TopKEngine:
         unsharded.
     shard_mesh: "auto" | None | a Mesh with a "shard" axis, as in
         ``QueryEngine``.
+    replicas: copies of each list across shards (``core.shard``); routing
+        prefers the primary, so R > 1 is invisible until shards die and
+        their lists fail over -- bit-identically (pure-scatter merge).
+    fault_injector: optional ``ShardFaultInjector`` consulted at every
+        shard dispatch, normally wired by ``ResilientEngine``.
     """
 
     def __init__(self, index, backend: str = "auto", seed_blocks: int = 4,
                  resident: str = "auto", shards: int | None = None,
-                 shard_mesh="auto"):
+                 shard_mesh="auto", replicas: int = 1, fault_injector=None):
         self.index = index
         self.arena = index.arena
         if self.arena.ranked is None:
@@ -180,14 +185,22 @@ class TopKEngine:
         self._smap_pivot = None
         self._scache_rows = np.zeros(0, np.int64)  # sorted hot rows
         self._scache = np.zeros((0, BLOCK_VALS), np.float32)
+        self.fault_injector = fault_injector
         if shards is not None:
             from repro.core.shard import ShardedArena
 
             self.sharded = ShardedArena.build(
-                self.arena, int(shards), mesh=shard_mesh
+                self.arena, int(shards), mesh=shard_mesh,
+                replicas=int(replicas),
             )
             self._shard_fns = [None] * self.sharded.n_shards
             self._shard_pivot_fns = [None] * self.sharded.n_shards
+
+    def _check_shard(self, s: int) -> None:
+        """Host-loop shard-dispatch fault boundary (the shard_map
+        dispatchers and per-shard EngineCores carry their own check)."""
+        if self.fault_injector is not None:
+            self.fault_injector.check(s)
 
     def _lane_scores(self) -> np.ndarray:
         """The impact mirror: every lane scored ONCE through the chosen
@@ -505,8 +518,7 @@ class TopKEngine:
                 del params[(i, j)], rests[(i, j)]
                 continue  # no block of this term can reach theta
             if routed:
-                s = int(self.sharded.owner[t])
-                lt = int(self.sharded.local_list[t])
+                s, lt = self.sharded.route_one(t)
                 offs = pcs[s].offsets
                 c0, c1 = int(offs[lt]), int(offs[lt + 1])
                 shard_l.append(np.full(c1 - c0, s, np.int64))
@@ -551,6 +563,7 @@ class TopKEngine:
                     self._smap_pivot = ShardMapPivot(
                         sa, backend=self.backend, interpret=self.interpret,
                         max_bucket=self.MAX_BUCKET,
+                        injector=self.fault_injector,
                     )
                 kept, cnt, _, _ = self._smap_pivot(rows_o, qmins_o, cuts)
             else:
@@ -558,6 +571,7 @@ class TopKEngine:
                     sl = slice(int(cuts[s]), int(cuts[s + 1]))
                     if sl.start == sl.stop:
                         continue
+                    self._check_shard(s)
                     if self._shard_pivot_fns[s] is None:
                         self._shard_pivot_fns[s] = self._build_pivot_fn(
                             pcs[s]
@@ -742,8 +756,11 @@ class TopKEngine:
                 self._jax_fn, self.arena.stride, terms, docs
             )
         sa = self.sharded
-        owner = sa.owner[terms]
-        local = sa.local_list[terms]
+        owner, local, served = sa.route(terms)
+        if not served.all():
+            from repro.core.shard import ShardsUnavailable
+
+            raise ShardsUnavailable(np.unique(np.asarray(terms)[~served]))
         order = np.argsort(owner, kind="stable")
         cuts = np.searchsorted(owner[order], np.arange(sa.n_shards + 1))
         out = np.zeros(len(terms), np.float32)
@@ -754,6 +771,7 @@ class TopKEngine:
                 self._smap_fn = ShardMapBM25(
                     sa, backend=self.backend, interpret=self.interpret,
                     k1p1=float(self.k1p1), max_bucket=self.MAX_BUCKET,
+                    injector=self.fault_injector,
                 )
             out[order] = self._smap_fn(local[order], docs[order], cuts)
             return out
@@ -761,6 +779,7 @@ class TopKEngine:
             idx = order[cuts[s] : cuts[s + 1]]
             if len(idx) == 0:
                 continue
+            self._check_shard(s)
             if self._shard_fns[s] is None:
                 sub = sa.shards[s]
                 self._shard_fns[s] = self._build_jax_fn(sub, sub.ranked)

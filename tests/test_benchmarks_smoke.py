@@ -19,6 +19,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 from benchmarks import (  # noqa: E402
     bench_build_time,
     bench_competitors,
+    bench_faults,
     bench_fig1_distribution,
     bench_kernels,
     bench_nextgeq,
@@ -37,6 +38,7 @@ MODULES = {
     "bench_build_time": bench_build_time,
     "bench_queries": bench_queries,
     "bench_competitors": bench_competitors,
+    "bench_faults": bench_faults,
     "bench_nextgeq": bench_nextgeq,
     "bench_kernels": bench_kernels,
     "bench_ranked": bench_ranked,

@@ -2,6 +2,7 @@
 fault-tolerant runner (restart determinism) + straggler watchdog."""
 
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -88,6 +89,95 @@ def test_runner_restarts_from_step0_checkpoint(tmp_path):
     assert int(out) == 10
     assert runner.stats.restarts == 1
     assert runner.stats.wasted_steps == 3
+
+
+def test_restore_falls_back_past_corrupt_latest(tmp_path, capsys):
+    """A corrupt/truncated newest checkpoint must not brick recovery: the
+    restore skips it with a warning and lands on the newest INTACT step."""
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=False)
+    tree = {"w": np.arange(64, dtype=np.float32), "n": np.int64(0)}
+    for step in (1, 2, 3):
+        mgr.save(step, {"w": tree["w"] + step, "n": np.int64(step)})
+    # truncate step 3's arrays, mangle step 2's manifest JSON
+    npz = tmp_path / "step_0000000003" / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[:25])
+    (tmp_path / "step_0000000002" / "manifest.json").write_text("{not json")
+    restored, step = mgr.restore(tree)
+    assert step == 1
+    assert int(restored["n"]) == 1
+    assert np.array_equal(np.asarray(restored["w"]), tree["w"] + 1)
+    err = capsys.readouterr().err
+    assert err.count("unreadable") == 2  # one warning per skipped step
+
+
+def test_restore_explicit_step_does_not_fall_back(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=False)
+    tree = {"w": np.ones(8)}
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    npz = tmp_path / "step_0000000002" / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[:25])
+    with pytest.raises(Exception):
+        mgr.restore(tree, step=2)  # explicit step: surface the corruption
+
+
+def test_restore_raises_when_nothing_intact(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    tree = {"w": np.ones(4)}
+    mgr.save(5, tree)
+    (tmp_path / "step_0000000005" / "arrays.npz").write_bytes(b"junk")
+    with pytest.raises(FileNotFoundError, match="no intact"):
+        mgr.restore(tree)
+
+
+def test_runner_final_save_dedupes(tmp_path):
+    """When ``n_steps`` lands on a periodic save the final save is skipped
+    (same state, same step -- a second write would just burn I/O)."""
+    saves = []
+
+    class CountingManager(CheckpointManager):
+        def save(self, step, tree):
+            saves.append(step)
+            super().save(step, tree)
+
+    def step(state, batch):
+        return state + 1, {"loss": jnp.float32(0)}
+
+    mgr = CountingManager(tmp_path, async_save=False)
+    runner = FaultTolerantRunner(step, mgr, save_every=5)
+    out = runner.run(jnp.int32(0), lambda s: None, 10)
+    assert int(out) == 10
+    assert saves == [0, 5, 10]  # no duplicate final save at step 10
+    assert saves.count(10) == 1
+
+
+def test_run_stats_as_dict(tmp_path):
+    def step(state, batch):
+        return state + 1, {"loss": jnp.float32(0)}
+
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    runner = FaultTolerantRunner(step, mgr, save_every=4)
+    runner.run(jnp.int32(0), lambda s: None, 6,
+               failure=SimulatedFailure(at_steps=(5,)))
+    d = runner.stats.as_dict()
+    assert d == {
+        "steps_completed": 7,  # 6 forward + 1 replayed after the crash
+        "restarts": 1,
+        "wasted_steps": 1,
+        "straggler_events": d["straggler_events"],
+    }
+    assert isinstance(d["straggler_events"], int)
+
+
+def test_simulated_failure_probability_is_seeded():
+    def fires(seed):
+        f = SimulatedFailure(probability=0.3, seed=seed)
+        return [s for s in range(200) if f.should_fire(s)]
+
+    a, b = fires(3), fires(3)
+    assert a == b  # same seed -> same crash schedule (replayable runs)
+    assert 20 < len(a) < 100  # actually probabilistic at p=0.3
+    assert fires(4) != a
 
 
 def test_straggler_watchdog():

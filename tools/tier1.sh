@@ -41,11 +41,12 @@ STATUS[pytest]=FAIL
 # ref backend at ISSUE-5 seeding time; 79.2% after the ISSUE-6 analyzer
 # landed with its tests) minus a safety margin for the stdlib-tracer vs
 # pytest-cov methodology gap; raise TIER1_COV_FLOOR as coverage grows,
-# never lower it (71 -> 74 in ISSUE-6).  Skipped gracefully where
-# pytest-cov is absent (the dev container).
+# never lower it (71 -> 74 in ISSUE-6; 74 -> 76 in ISSUE-7 after the
+# resilience suite landed with measure_cov at 79.4%).  Skipped
+# gracefully where pytest-cov is absent (the dev container).
 if [ "${TIER1_COV:-0}" = "1" ] && python -c "import pytest_cov" 2>/dev/null; then
   python -m pytest -x -q --cov=repro --cov-report=term \
-    --cov-fail-under="${TIER1_COV_FLOOR:-74}"
+    --cov-fail-under="${TIER1_COV_FLOOR:-76}"
 else
   if [ "${TIER1_COV:-0}" = "1" ]; then
     echo "== tier1: TIER1_COV=1 but pytest-cov missing; running uncovered =="
