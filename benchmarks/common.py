@@ -12,6 +12,7 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.data.postings import make_posting_list  # noqa: E402
+from repro.obs.metrics import Histogram  # noqa: E402
 
 # every emit() lands here; benchmarks.run snapshots it per module to write
 # BENCH_*.json files tracking the perf trajectory across PRs
@@ -114,11 +115,10 @@ def latency_fields(samples: list[float], per: int = 1) -> dict:
     ``per`` = operations per timed call (e.g. queries per batch), so
     ops_per_sec is per operation while percentiles describe the CALL.
     """
-    xs = np.asarray(samples, dtype=np.float64)
-    best = float(xs.min())
+    best = float(min(samples))
     return {
         "ops_per_sec": per / best if best > 0 else 0.0,
-        "p50_us": float(np.percentile(xs, 50)) * 1e6,
-        "p99_us": float(np.percentile(xs, 99)) * 1e6,
+        "p50_us": Histogram.percentile_of(samples, 50) * 1e6,
+        "p99_us": Histogram.percentile_of(samples, 99) * 1e6,
         "calls": len(samples),
     }

@@ -22,6 +22,8 @@ import subprocess
 import sys
 import time
 
+from repro import obs
+
 from . import (
     bench_build_time,
     bench_competitors,
@@ -29,6 +31,7 @@ from . import (
     bench_fig1_distribution,
     bench_kernels,
     bench_nextgeq,
+    bench_obs,
     bench_partition_space,
     bench_queries,
     bench_ranked,
@@ -49,6 +52,7 @@ MODULES = {
     "kernels": bench_kernels,
     "ranked": bench_ranked,
     "roofline": roofline,
+    "obs": bench_obs,
 }
 
 # history entries kept per BENCH_*.json: enough trajectory for the
@@ -62,6 +66,7 @@ JSON_GROUPS = {
     "faults": "faults",
     "kernels": "kernels",
     "ranked": "ranked",
+    "obs": "obs",
 }
 
 
@@ -96,11 +101,19 @@ def main() -> None:
             groups_hit = {JSON_GROUPS.get(m) for m in only} - {None}
             only |= {m for m, g in JSON_GROUPS.items() if g in groups_hit}
     print("name,us_per_call,derived")
+    # the bench run is the one place the obs layer is always armed: each
+    # history entry below carries the counter DELTAS its module produced,
+    # so a perf regression in BENCH_*.json comes with its internal context
+    # (cache hit ratios, rescore rounds, shard dispatch mix, ...)
+    obs.enable()
+    obs.reset()
     groups: dict[str, list[dict]] = {}
+    obs_by_group: dict[str, dict[str, dict]] = {}
     for name, mod in MODULES.items():
         if only is not None and name not in only:
             continue
         reset_results()
+        before = obs.snapshot(events=False)
         t0 = time.time()
         try:
             mod.run(quick=not args.full, smoke=args.smoke)
@@ -113,6 +126,9 @@ def main() -> None:
             groups.setdefault(group, []).extend(
                 {**rec, "module": name} for rec in RESULTS
             )
+            obs_by_group.setdefault(group, {})[name] = obs.diff(
+                obs.snapshot(events=False), before
+            )
     if args.json:
         for group, records in groups.items():
             path = f"BENCH_{group}.json"
@@ -123,6 +139,7 @@ def main() -> None:
                 ).isoformat(timespec="seconds"),
                 "profile": profile,
                 "records": records,
+                "obs": obs_by_group.get(group, {}),
             }
             history = _load_history(path)
             history.append(entry)
@@ -143,6 +160,11 @@ def main() -> None:
                 f"# appended to {path} ({len(records)} records, "
                 f"{len(history)} history entries)", file=sys.stderr,
             )
+        # NOT BENCH_*.json: tools/check_bench.py globs that pattern and
+        # would choke on the snapshot schema.  CI uploads this next to
+        # the bench artifacts (tier1.yml).
+        obs.write_snapshot("OBS_snapshot.json", events=False)
+        print("# wrote OBS_snapshot.json", file=sys.stderr)
 
 
 def _git_sha() -> str:

@@ -21,6 +21,13 @@ Rules (DESIGN.md §10):
   ``default_backend()`` (``kernels.vbyte_decode.ops``), the one reader of
   ``REPRO_BACKEND`` / ``jax.default_backend()``.  Any other module reading
   either re-introduces the per-module backend drift PR 4 removed.
+
+* ``obs-timers`` -- raw wall-clock reads (``time.perf_counter()``,
+  ``time.time()``, ``time.monotonic()``) in ``src/repro/`` route through
+  the observability layer instead (``obs.timer`` / ``obs.span`` /
+  ``obs.now``, DESIGN.md §12): ad-hoc timing scraps can neither be
+  exported nor asserted on.  ``repro/obs/`` itself (the clock's home) is
+  exempt, as are non-timing uses like ``time.sleep``/``time.time_ns``.
 """
 
 from __future__ import annotations
@@ -77,6 +84,20 @@ def _dict_keys(node: ast.Dict) -> set[str]:
     return {k.value for k in node.keys if isinstance(k, ast.Constant)}
 
 
+_RAW_CLOCKS = ("perf_counter", "time", "monotonic")
+
+
+def _is_raw_clock_call(node: ast.AST) -> bool:
+    """time.perf_counter() / time.time() / time.monotonic() calls."""
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr in _RAW_CLOCKS
+        and isinstance(node.func.value, ast.Name)
+        and node.func.value.id == "time"
+    )
+
+
 def lint_source(src: str, rel_path: str) -> list[Finding]:
     """Findings for one module, addressed by its repo-relative path."""
     rel = rel_path.replace("\\", "/")
@@ -94,7 +115,15 @@ def lint_source(src: str, rel_path: str) -> list[Finding]:
     tree = ast.parse(src, filename=rel)
     in_ranked = rel.startswith("src/repro/ranked/")
     in_bench = rel.startswith("benchmarks/")
+    in_repro = rel.startswith("src/repro/") and not rel.startswith("src/repro/obs/")
     for node in ast.walk(tree):
+        if in_repro and _is_raw_clock_call(node):
+            add(
+                "obs-timers",
+                node,
+                "raw wall-clock timing in src/repro/; route through "
+                "repro.obs (obs.timer / obs.span / obs.now) instead",
+            )
         if in_ranked and isinstance(node, ast.BinOp):
             if _is_jnp_float32_call(node.left) or _is_jnp_float32_call(node.right):
                 add(

@@ -28,6 +28,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.core import build_partitioned_index
 from repro.core.costs import gaps_from_sorted
 from repro.core.index import PartitionedIndex
@@ -108,34 +109,41 @@ class CheckpointManager:
             self._thread = None
 
     def _save_sync(self, step: int, host_tree) -> None:
-        leaves, treedef = jax.tree_util.tree_flatten(host_tree)
-        arrays = {}
-        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
-        for i, leaf in enumerate(leaves):
-            leaf = np.asarray(leaf)
-            entry = {"i": i, "dtype": str(leaf.dtype), "shape": list(leaf.shape)}
-            if leaf.dtype.kind in "iu" and _is_strictly_increasing(leaf):
-                packed = pack_sorted_int_array(leaf)
-                entry["codec"] = "optvb"
-                for k, v in packed.items():
-                    if isinstance(v, np.ndarray):
-                        arrays[f"l{i}_{k}"] = v
-                    else:
-                        entry[k] = v
-            else:
-                entry["codec"] = "raw"
-                arrays[f"l{i}"] = leaf
-            manifest["leaves"].append(entry)
+        with obs.timer("checkpoint_save_ms"):
+            leaves, treedef = jax.tree_util.tree_flatten(host_tree)
+            arrays = {}
+            manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+            for i, leaf in enumerate(leaves):
+                leaf = np.asarray(leaf)
+                entry = {"i": i, "dtype": str(leaf.dtype), "shape": list(leaf.shape)}
+                if leaf.dtype.kind in "iu" and _is_strictly_increasing(leaf):
+                    packed = pack_sorted_int_array(leaf)
+                    entry["codec"] = "optvb"
+                    for k, v in packed.items():
+                        if isinstance(v, np.ndarray):
+                            arrays[f"l{i}_{k}"] = v
+                        else:
+                            entry[k] = v
+                else:
+                    entry["codec"] = "raw"
+                    arrays[f"l{i}"] = leaf
+                manifest["leaves"].append(entry)
 
-        tmp = self.dir / f".tmp-{step}-{time.time_ns()}"
-        tmp.mkdir()
-        np.savez(tmp / "arrays.npz", **arrays)
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
-        final = self.dir / f"step_{step:010d}"
-        if final.exists():
-            shutil.rmtree(final)
-        tmp.rename(final)  # atomic publish
-        self._gc()
+            tmp = self.dir / f".tmp-{step}-{time.time_ns()}"
+            tmp.mkdir()
+            np.savez(tmp / "arrays.npz", **arrays)
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            final = self.dir / f"step_{step:010d}"
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)  # atomic publish
+            self._gc()
+        if obs.enabled():
+            obs.count(
+                "checkpoint_saved_bytes",
+                sum(a.nbytes for a in arrays.values()),
+            )
+            obs.count("checkpoint_saves")
 
     def _gc(self) -> None:
         ckpts = sorted(self.dir.glob("step_*"))
@@ -191,23 +199,29 @@ class CheckpointManager:
 
     def _restore_step(self, target_tree, step: int, shardings=None):
         path = self.dir / f"step_{step:010d}"
-        manifest = json.loads((path / "manifest.json").read_text())
-        data = np.load(path / "arrays.npz")
-        leaves_t, treedef = jax.tree_util.tree_flatten(target_tree)
-        out = []
-        for entry, tgt in zip(manifest["leaves"], leaves_t):
-            i = entry["i"]
-            if entry["codec"] == "optvb":
-                packed = {k: data[f"l{i}_{k}"] for k in
-                          ("endpoints", "sizes", "tags", "offsets", "payload",
-                           "list_part_offsets", "list_sizes")}
-                arr = unpack_sorted_int_array(packed).astype(entry["dtype"])
-            else:
-                arr = data[f"l{i}"]
-            out.append(arr.reshape(entry["shape"]))
-        tree = jax.tree_util.tree_unflatten(treedef, out)
-        if shardings is not None:
-            tree = jax.tree_util.tree_map(
-                lambda a, s: jax.device_put(a, s), tree, shardings
-            )
+        nbytes = 0
+        with obs.timer("checkpoint_restore_ms"):
+            manifest = json.loads((path / "manifest.json").read_text())
+            data = np.load(path / "arrays.npz")
+            leaves_t, treedef = jax.tree_util.tree_flatten(target_tree)
+            out = []
+            for entry, tgt in zip(manifest["leaves"], leaves_t):
+                i = entry["i"]
+                if entry["codec"] == "optvb":
+                    packed = {k: data[f"l{i}_{k}"] for k in
+                              ("endpoints", "sizes", "tags", "offsets", "payload",
+                               "list_part_offsets", "list_sizes")}
+                    arr = unpack_sorted_int_array(packed).astype(entry["dtype"])
+                else:
+                    arr = data[f"l{i}"]
+                nbytes += arr.nbytes
+                out.append(arr.reshape(entry["shape"]))
+            tree = jax.tree_util.tree_unflatten(treedef, out)
+            if shardings is not None:
+                tree = jax.tree_util.tree_map(
+                    lambda a, s: jax.device_put(a, s), tree, shardings
+                )
+        if obs.enabled():
+            obs.count("checkpoint_restored_bytes", nbytes)
+            obs.count("checkpoint_restores")
         return tree, step

@@ -44,6 +44,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro import obs
 from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
 from repro.kernels.vbyte_decode.ops import (
     decode_block_rows,
@@ -314,7 +315,10 @@ class EngineCore:
         self.cache_bytes = None if cache_bytes is None else int(cache_bytes)
         self.mirror_backend = mirror_backend or self.backend
         self.lane_scores_fn = lane_scores_fn
-        self.stats = stats if stats is not None else {}
+        # stats stays a plain-dict interface for callers/tests; the
+        # CounterDict default mirrors increments onto obs counters when the
+        # observability layer is armed (compat shim, DESIGN.md §12)
+        self.stats = stats if stats is not None else obs.CounterDict("engine")
         for key in ("decoded_rows", "kernel_calls", "cache_hits", "evictions"):
             self.stats.setdefault(key, 0)
         self.cache: OrderedDict = OrderedDict()
@@ -371,12 +375,13 @@ class EngineCore:
             ):
                 self.flat_ok = False  # budget refused: per-call decode
                 return False
-            gaps = decode_block_rows(
-                a.lens[: a.n_blocks],
-                a.data[: a.n_blocks],
-                backend=self.mirror_backend,
-                interpret=self.interpret,
-            )
+            with obs.span("flat_init", backend=self.mirror_backend):
+                gaps = decode_block_rows(
+                    a.lens[: a.n_blocks],
+                    a.data[: a.n_blocks],
+                    backend=self.mirror_backend,
+                    interpret=self.interpret,
+                )
             self.stats["kernel_calls"] += 1
             self.stats["decoded_rows"] += a.n_blocks
             vals = a.block_base[:, None] + np.cumsum(gaps + 1, axis=1)
@@ -578,7 +583,11 @@ class EngineCore:
         """
         if self.injector is not None and self.shard_id is not None:
             self.injector.check(self.shard_id)
+        if self.shard_id is not None:
+            obs.count("shard_dispatch", shard=str(self.shard_id), path="host_loop")
         if self.use_device:
-            value, rank = self.search_jax(terms, probes)
+            with obs.span("decode_search", backend=self.backend):
+                value, rank = self.search_jax(terms, probes)
             return value, rank, value < 0
-        return self.search_np(terms, probes, with_rank, trusted)
+        with obs.span("decode_search", backend="numpy"):
+            return self.search_np(terms, probes, with_rank, trusted)

@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.core.engine_core import EngineCore, group_cursors
 from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
 from repro.kernels.vbyte_decode.ops import decode_block_rows
@@ -139,16 +140,22 @@ class QueryEngine:
         self.fused = bool(fused)
         self.group = bool(group)
         self.arena = index.arena
-        self.stats = {
-            "decoded_parts": 0,
-            "decoded_rows": 0,
-            "cache_hits": 0,
-            "kernel_calls": 0,
-            "evictions": 0,
-            "fused_batches": 0,
-            "grouped_cursors": 0,
-            "sharded_batches": 0,
-        }
+        # CounterDict: plain-dict reads for callers/tests, and every numeric
+        # increment mirrors onto an obs counter when the layer is armed
+        self.stats = obs.CounterDict(
+            "engine",
+            {
+                "decoded_parts": 0,
+                "decoded_rows": 0,
+                "cache_hits": 0,
+                "kernel_calls": 0,
+                "evictions": 0,
+                "fused_batches": 0,
+                "grouped_cursors": 0,
+                "sharded_batches": 0,
+            },
+            engine="query",
+        )
         self.core = EngineCore(
             self.arena, backend=backend, cache_parts=cache_parts,
             cache_bytes=cache_bytes, stats=self.stats,
@@ -395,11 +402,12 @@ class QueryEngine:
     # ------------------------------------------------------------------
     def locate(self, terms: np.ndarray, probes: np.ndarray) -> np.ndarray:
         """Partition holding NextGEQ(term, probe) per pair; -1 = past end."""
-        terms = np.asarray(terms, dtype=np.int64)
-        probes = np.clip(np.asarray(probes, dtype=np.int64), 0, self.stride - 1)
-        p = np.searchsorted(self._keys, probes + terms * self.stride, side="left")
-        past = p >= self.index.list_part_offsets[terms + 1]
-        return np.where(past, -1, p)
+        with obs.span("locate", path="partition"):
+            terms = np.asarray(terms, dtype=np.int64)
+            probes = np.clip(np.asarray(probes, dtype=np.int64), 0, self.stride - 1)
+            p = np.searchsorted(self._keys, probes + terms * self.stride, side="left")
+            past = p >= self.index.list_part_offsets[terms + 1]
+            return np.where(past, -1, p)
 
     def _resolve(self, parts: np.ndarray, probes: np.ndarray):
         """(values, found_exact) of NextGEQ inside already-located partitions.
@@ -497,29 +505,32 @@ class QueryEngine:
         order = [sorted(map(int, q), key=lambda t: int(sizes[t])) for q in queries]
         empty = np.zeros(0, np.int64)
         cand_chunks, qid_chunks = [], []
-        for i, o in enumerate(order):
-            if not o:
-                continue
-            c = self.decode_list(o[0])
-            cand_chunks.append(c)
-            qid_chunks.append(np.full(len(c), i, np.int64))
+        with obs.span("gather", phase="seed_candidates"):
+            for i, o in enumerate(order):
+                if not o:
+                    continue
+                c = self.decode_list(o[0])
+                cand_chunks.append(c)
+                qid_chunks.append(np.full(len(c), i, np.int64))
         cand = np.concatenate(cand_chunks) if cand_chunks else empty
         qid = np.concatenate(qid_chunks) if qid_chunks else empty
         max_arity = max((len(o) for o in order), default=0)
-        for layer in range(1, max_arity):
-            term_of_q = np.asarray(
-                [o[layer] if len(o) > layer else -1 for o in order], dtype=np.int64
-            )
-            t = term_of_q[qid]
-            sel = t >= 0
-            if not sel.any():
-                continue
-            if sel.all():
-                keep = self._member_in(t, cand)
-            else:
-                keep = np.ones(len(cand), bool)
-                keep[sel] = self._member_in(t[sel], cand[sel])
-            cand, qid = cand[keep], qid[keep]
+        with obs.span("member_filter"):
+            for layer in range(1, max_arity):
+                term_of_q = np.asarray(
+                    [o[layer] if len(o) > layer else -1 for o in order],
+                    dtype=np.int64,
+                )
+                t = term_of_q[qid]
+                sel = t >= 0
+                if not sel.any():
+                    continue
+                if sel.all():
+                    keep = self._member_in(t, cand)
+                else:
+                    keep = np.ones(len(cand), bool)
+                    keep[sel] = self._member_in(t[sel], cand[sel])
+                cand, qid = cand[keep], qid[keep]
         # qid stays sorted (boolean masking is stable) -> split by run
         cuts = np.searchsorted(qid, np.arange(nq + 1))
         return [cand[cuts[i] : cuts[i + 1]] for i in range(nq)]

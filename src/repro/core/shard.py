@@ -56,6 +56,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro import obs
 from repro.core.arena import DeviceArena, RankedSidecar
 from repro.kernels.blockmax_pivot.kernel import QMIN_NONE
 from repro.kernels.vbyte_decode.kernel import BLOCK_BYTES, BLOCK_VALS
@@ -572,6 +573,12 @@ class _ShardMapDispatch:
         counts = np.diff(cuts)
         if self.injector is not None:
             self.injector.check_shards(np.flatnonzero(counts > 0))
+        if obs.enabled():
+            kind = type(self).__name__
+            for s in np.flatnonzero(counts > 0):
+                obs.count(
+                    "shard_dispatch", shard=str(int(s)), path="shard_map", kind=kind
+                )
         mb = self.max_bucket
         if mb is None or len(counts) == 0 or int(counts.max()) <= mb:
             return self._dispatch(local_terms, probes, cuts)

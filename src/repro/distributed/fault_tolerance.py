@@ -18,9 +18,9 @@ straggler watchdog and keeps restart statistics.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 
 from .straggler import StragglerWatchdog
@@ -91,9 +91,9 @@ class FaultTolerantRunner:
                 while step < n_steps:
                     if failure is not None and failure.should_fire(step):
                         raise failure
-                    t0 = time.perf_counter()
-                    state, metrics = self.step_fn(state, batches(step))
-                    dt = time.perf_counter() - t0
+                    with obs.timer("train_step_ms") as t:
+                        state, metrics = self.step_fn(state, batches(step))
+                    dt = t.elapsed_s
                     if self.watchdog.record(step, dt):
                         self.stats.straggler_events += 1
                     if log_every and step % log_every == 0:

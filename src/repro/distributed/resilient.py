@@ -44,6 +44,8 @@ import time
 
 import numpy as np
 
+from repro import obs
+
 HEALTHY = "HEALTHY"
 SUSPECT = "SUSPECT"
 DEAD = "DEAD"
@@ -178,16 +180,21 @@ class ResilientEngine:
         S = self.sa.n_shards
         self.health = [HEALTHY] * S
         self.failures = np.zeros(S, np.int64)
-        self.stats = {
-            "batches": 0,
-            "failures": 0,
-            "retries": 0,
-            "failovers": 0,
-            "degraded_batches": 0,
-            "dead_events": 0,
-            "recoveries": 0,
-            "recovery_s": [],
-        }
+        # CounterDict mirrors the numeric counters onto obs when armed;
+        # the raw recovery_s list passes through untouched
+        self.stats = obs.CounterDict(
+            "resilient",
+            {
+                "batches": 0,
+                "failures": 0,
+                "retries": 0,
+                "failovers": 0,
+                "degraded_batches": 0,
+                "dead_events": 0,
+                "recoveries": 0,
+                "recovery_s": [],
+            },
+        )
         self._ckpt_step: int | None = None
         self._death_t: dict[int, float] = {}
         self._ready: dict[int, object] = {}
@@ -221,13 +228,25 @@ class ResilientEngine:
         save_arena(self.manager, self.sa.arena, step)
         self._ckpt_step = step
 
+    def _set_health(self, s: int, new: str) -> None:
+        """Single choke point for health transitions: mutates the state
+        AND emits the transition as an obs counter + trace event, so the
+        HEALTHY -> SUSPECT -> DEAD -> RECOVERING -> HEALTHY trajectory is
+        reconstructable from the registry snapshot alone."""
+        old = self.health[s]
+        if old == new:
+            return
+        self.health[s] = new
+        obs.count("resilient_health_transitions", shard=str(s), src=old, dst=new)
+        obs.event("health_transition", shard=s, src=old, dst=new)
+
     def _mark_dead(self, s: int) -> None:
         if self.health[s] in (DEAD, RECOVERING):
             return
-        self.health[s] = DEAD
+        self._set_health(s, DEAD)
         self.stats["dead_events"] += 1
         self.sa.dead[s] = True
-        self._death_t[s] = time.perf_counter()
+        self._death_t[s] = obs.now()
         self._evict(s)
         if self.manager is not None:
             self._start_recovery(s)
@@ -250,7 +269,7 @@ class ResilientEngine:
     def _start_recovery(self, s: int) -> None:
         from repro.core.arena_ckpt import restore_shard
 
-        self.health[s] = RECOVERING
+        self._set_health(s, RECOVERING)
 
         def work():
             sub, _ = restore_shard(
@@ -296,12 +315,14 @@ class ResilientEngine:
             # TopKEngine's per-shard fns were evicted to None and rebuild
             # lazily from sa.shards[s] (now the restored slice) on dispatch
             sa.dead[s] = False
-            self.health[s] = HEALTHY
+            self._set_health(s, HEALTHY)
             self.failures[s] = 0
             if self.injector is not None:
                 self.injector.revive(s)
             self.stats["recoveries"] += 1
-            self.stats["recovery_s"].append(time.perf_counter() - self._death_t.pop(s))
+            dt = obs.now() - self._death_t.pop(s)
+            self.stats["recovery_s"].append(dt)
+            obs.observe("resilient_recovery_ms", dt * 1e3, shard=str(s))
 
     def wait_recovered(self, timeout_s: float = 30.0) -> None:
         """Block until in-flight background restores finish (tests/drain)."""
@@ -326,14 +347,14 @@ class ResilientEngine:
         self.stats["failures"] += 1
         self.failures[s] += 1
         if self.health[s] == HEALTHY:
-            self.health[s] = SUSPECT
+            self._set_health(s, SUSPECT)
 
     def _note_success(self) -> None:
         for s in range(self.sa.n_shards):
             if self.health[s] == SUSPECT and (
                 self.injector is None or s not in self.injector.dead
             ):
-                self.health[s] = HEALTHY
+                self._set_health(s, HEALTHY)
                 self.failures[s] = 0
 
     def _serve(self, attempt):
@@ -345,7 +366,7 @@ class ResilientEngine:
             self.injector.begin_batch()
         self._admit_recovered()
         self.stats["batches"] += 1
-        t0 = time.perf_counter()
+        t0 = obs.now()
         retries = 0
         failed: list[int] = []
         while True:
@@ -356,7 +377,7 @@ class ResilientEngine:
                 s = e.shard
                 failed.append(s)
                 self._note_failure(s)
-                expired = time.perf_counter() - t0 >= self.deadline_s
+                expired = obs.now() - t0 >= self.deadline_s
                 if (
                     self.health[s] == SUSPECT
                     and self.failures[s] < self.dead_after
@@ -381,8 +402,11 @@ class ResilientEngine:
             )
             if info.degraded:
                 self.stats["degraded_batches"] += 1
+                obs.count("resilient_degraded_answers", len(info.missing_lists))
             elif failed:
                 self.stats["failovers"] += 1
+                # failover latency: fault detection through served answer
+                obs.observe("resilient_failover_ms", (obs.now() - t0) * 1e3)
             return result, info
 
     def _missing(self) -> np.ndarray:
@@ -459,7 +483,7 @@ class ResilientEngine:
         times = self.stats["recovery_s"]
         if not times:
             return float("nan")
-        return float(np.percentile(np.asarray(times), 99))
+        return obs.Histogram.percentile_of(times, 99)
 
     def health_summary(self) -> dict:
         return {

@@ -20,11 +20,11 @@ the parsed collective schedule (EXPERIMENTS.md section Dry-run reads these).
 import argparse
 import json
 import pathlib
-import time
 import traceback
 
 import jax
 
+from repro import obs
 from repro.configs import all_arch_ids, get_arch
 from repro.launch.analysis import roofline_terms, summarize_compiled
 from repro.launch.cells import build_cell
@@ -46,7 +46,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_name: str, out_dir: pathlib.Pat
 
     mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
     n_dev = mesh.devices.size
-    t0 = time.time()
+    t0 = obs.now()
     try:
         cell = build_cell(bundle, shape, mesh, mesh_name)
         with jax.set_mesh(mesh):
@@ -56,9 +56,9 @@ def run_cell(arch_id: str, shape_name: str, mesh_name: str, out_dir: pathlib.Pat
                 out_shardings=cell.out_shardings,
             )
             lowered = jitted.lower(*cell.args)
-            t_lower = time.time() - t0
+            t_lower = obs.now() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = obs.now() - t0 - t_lower
             summary = summarize_compiled(lowered, compiled, n_dev)
             mem = compiled.memory_analysis()
             print(mem)

@@ -41,17 +41,25 @@ re-admit.
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import build_partitioned_index, build_unpartitioned_index
 from repro.core.query_engine import QueryEngine
 from repro.data.postings import make_corpus, make_freqs, make_queries
 
+# the one shared percentile implementation (DESIGN.md §12) -- formerly a
+# local helper here plus per-bench copies
+_percentile = obs.Histogram.percentile_of
 
-def _percentile(xs: list[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+def _latency_line(lat: list[float], per_q: list[float]) -> str:
+    return (f"p50 {_percentile(lat, 50)*1e3:.2f} ms  "
+            f"p90 {_percentile(lat, 90)*1e3:.2f} ms  "
+            f"p99 {_percentile(lat, 99)*1e3:.2f} ms  "
+            f"p99.9 {_percentile(lat, 99.9)*1e3:.2f} ms  "
+            f"(per-query p50 {_percentile(per_q, 50)*1e3:.3f} ms)")
 
 
 def serve_batches(
@@ -63,9 +71,9 @@ def serve_batches(
     latencies: list[float] = []
     for i in range(0, len(queries), batch):
         chunk = queries[i : i + batch]
-        t0 = time.perf_counter()
-        results.extend(engine.intersect_batch(chunk))
-        latencies.append(time.perf_counter() - t0)
+        with obs.timer("serve_batch_ms", path="boolean_and") as t:
+            results.extend(engine.intersect_batch(chunk))
+        latencies.append(t.elapsed_s)
     return results, latencies
 
 
@@ -127,12 +135,12 @@ def serve_resilient(res, queries, batch: int, topk: int | None = None):
     degraded_q = 0
     for i in range(0, len(queries), batch):
         chunk = queries[i : i + batch]
-        t0 = time.perf_counter()
-        if topk is None:
-            out, info = res.intersect_batch(chunk)
-        else:
-            out, info = res.topk_batch(chunk, topk)
-        lat.append(time.perf_counter() - t0)
+        with obs.timer("serve_batch_ms", path="resilient") as t:
+            if topk is None:
+                out, info = res.intersect_batch(chunk)
+            else:
+                out, info = res.topk_batch(chunk, topk)
+        lat.append(t.elapsed_s)
         results.extend(out)
         if info.degraded:
             miss = set(info.missing_lists.tolist())
@@ -161,10 +169,10 @@ def serve_ranked(args, rng, corpus) -> None:
     from repro.ranked.topk_engine import TopKEngine
 
     freqs = make_freqs(rng, corpus)
-    t0 = time.perf_counter()
+    t0 = obs.now()
     idx = build_partitioned_index(corpus, "optimal", freqs=freqs)
     arena = idx.arena  # includes the freq transcode + block-max sidecar
-    t_build = time.perf_counter() - t0
+    t_build = obs.now() - t0
     print(f"[serve] ranked index: {idx.bits_per_int():.2f} bpi docIDs + "
           f"{idx.freq_payload.size * 8 / max(int(idx.list_sizes.sum()), 1):.2f} "
           f"bpi freqs; arena {arena.nbytes() / 1e6:.1f} MB "
@@ -180,7 +188,7 @@ def serve_ranked(args, rng, corpus) -> None:
     engine.topk_batch(queries[: args.batch], args.topk)  # warm mirror + jit
     resilient = _make_resilient(args, engine)
 
-    t0 = time.perf_counter()
+    t0 = obs.now()
     if resilient is not None:
         results, lat, degraded_q = serve_resilient(
             resilient, queries, args.batch, topk=args.topk
@@ -188,12 +196,12 @@ def serve_ranked(args, rng, corpus) -> None:
     else:
         results, lat = [], []
         for i in range(0, len(queries), args.batch):
-            b0 = time.perf_counter()
-            results.extend(
-                engine.topk_batch(queries[i : i + args.batch], args.topk)
-            )
-            lat.append(time.perf_counter() - b0)
-    wall = time.perf_counter() - t0
+            with obs.timer("serve_batch_ms", path="ranked") as bt:
+                results.extend(
+                    engine.topk_batch(queries[i : i + args.batch], args.topk)
+                )
+            lat.append(bt.elapsed_s)
+    wall = obs.now() - t0
     sizes = [len(queries[i : i + args.batch])
              for i in range(0, len(queries), args.batch)]
     per_q = [l / max(s, 1) for l, s in zip(lat, sizes)]
@@ -201,10 +209,7 @@ def serve_ranked(args, rng, corpus) -> None:
           f"{engine.resident}, batch={args.batch}): "
           f"{len(queries)/wall:,.0f} q/s, "
           f"{wall/len(queries)*1e3:.3f} ms/query avg")
-    print(f"[serve] batch latency: p50 {_percentile(lat, 50)*1e3:.2f} ms  "
-          f"p90 {_percentile(lat, 90)*1e3:.2f} ms  "
-          f"p99 {_percentile(lat, 99)*1e3:.2f} ms  "
-          f"(per-query p50 {_percentile(per_q, 50)*1e3:.3f} ms)")
+    print(f"[serve] batch latency: {_latency_line(lat, per_q)}")
     print(f"[serve] engine stats: {engine.stats}")
     if resilient is not None:
         _print_fault_summary(resilient, len(queries), degraded_q)
@@ -212,9 +217,9 @@ def serve_ranked(args, rng, corpus) -> None:
 
     if args.compare_scalar:
         n_check = min(len(queries), 64)
-        t0 = time.perf_counter()
+        t0 = obs.now()
         want = exhaustive_topk(idx, queries[:n_check], args.topk)
-        dt = time.perf_counter() - t0
+        dt = obs.now() - t0
         for q, (gd, gs), (wd, ws) in zip(queries, results, want):
             assert np.array_equal(gd, wd) and np.array_equal(gs, ws), q
         speedup = (dt / n_check) / (wall / len(queries))
@@ -272,6 +277,14 @@ def main() -> None:
                     help="also time the per-query NextGEQ loop (or, with "
                          "--ranked, the exhaustive-scoring oracle) and "
                          "verify the batched results against it")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="arm the obs layer and serve the live metrics "
+                         "registry over HTTP: /metrics (Prometheus text) "
+                         "and /metrics.json (JSON snapshot); 0 binds an "
+                         "ephemeral port")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="arm the obs layer and write the JSON metrics "
+                         "snapshot to PATH at exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.shards is not None and not args.fused and not args.ranked:
@@ -279,22 +292,40 @@ def main() -> None:
         # needs the fused pipeline for sharding
         ap.error("--shards requires the fused engine (drop --no-fused)")
 
+    server = None
+    if args.metrics_port is not None or args.metrics_dump:
+        obs.enable()
+    if args.metrics_port is not None:
+        server = obs.MetricsServer(args.metrics_port)
+        print(f"[serve] metrics: http://127.0.0.1:{server.port}/metrics "
+              f"(Prometheus) and /metrics.json")
+    try:
+        _serve(args)
+    finally:
+        if args.metrics_dump:
+            obs.write_snapshot(args.metrics_dump)
+            print(f"[serve] metrics snapshot -> {args.metrics_dump}")
+        if server is not None:
+            server.close()
+
+
+def _serve(args) -> None:
     rng = np.random.default_rng(args.seed)
-    t0 = time.perf_counter()
+    t0 = obs.now()
     corpus = make_corpus(
         rng, n_lists=args.n_lists, min_len=args.min_len, max_len=args.max_len
     )
     n_postings = sum(len(l) for l in corpus)
     print(f"[serve] corpus: {args.n_lists} lists, {n_postings:,} postings "
-          f"({time.perf_counter()-t0:.1f}s)")
+          f"({obs.now()-t0:.1f}s)")
 
     if args.ranked:
         serve_ranked(args, rng, corpus)
         return
 
-    t0 = time.perf_counter()
+    t0 = obs.now()
     idx = build_partitioned_index(corpus, "optimal")
-    t_build = time.perf_counter() - t0
+    t_build = obs.now() - t0
     base = build_unpartitioned_index(corpus)
     print(f"[serve] space: optimal {idx.bits_per_int():.2f} bpi vs "
           f"un-partitioned {base.bits_per_int():.2f} bpi "
@@ -312,12 +343,12 @@ def main() -> None:
     engine.intersect_batch(queries[: args.batch])
     resilient = _make_resilient(args, engine)
 
-    t0 = time.perf_counter()
+    t0 = obs.now()
     if resilient is not None:
         results, lat, degraded_q = serve_resilient(resilient, queries, args.batch)
     else:
         results, lat = serve_batches(engine, queries, args.batch)
-    wall = time.perf_counter() - t0
+    wall = obs.now() - t0
     n_results = sum(r.size for r in results)
     sizes = [len(queries[i : i + args.batch])
              for i in range(0, len(queries), args.batch)]
@@ -327,10 +358,7 @@ def main() -> None:
           f"{len(queries)/wall:,.0f} q/s, "
           f"{wall/len(queries)*1e3:.3f} ms/query avg, "
           f"{n_results:,} results total")
-    print(f"[serve] batch latency: p50 {_percentile(lat, 50)*1e3:.2f} ms  "
-          f"p90 {_percentile(lat, 90)*1e3:.2f} ms  "
-          f"p99 {_percentile(lat, 99)*1e3:.2f} ms  "
-          f"(per-query p50 {_percentile(per_q, 50)*1e3:.3f} ms)")
+    print(f"[serve] batch latency: {_latency_line(lat, per_q)}")
     print(f"[serve] engine stats: {engine.stats}")
     if resilient is not None:
         _print_fault_summary(resilient, len(queries), degraded_q)
@@ -338,9 +366,9 @@ def main() -> None:
 
     if args.compare_scalar:
         n_check = min(len(queries), 128)
-        t0 = time.perf_counter()
+        t0 = obs.now()
         scalar = [idx.intersect_scalar(q) for q in queries[:n_check]]
-        dt = time.perf_counter() - t0
+        dt = obs.now() - t0
         for q, got, want in zip(queries[:n_check], results[:n_check], scalar):
             assert np.array_equal(got, want), f"mismatch on query {q}"
         speedup = (dt / n_check) / (wall / len(queries))

@@ -72,6 +72,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.core.engine_core import (
     EngineCore,
     build_locate_dev,
@@ -136,18 +137,26 @@ class TopKEngine:
                 "(build_partitioned_index(lists, freqs=...))"
             )
         self.ranked = self.arena.ranked
-        self.stats = {
-            "batches": 0,
-            "seed_pairs": 0,
-            "scored_pairs": 0,
-            "candidates": 0,
-            "ub_filtered": 0,
-            "scored_rows": 0,
-            "blocks_kept": 0,
-            "blocks_total": 0,
-            "pivot_chunks": 0,
-            "score_evictions": 0,  # hot-block score cache flushes (rows)
-        }
+        # CounterDict: plain-dict reads for callers/tests, and every numeric
+        # increment mirrors onto an obs counter when the layer is armed
+        # (EngineCore shares this dict, so its cache/kernel counters land
+        # under the same ``ranked_*`` prefix)
+        self.stats = obs.CounterDict(
+            "ranked",
+            {
+                "batches": 0,
+                "seed_pairs": 0,
+                "scored_pairs": 0,
+                "candidates": 0,
+                "ub_filtered": 0,
+                "scored_rows": 0,
+                "blocks_kept": 0,
+                "blocks_total": 0,
+                "pivot_chunks": 0,
+                "score_evictions": 0,  # hot-block score cache flushes (rows)
+            },
+            engine="topk",
+        )
         a, r = self.arena, self.ranked
         self.k1p1 = np.float32(r.params.k1 + 1.0)
         self.lob = a.part_list[a.part_of_block]  # owning list per block
@@ -201,6 +210,17 @@ class TopKEngine:
         dispatchers and per-shard EngineCores carry their own check)."""
         if self.fault_injector is not None:
             self.fault_injector.check(s)
+        obs.count("shard_dispatch", shard=str(s), path="ranked")
+
+    @staticmethod
+    def _note_theta(theta) -> None:
+        """Theta-trajectory gauge: the batch's max raised threshold (the
+        tightest pruning bound the two-round rescore reached)."""
+        if theta is None or not obs.enabled():
+            return
+        finite = theta[np.isfinite(theta)]
+        if len(finite):
+            obs.set_gauge("ranked_theta_max", float(finite.max()))
 
     def _lane_scores(self) -> np.ndarray:
         """The impact mirror: every lane scored ONCE through the chosen
@@ -366,6 +386,10 @@ class TopKEngine:
                 out[hit] = self._scache[pos[hit]]
         else:
             hit = np.zeros(len(urows), bool)
+        if obs.enabled():
+            nh = int(hit.sum())
+            obs.count("ranked_score_cache_rows", nh, kind="hit")
+            obs.count("ranked_score_cache_rows", len(urows) - nh, kind="miss")
         miss = ~hit
         if miss.any():
             mrows = urows[miss]
@@ -948,6 +972,7 @@ class TopKEngine:
 
         # ---- round A: the max(4k, 64) highest-UB docs, scored exactly
         # (argpartition: ANY k-superset works here, order does not matter)
+        obs.count("ranked_rescore_rounds", 2)
         cap = max(4 * k, 64)
         sel_a = []
         for i, (_, _, docs) in enumerate(specs):
@@ -1005,33 +1030,34 @@ class TopKEngine:
         # disjunctive top-k, so theta starts close to the true k-th score;
         # whole blocks beat per-lane top-m picks here because saturation
         # ties many lanes and the joint-hot docs hide among them)
-        self._flat_init()
-        seed_specs, seed_qids = [], []
-        for i, (terms, mult) in enumerate(specs):
-            if len(terms) == 0:
-                continue
-            chunks = []
-            for t in terms:
-                r0 = int(a.list_blk_offsets[int(t)])
-                r1 = int(a.list_blk_offsets[int(t) + 1])
-                rows = np.arange(r0, r1, dtype=np.int64)
-                top = rows[np.argsort(-self.bounds[rows], kind="stable")]
-                chunks.append(self._block_docs(top[: self.seed_blocks]))
-            docs = np.unique(np.concatenate(chunks))
-            seed_specs.append((terms, mult, docs))
-            seed_qids.append(i)
-        seed_scored, _ = self._score_specs(seed_specs)
-        self.stats["seed_pairs"] += sum(
-            len(t) * len(d) for t, _, d in seed_specs
-        )
-        theta = np.full(len(queries), -np.inf)
-        seeds: dict[int, np.ndarray] = {}
-        for (terms, mult, docs), (_, sc), i in zip(
-            seed_specs, seed_scored, seed_qids
-        ):
-            seeds[i] = docs
-            if len(docs) >= k:
-                theta[i] = np.partition(sc, len(sc) - k)[len(sc) - k]
+        with obs.span("seed", path="ranked"):
+            self._flat_init()
+            seed_specs, seed_qids = [], []
+            for i, (terms, mult) in enumerate(specs):
+                if len(terms) == 0:
+                    continue
+                chunks = []
+                for t in terms:
+                    r0 = int(a.list_blk_offsets[int(t)])
+                    r1 = int(a.list_blk_offsets[int(t) + 1])
+                    rows = np.arange(r0, r1, dtype=np.int64)
+                    top = rows[np.argsort(-self.bounds[rows], kind="stable")]
+                    chunks.append(self._block_docs(top[: self.seed_blocks]))
+                docs = np.unique(np.concatenate(chunks))
+                seed_specs.append((terms, mult, docs))
+                seed_qids.append(i)
+            seed_scored, _ = self._score_specs(seed_specs)
+            self.stats["seed_pairs"] += sum(
+                len(t) * len(d) for t, _, d in seed_specs
+            )
+            theta = np.full(len(queries), -np.inf)
+            seeds: dict[int, np.ndarray] = {}
+            for (terms, mult, docs), (_, sc), i in zip(
+                seed_specs, seed_scored, seed_qids
+            ):
+                seeds[i] = docs
+                if len(docs) >= k:
+                    theta[i] = np.partition(sc, len(sc) - k)[len(sc) - k]
 
         # ---- phase 2, resident="kernel": the device Block-Max pivot.
         # Theta reduces to one qmin per (query, term) on the host; the
@@ -1041,23 +1067,28 @@ class TopKEngine:
         # sync per pruning round.  Admissible, so phase 3's exact rescore
         # still reproduces the oracle bit for bit.
         if self.resident == "kernel":
-            cand_docs = self._pivot_candidates(specs, theta)
-            final_specs = []
-            for i, (terms, mult) in enumerate(specs):
-                if len(terms) == 0:
-                    final_specs.append((terms, mult, np.zeros(0, np.int64)))
-                    continue
-                cand_chunks = [seeds[i]] if i in seeds else []
-                if len(cand_docs[i]):
-                    cand_chunks.append(cand_docs[i])
-                cand = (
-                    np.unique(np.concatenate(cand_chunks))
-                    if cand_chunks
-                    else np.zeros(0, np.int64)
-                )
-                self.stats["candidates"] += len(cand)
-                final_specs.append((terms, mult, cand))
-            final_scored, _ = self._score_specs(final_specs, theta, k)
+            with obs.span("pivot", path="ranked", resident="kernel"):
+                cand_docs = self._pivot_candidates(specs, theta)
+                final_specs = []
+                for i, (terms, mult) in enumerate(specs):
+                    if len(terms) == 0:
+                        final_specs.append(
+                            (terms, mult, np.zeros(0, np.int64))
+                        )
+                        continue
+                    cand_chunks = [seeds[i]] if i in seeds else []
+                    if len(cand_docs[i]):
+                        cand_chunks.append(cand_docs[i])
+                    cand = (
+                        np.unique(np.concatenate(cand_chunks))
+                        if cand_chunks
+                        else np.zeros(0, np.int64)
+                    )
+                    self.stats["candidates"] += len(cand)
+                    final_specs.append((terms, mult, cand))
+            with obs.span("rescore", path="ranked"):
+                final_scored, theta2 = self._score_specs(final_specs, theta, k)
+            self._note_theta(theta2)
             return [topk_select(docs, sc, k) for docs, sc in final_scored]
 
         # ---- phase 2, resident="mirror": range-aligned block pivot
@@ -1068,39 +1099,42 @@ class TopKEngine:
         # so a block whose aligned upper bound misses theta generates no
         # candidates -- and any doc with score >= theta survives through
         # EVERY block that contains it (the bound above holds for each).
-        final_specs = []
-        for i, (terms, mult) in enumerate(specs):
-            if len(terms) == 0:
-                final_specs.append((terms, mult, np.zeros(0, np.int64)))
-                continue
-            ub = mult * self.list_ub[terms]
-            total_ub = float(ub.sum())
-            cand_chunks = [seeds[i]] if i in seeds else []
-            aligned = self._aligned_rest(terms, mult)
-            for j, (rows, rest) in enumerate(aligned):
-                keep = mult[j] * self.bounds[rows] + rest >= theta[i]
-                self.stats["blocks_kept"] += int(keep.sum())
-                self.stats["blocks_total"] += len(rows)
-                share = (
-                    float(theta[i]) * float(ub[j]) / total_ub
-                    if total_ub > 0 and np.isfinite(theta[i])
-                    else -np.inf
-                )
-                cand_chunks.append(
-                    self._block_docs_filtered(
-                        rows[keep], rest[keep], float(mult[j]),
-                        float(theta[i]), share,
+        with obs.span("pivot", path="ranked", resident="mirror"):
+            final_specs = []
+            for i, (terms, mult) in enumerate(specs):
+                if len(terms) == 0:
+                    final_specs.append((terms, mult, np.zeros(0, np.int64)))
+                    continue
+                ub = mult * self.list_ub[terms]
+                total_ub = float(ub.sum())
+                cand_chunks = [seeds[i]] if i in seeds else []
+                aligned = self._aligned_rest(terms, mult)
+                for j, (rows, rest) in enumerate(aligned):
+                    keep = mult[j] * self.bounds[rows] + rest >= theta[i]
+                    self.stats["blocks_kept"] += int(keep.sum())
+                    self.stats["blocks_total"] += len(rows)
+                    share = (
+                        float(theta[i]) * float(ub[j]) / total_ub
+                        if total_ub > 0 and np.isfinite(theta[i])
+                        else -np.inf
                     )
+                    cand_chunks.append(
+                        self._block_docs_filtered(
+                            rows[keep], rest[keep], float(mult[j]),
+                            float(theta[i]), share,
+                        )
+                    )
+                cand = (
+                    np.unique(np.concatenate(cand_chunks))
+                    if cand_chunks
+                    else np.zeros(0, np.int64)
                 )
-            cand = (
-                np.unique(np.concatenate(cand_chunks))
-                if cand_chunks
-                else np.zeros(0, np.int64)
-            )
-            self.stats["candidates"] += len(cand)
-            final_specs.append((terms, mult, cand))
+                self.stats["candidates"] += len(cand)
+                final_specs.append((terms, mult, cand))
 
         # ---- phase 3: doc-aligned block-max pivot filter (UB >= theta) +
         # two-round threshold+compact rescore + (score desc, docID asc) cut
-        final_scored, _ = self._score_specs(final_specs, theta, k)
+        with obs.span("rescore", path="ranked"):
+            final_scored, theta2 = self._score_specs(final_specs, theta, k)
+        self._note_theta(theta2)
         return [topk_select(docs, sc, k) for docs, sc in final_scored]

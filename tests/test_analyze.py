@@ -263,6 +263,21 @@ def test_idiom_clean_repo():
             "src/repro/launch/fake.py",
             "backend-route",
         ),
+        (
+            "import time\n\nt0 = time.perf_counter()\n",
+            "src/repro/core/fake.py",
+            "obs-timers",
+        ),
+        (
+            "import time\n\nnow = time.time()\n",
+            "src/repro/distributed/fake.py",
+            "obs-timers",
+        ),
+        (
+            "import time\n\nnow = time.monotonic()\n",
+            "src/repro/launch/fake.py",
+            "obs-timers",
+        ),
     ],
 )
 def test_idiom_rules_fire(src, rel, rule):
@@ -289,3 +304,19 @@ def test_idiom_scoping_and_suppression():
 def test_idiom_timestamped_entry_passes():
     src = 'entry = {"sha": s, "timestamp": t, "records": r}\n'
     assert idiom_lint.lint_source(src, "benchmarks/fake.py") == []
+
+
+def test_idiom_obs_timers_scoping():
+    clock = "import time\n\nt0 = time.perf_counter()\n"
+    # the clock's home and everything outside src/repro/ are exempt
+    assert idiom_lint.lint_source(clock, "src/repro/obs/trace.py") == []
+    assert idiom_lint.lint_source(clock, "benchmarks/fake.py") == []
+    assert idiom_lint.lint_source(clock, "tools/fake.py") == []
+    # non-timing uses of the time module never fire
+    sleep = "import time\n\ntime.sleep(0.1)\nstamp = time.time_ns()\n"
+    assert idiom_lint.lint_source(sleep, "src/repro/core/fake.py") == []
+    suppressed = (
+        "import time\n\n"
+        "t0 = time.perf_counter()  # analyze: allow\n"
+    )
+    assert idiom_lint.lint_source(suppressed, "src/repro/core/fake.py") == []

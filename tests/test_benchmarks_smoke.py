@@ -23,6 +23,7 @@ from benchmarks import (  # noqa: E402
     bench_fig1_distribution,
     bench_kernels,
     bench_nextgeq,
+    bench_obs,
     bench_partition_space,
     bench_queries,
     bench_ranked,
@@ -42,6 +43,7 @@ MODULES = {
     "bench_nextgeq": bench_nextgeq,
     "bench_kernels": bench_kernels,
     "bench_ranked": bench_ranked,
+    "bench_obs": bench_obs,
     "roofline": roofline,
 }
 

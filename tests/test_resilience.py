@@ -38,9 +38,12 @@ from repro.core.shard import (
     shard_of_list,
 )
 from repro.data.postings import make_corpus, make_freqs, make_queries
+from repro import obs
 from repro.distributed.resilient import (
     DEAD,
     HEALTHY,
+    RECOVERING,
+    SUSPECT,
     ResilientEngine,
     ShardFailure,
     ShardFaultInjector,
@@ -449,6 +452,82 @@ def test_checkpoint_recovery_bit_identical(tmp_path, index, queries,
     assert not info.degraded
     bv, br = plain.search_batch(terms, probes)
     assert np.array_equal(v, bv) and np.array_equal(r, br)
+
+
+# ----------------------------------------------------------------------
+# observability: the health lifecycle as emitted events (ISSUE-8)
+# ----------------------------------------------------------------------
+@pytest.fixture
+def armed_obs():
+    was = obs.enabled()
+    obs.enable(True)
+    obs.reset()
+    yield
+    obs.reset()
+    obs.enable(was)
+
+
+def _transitions(shard: int) -> list[tuple[str, str]]:
+    return [
+        (e["src"], e["dst"])
+        for e in obs.events()
+        if e["name"] == "health_transition" and e["shard"] == shard
+    ]
+
+
+def test_health_lifecycle_emitted_as_obs_events(tmp_path, index, queries,
+                                                armed_obs):
+    """The DESIGN §11 trajectory, reconstructed from the obs layer alone:
+    the trace ring carries the ordered HEALTHY -> SUSPECT -> DEAD ->
+    RECOVERING -> HEALTHY transitions and the registry snapshot carries
+    the matching counters + recovery/failover latency histograms."""
+    res = ResilientEngine(
+        QueryEngine(index, backend="numpy", shards=3, shard_mesh=None),
+        injector=ShardFaultInjector(at_batches=(1,), shards=(0,)),
+        manager=CheckpointManager(tmp_path, async_save=False),
+        backoff_s=1e-4,
+    )
+    res.checkpoint()
+    _, degraded_q = _serve_chunks(res, queries)
+    assert degraded_q == 0
+    seq = _transitions(0)
+    assert seq == [
+        (HEALTHY, SUSPECT), (SUSPECT, DEAD),
+        (DEAD, RECOVERING), (RECOVERING, HEALTHY),
+    ]
+    assert all(_transitions(s) == [] for s in (1, 2))  # bystanders quiet
+    snap = obs.snapshot(events=False)
+    c = snap["counters"]
+    for src, dst in seq:
+        key = (f'resilient_health_transitions'
+               f'{{dst="{dst}",shard="0",src="{src}"}}')
+        assert c[key] == 1, key
+    # CounterDict keeps the dict API AND mirrors into the registry
+    assert c["resilient_recoveries"] == res.stats["recoveries"] == 1
+    assert c["resilient_dead_events"] == res.stats["dead_events"] == 1
+    assert c["resilient_failovers"] == res.stats["failovers"] >= 1
+    h = snap["histograms"]
+    assert h['resilient_recovery_ms{shard="0"}']["count"] == 1
+    assert h['resilient_recovery_ms{shard="0"}']["max"] < 30_000  # ms
+    assert h["resilient_failover_ms"]["count"] >= 1
+
+
+def test_degraded_serving_counted_lifecycle_stops_at_dead(index, queries,
+                                                          armed_obs):
+    """No replicas, no checkpoint: answers degrade (counted per missing
+    list) and the victim's lifecycle ends at DEAD -- no recovery events
+    may appear when there is nothing to recover from."""
+    res = ResilientEngine(
+        QueryEngine(index, backend="numpy", shards=3, shard_mesh=None),
+        injector=ShardFaultInjector(at_batches=(1,), shards=(0,)),
+        backoff_s=1e-4,
+    )
+    _, degraded_q = _serve_chunks(res, queries)
+    assert degraded_q > 0
+    assert _transitions(0) == [(HEALTHY, SUSPECT), (SUSPECT, DEAD)]
+    snap = obs.snapshot(events=False)
+    assert snap["counters"]["resilient_degraded_answers"] >= 1
+    assert "resilient_recovery_ms{shard=\"0\"}" not in snap["histograms"]
 
 
 @pytest.mark.slow

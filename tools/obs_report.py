@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Render an obs metrics JSON snapshot as a terminal table (ISSUE-8).
+
+One snapshot prints absolute values; two snapshots print the delta
+(new - old, via ``repro.obs.diff``) -- the quick way to answer "what did
+this serve run / bench run actually do internally?".
+
+  python tools/obs_report.py OBS_snapshot.json
+  python tools/obs_report.py after.json before.json     # delta view
+  python tools/obs_report.py --section histograms snap.json
+
+Snapshots come from ``serve.py --metrics-dump``, ``benchmarks.run
+--json`` (``OBS_snapshot.json``) or ``GET /metrics.json`` on a live
+``--metrics-port`` server.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import diff  # noqa: E402
+
+SECTIONS = ("counters", "gauges", "histograms")
+HIST_COLS = ("count", "p50", "p90", "p99", "p999", "max")
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return str(v)
+    if isinstance(v, int):
+        return f"{v:,}"
+    if v and abs(v) < 0.001:
+        return f"{v:.2e}"
+    return f"{v:,.3f}"
+
+
+def _table(rows: list[list[str]], header: list[str]) -> str:
+    widths = [max(len(r[i]) for r in [header, *rows]) for i in range(len(header))]
+    def line(cells, pad=" "):
+        # first column left-aligned (metric names), numbers right-aligned
+        out = [cells[0].ljust(widths[0])]
+        out += [c.rjust(w) for c, w in zip(cells[1:], widths[1:])]
+        return pad.join(out).rstrip()
+    rule = ["-" * w for w in widths]
+    return "\n".join([line(header), line(rule), *[line(r) for r in rows]])
+
+
+def render(snap: dict, sections: tuple[str, ...] = SECTIONS) -> str:
+    """The full report for one snapshot (or one diff) as a string."""
+    blocks: list[str] = []
+    for sect in sections:
+        data = snap.get(sect) or {}
+        if not data:
+            continue
+        if sect == "histograms":
+            rows = [
+                [k, *[_fmt(h.get(c, 0)) for c in HIST_COLS]]
+                for k, h in sorted(data.items())
+            ]
+            header = ["histogram (ms)", *HIST_COLS]
+        else:
+            rows = [[k, _fmt(v)] for k, v in sorted(data.items())]
+            header = [sect[:-1], "value"]
+        blocks.append(f"== {sect} ({len(rows)})\n{_table(rows, header)}")
+    if not blocks:
+        return "(empty snapshot)"
+    return "\n\n".join(blocks)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="snapshot JSON (the newer one when diffing)")
+    ap.add_argument("old", nargs="?", default=None,
+                    help="older snapshot: report the delta new - old")
+    ap.add_argument("--section", choices=SECTIONS, default=None,
+                    help="print only one section")
+    args = ap.parse_args(argv)
+    with open(args.new) as fh:
+        snap = json.load(fh)
+    if args.old:
+        with open(args.old) as fh:
+            snap = diff(snap, json.load(fh))
+        print(f"# delta: {args.new} - {args.old}")
+    sections = (args.section,) if args.section else SECTIONS
+    print(render(snap, sections))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
