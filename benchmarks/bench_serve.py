@@ -1,0 +1,121 @@
+"""Closed-loop load generator for the continuous-batching serving loop.
+
+The §13 acceptance surface: ``repro.serving.AsyncTopKServer`` in front of
+a warmed kernel-resident ``TopKEngine``, driven by N closed-loop clients
+(each awaits its result before sending the next request -- offered load
+scales with concurrency and self-throttles under backpressure, the
+classic closed-loop harness).  Each concurrency level reports sustained
+QPS and end-to-end p50/p99/p99.9 request latency, plus wave shape
+(occupancy, pow2 bucket reuse) so BENCH_serve.json tracks the batching
+behaviour across PRs, not just the headline throughput.
+
+Every result returned through the loop is asserted bit-identical to a
+direct ``engine.topk_batch`` call on the same query -- the serving layer
+must never change answers, only scheduling.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+
+from .common import emit
+
+from repro.obs.metrics import Histogram  # noqa: E402  (common set sys.path)
+
+
+def _corpus(rng, smoke: bool):
+    from repro.core.index import build_partitioned_index
+    from repro.data.postings import make_ranked_corpus
+
+    n_lists, mn, mx = (6, 80, 1_200) if smoke else (10, 2_000, 15_000)
+    lists, freqs = make_ranked_corpus(
+        rng, n_lists=n_lists, min_len=mn, max_len=mx,
+        mean_dense_gap=2.13, frac_dense=0.8,
+    )
+    return build_partitioned_index(lists, "optimal", freqs=freqs)
+
+
+def _closed_loop(server, queries, clients: int, per_client: int):
+    """Drive ``clients`` serial submitters; returns (results, lats, dt).
+
+    results[i] is a list of (query_index, ServeResult) so the caller can
+    check identity against the direct-batch oracle.
+    """
+
+    async def drive():
+        results = []
+        async with server:
+            async def client(ci):
+                for j in range(per_client):
+                    qi = (ci * per_client + j) % len(queries)
+                    res = await server.submit(queries[qi])
+                    results.append((qi, res))
+
+            t0 = time.perf_counter()
+            await asyncio.gather(*(client(i) for i in range(clients)))
+            dt = time.perf_counter() - t0
+        return results, dt
+
+    return asyncio.run(drive())
+
+
+def run(quick: bool = True, smoke: bool = False) -> None:
+    from repro.data.postings import make_queries
+    from repro.ranked.topk_engine import TopKEngine
+    from repro.serving import AsyncTopKServer
+
+    rng = np.random.default_rng(23)
+    k = 10
+    idx = _corpus(rng, smoke)
+    engine = TopKEngine(idx, backend="ref", seed_blocks=2,
+                        resident="kernel")
+    queries = [
+        [int(t) for t in q]
+        for ar in (2, 3)
+        for q in make_queries(rng, len(idx.list_sizes), 8, ar)
+    ]
+    engine.topk_batch(queries, k)  # warm: jit traces + hot-block cache
+    oracle = engine.topk_batch(queries, k)
+
+    levels = [2, 4] if smoke else ([4, 16] if quick else [4, 16, 64])
+    per_client = 6 if smoke else 25
+    for c in levels:
+        server = AsyncTopKServer(
+            engine, k=k, max_batch=16, max_queue=256, max_delay_s=1e-3,
+        )
+        results, dt = _closed_loop(server, queries, c, per_client)
+        n = c * per_client
+        assert len(results) == n and server.stats["expired"] == 0, c
+        for qi, res in results:
+            wd, ws = oracle[qi]
+            assert np.array_equal(res.docs, wd), (c, qi)
+            assert np.array_equal(res.scores, ws), (c, qi)
+        lats = [res.latency_s for _, res in results]
+        waits = [res.wait_s for _, res in results]
+        qps = n / dt
+        f = server.former
+        waves = f.stats["waves"]
+        emit(
+            f"serve_closed_c{c}", dt / n * 1e6,
+            f"k={k};clients={c};sustained_qps={qps:.0f};waves={waves};"
+            f"full_waves={f.stats['full_waves']};"
+            f"occupancy={n / max(waves * f.max_batch, 1):.2f}",
+            ops_per_sec=qps,
+            p50_us=Histogram.percentile_of(lats, 50) * 1e6,
+            p99_us=Histogram.percentile_of(lats, 99) * 1e6,
+            p999_us=Histogram.percentile_of(lats, 99.9) * 1e6,
+            wait_p50_us=Histogram.percentile_of(waits, 50) * 1e6,
+            waves=waves,
+            full_waves=f.stats["full_waves"],
+            bucket_reuse=f.stats["bucket_hits"] / max(waves, 1),
+            calls=n,
+        )
+
+
+if __name__ == "__main__":
+    from .common import cli_main
+
+    cli_main(run)

@@ -35,6 +35,7 @@ from . import (
     bench_partition_space,
     bench_queries,
     bench_ranked,
+    bench_serve,
     bench_vbyte_family,
     roofline,
 )
@@ -51,6 +52,7 @@ MODULES = {
     "faults": bench_faults,
     "kernels": bench_kernels,
     "ranked": bench_ranked,
+    "serve": bench_serve,
     "roofline": roofline,
     "obs": bench_obs,
 }
@@ -66,6 +68,7 @@ JSON_GROUPS = {
     "faults": "faults",
     "kernels": "kernels",
     "ranked": "ranked",
+    "serve": "serve",
     "obs": "obs",
 }
 

@@ -1,8 +1,9 @@
 """FMA/contraction sanitizer (checker 2 of ``repro.analyze``; DESIGN.md §10).
 
-Compiles the four single-source jit-graph halves the engines are built
+Compiles the single-source jit-graph halves the engines are built
 from (``engine_core.GRAPH_CONTRACTS``: locate / decode_search / pivot /
-score_probe) with synthetic gathered-row arguments, then walks the
+pivot_score / score_rows / score_probe) with synthetic gathered-row
+arguments, then walks the
 OPTIMIZED HLO -- the op stream XLA actually runs, after fusion -- with the
 shared walker of ``launch.hlo_walker`` and asserts the identity class each
 graph declared:
@@ -116,7 +117,7 @@ def check_hlo_text(
 
 
 def graph_specs(backend: str = "ref"):
-    """name -> (traceable fn, example args) for the four graph halves.
+    """name -> (traceable fn, example args) for the registered graph halves.
 
     Arguments are synthetic but shaped exactly as the engines stage them:
     one ``BM``-row pow2 bucket of gathered arena rows (values are
@@ -128,8 +129,9 @@ def graph_specs(backend: str = "ref"):
         decode_search_graph,
         locate_graph,
         pivot_graph,
+        pivot_score_graph,
     )
-    from repro.kernels.bm25_score.ops import score_probe_graph
+    from repro.kernels.bm25_score.ops import score_probe_graph, score_rows_graph
     from repro.kernels.vbyte_decode.kernel import BLOCK_BYTES, BLOCK_VALS, BM
 
     nr, nb, stride = BM, 64, 131
@@ -162,6 +164,14 @@ def graph_specs(backend: str = "ref"):
     def pivot(q, qm, nbk):
         return pivot_graph(q, qm, nbk, backend, False)
 
+    def score_rows(fl, fd, nm, i, tb, k):
+        return score_rows_graph(fl, fd, nm, i, tb, k, backend, False)
+
+    def pivot_score(q, qm, nbk, b, fl, fd, nm, i, tb, k):
+        return pivot_score_graph(
+            q, qm, nbk, b, fl, fd, nm, i, tb, k, 8, backend, False
+        )
+
     return {
         "locate_graph": (locate, (terms, probes)),
         "decode_search_graph": (decode_search, (lens, data, base, pe)),
@@ -170,6 +180,11 @@ def graph_specs(backend: str = "ref"):
             (lens, data, lens, data, norms, base, pe, idf, table, k1p1),
         ),
         "pivot_graph": (pivot, (qb, qmins, nblk)),
+        "score_rows_graph": (score_rows, (lens, data, norms, idf, table, k1p1)),
+        "pivot_score_graph": (
+            pivot_score,
+            (qb, qmins, nblk, base, lens, data, norms, idf, table, k1p1),
+        ),
     }
 
 

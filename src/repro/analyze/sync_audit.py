@@ -41,7 +41,13 @@ HOT_PATHS = ("boolean_and", "ranked_topk")
 # over these jaxprs; the names key into hlo_check.graph_specs)
 PATH_GRAPHS = {
     "boolean_and": ("locate_graph", "decode_search_graph"),
-    "ranked_topk": ("locate_graph", "pivot_graph", "score_probe_graph"),
+    "ranked_topk": (
+        "locate_graph",
+        "pivot_graph",
+        "pivot_score_graph",
+        "score_rows_graph",
+        "score_probe_graph",
+    ),
 }
 
 CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback", "callback"}

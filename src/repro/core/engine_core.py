@@ -156,6 +156,54 @@ def pivot_graph(qb_g, qmins, nblk_g, backend, interpret):
     return pivot_select_ref(qb_g, qmins, nblk_g)
 
 
+def pivot_score_graph(
+    qb_g, qmins, nblk_g, base_g, flens, fdata, norms, idf_rows, table,
+    k1p1, slots, backend, interpret,
+):
+    """Fused pivot + kept-slot scoring over GATHERED bound-chunk rows.
+
+    The fully-resident WAND round (DESIGN.md §13): ``pivot_graph`` plus
+    the in-graph gather-and-score of the first ``slots`` surviving blocks
+    per chunk, so keep-test, compaction, pivot AND the survivors' scores
+    come back from ONE dispatch.  flens/fdata/norms/idf_rows are the FULL
+    resident freq arena (gathered in-graph at ``base + compact``); slots
+    is a static python int.  Returns ``(compact, count, pivot, maxq,
+    sscores)`` -- see ``kernels.pivot_score``.  f32-bit-exact: the pivot
+    half is integer and the scoring half is the ``bm25_score`` contract.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.pivot_score.kernel import (
+        PS_META_BASE,
+        PS_META_NBLK,
+        pivot_score_blocks,
+    )
+    from repro.kernels.pivot_score.ref import pivot_score_ref
+
+    if backend == "pallas":
+        from repro.kernels.blockmax_pivot.kernel import (
+            AUX_COUNT,
+            AUX_MAXQ,
+            AUX_PIVOT,
+        )
+
+        meta = jnp.zeros((qb_g.shape[0], BLOCK_VALS), jnp.int32)
+        meta = meta.at[:, PS_META_NBLK].set(nblk_g)
+        meta = meta.at[:, PS_META_BASE].set(base_g)
+        out, aux, sscores = pivot_score_blocks(
+            qb_g, qmins, meta, flens, fdata, norms, idf_rows, table, k1p1,
+            interpret=interpret, slots=slots,
+        )
+        return (
+            out, aux[:, AUX_COUNT], aux[:, AUX_PIVOT], aux[:, AUX_MAXQ],
+            sscores,
+        )
+    return pivot_score_ref(
+        qb_g, qmins, nblk_g, base_g, flens, fdata, norms, idf_rows, table,
+        k1p1, slots,
+    )
+
+
 @dataclass
 class PivotChunks:
     """``block_max_q`` re-tiled into per-list 128-lane chunks (§9).
@@ -263,6 +311,16 @@ GRAPH_CONTRACTS = {
     },
     "score_probe_graph": {
         "module": "repro.kernels.bm25_score.ops",
+        "identity": "f32-bit-exact",
+        "allow_dot_contractions": [256],
+    },
+    "score_rows_graph": {
+        "module": "repro.kernels.bm25_score.ops",
+        "identity": "f32-bit-exact",
+        "allow_dot_contractions": [256],
+    },
+    "pivot_score_graph": {
+        "module": "repro.core.engine_core",
         "identity": "f32-bit-exact",
         "allow_dot_contractions": [256],
     },

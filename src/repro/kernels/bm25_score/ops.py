@@ -99,6 +99,36 @@ def score_probe_graph(
     )
 
 
+def score_rows_graph(
+    flens_g, fdata_g, norms_g, idf_g, table, k1p1, backend: str,
+    interpret: bool,
+):
+    """All-lane scoring of GATHERED freq rows, inside a jit graph.
+
+    The resident-row epilogue of ``TopKEngine``'s fully-resident rounds
+    (DESIGN.md §13): the caller gathers ``flens/fdata/norms/idf`` on
+    device and the scores stay on device (hot-block cache fills and the
+    device-carried theta round both consume them without a host trip).
+    pallas stages (idf, k1+1) into the FMETA lanes and broadcasts the
+    dequant table to its [BM, 256] tile; ref calls the jnp oracle.
+    Bit-identical across backends; lives ONCE, here.
+    """
+    if backend == "pallas":
+        fmeta = jnp.zeros((flens_g.shape[0], BLOCK_VALS), jnp.float32)
+        fmeta = fmeta.at[:, FMETA_IDF].set(idf_g)
+        fmeta = fmeta.at[:, FMETA_K1P1].set(jnp.float32(k1p1))
+        tile = jnp.broadcast_to(
+            jnp.asarray(table, jnp.float32), (BM, NORM_LEVELS)
+        )
+        return bm25_score_blocks(
+            flens_g, fdata_g, norms_g, tile, fmeta, interpret=interpret
+        )
+    return score_rows_ref(
+        flens_g, fdata_g, norms_g, idf_g,
+        jnp.asarray(table, jnp.float32), jnp.float32(k1p1),
+    )
+
+
 def score_rows_np(flens, fdata, norms, idf_rows, table, k1p1):
     """Numpy mirror of ``bm25_score_blocks``: [nr, 128] float32 scores."""
     tf = (decode_blocks_np(flens, fdata) + 1).astype(np.float32)

@@ -1,0 +1,10 @@
+"""Fused Block-Max pivot + kept-slot BM25 scoring family (DESIGN.md §13)."""
+
+from .kernel import (
+    PS_META_BASE,
+    PS_META_NBLK,
+    SCORE_SLOTS,
+    pivot_score_blocks,
+)
+from .ops import pivot_score, pivot_score_np
+from .ref import pivot_score_ref

@@ -1,0 +1,104 @@
+"""Pallas composition: Block-Max pivot + kept-slot BM25 scoring (§13).
+
+Fourth kernel family over the block arena, and the one that makes a WAND
+round FULLY resident: until now the engine dispatched ``blockmax_pivot``,
+fetched the kept lane lists, and issued a SECOND dispatch (or walked the
+flat mirror) to score the surviving blocks -- a host round-trip per round
+whose only purpose was to turn kept lanes into gather indices.
+
+This family fuses the two: one jitted graph runs the pivot kernel over
+the bound tiles, turns the compacted lane lists into arena-row gather
+indices IN-GRAPH (``base + compact[:, :slots]``), and streams the first
+``SCORE_SLOTS`` surviving blocks of every chunk row straight through the
+``bm25_score`` kernel.  Neither the kept lists nor the slot scores touch
+the host between the two kernels; chunks with more than ``SCORE_SLOTS``
+survivors fall back to the resident row scorer for the tail (the engine
+tracks them through its hot-block score cache).
+
+The pallas "kernel" here is a composition of the two existing
+pallas_calls around an XLA gather, not a third monolithic kernel body:
+the pivot output must be materialized anyway (the host needs the kept
+lists to build candidate docs), and the gather between the calls is the
+exact memory movement a hand-fused kernel would do through HBM for row
+counts above one tile.  Bit-exactness is inherited: the pivot half is
+integer, the scoring half is the f32 contract kernel, and the gather
+indices are identical across backends (invalid slots clamp to the row
+base -- deterministic garbage, masked by ``count``).
+
+Per-row scalars ride the int32 meta tile (lanes named below), layout as
+``blockmax_pivot`` -- whose PMETA_NBLK lane this family keeps at the same
+index so the meta tile can be passed straight through.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.blockmax_pivot.kernel import (
+    PMETA_NBLK,
+    pivot_select_blocks,
+)
+from repro.kernels.bm25_score.kernel import (
+    FMETA_IDF,
+    FMETA_K1P1,
+    NORM_LEVELS,
+    bm25_score_blocks,
+)
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
+
+# int32 meta lanes (per gathered chunk row)
+PS_META_NBLK = 0  # number of valid lanes -- MUST stay == PMETA_NBLK
+PS_META_BASE = 1  # arena row index of the chunk's first block
+
+assert PS_META_NBLK == PMETA_NBLK  # meta tile passes through unchanged
+
+# slot budget: how many kept blocks per chunk row are scored in the fused
+# dispatch; survivors past this fall to the engine's resident row scorer
+SCORE_SLOTS = 16
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "slots"))
+def pivot_score_blocks(
+    qb: jnp.ndarray, qmin: jnp.ndarray, meta: jnp.ndarray,
+    flens: jnp.ndarray, fdata: jnp.ndarray, norms: jnp.ndarray,
+    idf_rows: jnp.ndarray, table: jnp.ndarray, k1p1,
+    interpret: bool = True, slots: int = SCORE_SLOTS,
+):
+    """Fused pivot selection + kept-slot scoring over gathered bound chunks.
+
+    qb / qmin: [nr, 128] int32 as ``pivot_select_blocks``; meta: [nr, 128]
+    int32 carrying PS_META_NBLK (valid-lane count) and PS_META_BASE (arena
+    row base) per row.  flens / fdata / norms / idf_rows: the FULL resident
+    freq arena ([nb, 128] i32 / [nb, 512] u8 / [nb, 128] norm codes /
+    [nb] f32), gathered in-graph; table: [256] float32 dequant table
+    (broadcast to the [BM, 256] kernel tile here); k1p1: k1 + 1.
+
+    Returns (out, aux, sscores): out / aux as ``pivot_select_blocks``,
+    sscores [nr, slots, 128] float32 with slot s of row r holding the
+    all-lane contract scores of arena row ``base[r] + out[r, s]`` (slots
+    past aux's AUX_COUNT hold deterministic garbage; callers mask).
+    """
+    nr = qb.shape[0]
+    assert nr % BM == 0, f"rows must be a multiple of {BM}"
+    out, aux = pivot_select_blocks(qb, qmin, meta, interpret=interpret)
+    nb = flens.shape[0]
+    krows = jnp.clip(
+        meta[:, PS_META_BASE : PS_META_BASE + 1]
+        + jnp.maximum(out[:, :slots], 0),
+        0, nb - 1,
+    )
+    g = krows.reshape(-1)
+    fmeta = jnp.zeros((g.shape[0], BLOCK_VALS), jnp.float32)
+    fmeta = fmeta.at[:, FMETA_IDF].set(idf_rows[g])
+    fmeta = fmeta.at[:, FMETA_K1P1].set(jnp.float32(k1p1))
+    tile = jnp.broadcast_to(
+        jnp.asarray(table, jnp.float32), (BM, NORM_LEVELS)
+    )
+    sscores = bm25_score_blocks(
+        flens[g], fdata[g], norms[g].astype(jnp.int32), tile, fmeta,
+        interpret=interpret,
+    ).reshape(nr, slots, BLOCK_VALS)
+    return out, aux, sscores

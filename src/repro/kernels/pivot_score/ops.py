@@ -1,0 +1,238 @@
+"""Wrappers + numpy mirror for the fused pivot + scoring family (§13).
+
+Same backend triple as the families it composes: ``"pallas"`` (the fused
+kernel composition), ``"ref"`` (jnp oracle), ``"numpy"`` (vectorized host
+mirror).  The pivot half is integer, the scoring half is the f32 BM25
+contract, and the in-graph gather indices are identical across backends,
+so outputs are bit-identical -- property-tested in
+tests/test_pivot_score_kernel.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.blockmax_pivot.kernel import QMIN_NONE
+from repro.kernels.blockmax_pivot.ops import pivot_select_np
+from repro.kernels.bm25_score.ops import score_rows_np
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
+from repro.kernels.vbyte_decode.ops import _resolve_interpret
+
+from .kernel import (
+    PS_META_BASE,
+    PS_META_NBLK,
+    SCORE_SLOTS,
+    pivot_score_blocks,
+)
+from .ref import pivot_score_ref
+
+# jitted oracle, called on pow2-padded row counts so traces are reused
+_ps_ref_jit = None
+
+
+def _jitted_ref():
+    global _ps_ref_jit
+    if _ps_ref_jit is None:
+        import jax
+
+        _ps_ref_jit = jax.jit(pivot_score_ref, static_argnames=("slots",))
+    return _ps_ref_jit
+
+
+def _pow2_rows(n: int) -> int:
+    return max(BM, 1 << (max(n, 1) - 1).bit_length())
+
+
+def pivot_score_np(
+    qb, qmins, nblks, bases, flens, fdata, norms, idf_rows, table, k1p1,
+    slots=SCORE_SLOTS,
+):
+    """Numpy mirror of ``pivot_score_blocks``.
+
+    Same semantics as ``ref.pivot_score_ref`` (invalid slots gather the
+    clamped row base -- deterministic garbage, masked by ``count``).
+    Returns (compact, count, pivot, maxq) int64 plus sscores
+    [nr, slots, 128] float32.
+    """
+    compact, count, pivot, maxq = pivot_select_np(qb, qmins, nblks)
+    nr = compact.shape[0]
+    nb = np.asarray(flens).shape[0]
+    krows = np.clip(
+        np.asarray(bases, np.int64)[:, None]
+        + np.maximum(compact[:, :slots], 0),
+        0, nb - 1,
+    )
+    g = krows.reshape(-1)
+    sscores = score_rows_np(
+        np.asarray(flens)[g], np.asarray(fdata)[g], np.asarray(norms)[g],
+        np.asarray(idf_rows, np.float32)[g], table, k1p1,
+    ).reshape(nr, slots, BLOCK_VALS)
+    return compact, count, pivot, maxq, sscores
+
+
+def pivot_score(
+    qb, qmins, nblks, bases, flens, fdata, norms, idf_rows, table, k1p1,
+    backend: str = "numpy", interpret: bool | None = None,
+    slots: int = SCORE_SLOTS,
+):
+    """Fused pivot + kept-slot scoring; numpy in/out, all backends.
+
+    Chunk inputs (qb / qmins / nblks / bases) are padded to a pow2 row
+    count (qmin = QMIN_NONE: padding keeps nothing and scores the clamped
+    row 0); the freq arena (flens / fdata / norms / idf_rows) is uploaded
+    whole.  Returns (compact, count, pivot, maxq, sscores) bit-identical
+    whatever the backend.
+    """
+    if backend == "numpy":
+        return pivot_score_np(
+            qb, qmins, nblks, bases, flens, fdata, norms, idf_rows, table,
+            k1p1, slots=slots,
+        )
+    if backend not in ("ref", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    qb = np.asarray(qb, np.int64)
+    n = qb.shape[0]
+    if n == 0:
+        z = np.zeros(0, np.int64)
+        return (
+            np.zeros((0, BLOCK_VALS), np.int64), z, z, z,
+            np.zeros((0, slots, BLOCK_VALS), np.float32),
+        )
+    pad = _pow2_rows(n) - n  # pow2 buckets: jit traces are reused
+    qb_p = np.zeros((n + pad, BLOCK_VALS), np.int32)
+    qb_p[:n] = qb
+    qmins_p = np.full((n + pad, BLOCK_VALS), QMIN_NONE, np.int32)
+    qmins_p[:n] = np.asarray(qmins, np.int64)
+    nblks_p = np.zeros(n + pad, np.int32)
+    nblks_p[:n] = np.asarray(nblks, np.int64)
+    bases_p = np.zeros(n + pad, np.int32)
+    bases_p[:n] = np.asarray(bases, np.int64)
+    flens_g = jnp.asarray(np.asarray(flens, np.int32))
+    fdata_g = jnp.asarray(np.asarray(fdata, np.uint8))
+    norms_g = jnp.asarray(np.asarray(norms))
+    idf_g = jnp.asarray(np.asarray(idf_rows, np.float32))
+    table_g = jnp.asarray(np.asarray(table, np.float32))
+    if backend == "ref":
+        compact, count, pivot, maxq, sscores = _jitted_ref()(
+            jnp.asarray(qb_p), jnp.asarray(qmins_p), jnp.asarray(nblks_p),
+            jnp.asarray(bases_p), flens_g, fdata_g, norms_g, idf_g,
+            table_g, jnp.float32(k1p1), slots=slots,
+        )
+        count = np.asarray(count)
+        pivot = np.asarray(pivot)
+        maxq = np.asarray(maxq)
+    else:
+        meta = np.zeros((n + pad, BLOCK_VALS), np.int32)
+        meta[:, PS_META_NBLK] = nblks_p
+        meta[:, PS_META_BASE] = bases_p
+        compact, aux, sscores = pivot_score_blocks(
+            jnp.asarray(qb_p), jnp.asarray(qmins_p), jnp.asarray(meta),
+            flens_g, fdata_g, norms_g, idf_g, table_g, jnp.float32(k1p1),
+            interpret=_resolve_interpret(interpret), slots=slots,
+        )
+        from repro.kernels.blockmax_pivot.kernel import (
+            AUX_COUNT,
+            AUX_MAXQ,
+            AUX_PIVOT,
+        )
+
+        aux = np.asarray(aux)
+        count = aux[:, AUX_COUNT]
+        pivot = aux[:, AUX_PIVOT]
+        maxq = aux[:, AUX_MAXQ]
+    return (
+        np.asarray(compact)[:n].astype(np.int64),
+        count[:n].astype(np.int64),
+        pivot[:n].astype(np.int64),
+        maxq[:n].astype(np.int64),
+        np.asarray(sscores)[:n],
+    )
+
+
+# Machine-readable triple contract (DESIGN.md §10; see vbyte_decode.ops for
+# the role grammar).  f32-bit-exact: the pivot half is integer, the scoring
+# half is the bm25_score contract, and the gather between them uses
+# identical indices on every backend -- so the composition inherits
+# bit-identity from its parts.
+CONTRACT = {
+    "family": "pivot_score",
+    "identity": "f32-bit-exact",
+    "ops": {
+        "pivot_score": {
+            "roles": [
+                "qb",
+                "qmin",
+                "nblk",
+                "base",
+                "flens",
+                "fdata",
+                "norms",
+                "idf",
+                "table",
+                "k1p1",
+            ],
+            "out": [
+                "compact:int64[nr,128]",
+                "count:int64[nr]",
+                "pivot:int64[nr]",
+                "maxq:int64[nr]",
+                "sscores:float32[nr,slots,128]",
+            ],
+            "backends": {
+                "numpy": {
+                    "module": "ops",
+                    "fn": "pivot_score_np",
+                    "params": [
+                        "qb:qb",
+                        "qmins:qmin",
+                        "nblks:nblk",
+                        "bases:base",
+                        "flens:flens",
+                        "fdata:fdata",
+                        "norms:norms",
+                        "idf_rows:idf",
+                        "table:table",
+                        "k1p1:k1p1",
+                        "slots:config",
+                    ],
+                },
+                "ref": {
+                    "module": "ref",
+                    "fn": "pivot_score_ref",
+                    "params": [
+                        "qb:qb",
+                        "qmins:qmin",
+                        "nblks:nblk",
+                        "bases:base",
+                        "flens:flens",
+                        "fdata:fdata",
+                        "norms:norms",
+                        "idf_rows:idf",
+                        "table:table",
+                        "k1p1:k1p1",
+                        "slots:config",
+                    ],
+                },
+                "pallas": {
+                    "module": "kernel",
+                    "fn": "pivot_score_blocks",
+                    "params": [
+                        "qb:qb",
+                        "qmin:qmin",
+                        "meta:staging=nblk+base",
+                        "flens:flens",
+                        "fdata:fdata",
+                        "norms:norms",
+                        "idf_rows:idf",
+                        "table:table",
+                        "k1p1:k1p1",
+                        "interpret:config",
+                        "slots:config",
+                    ],
+                },
+            },
+        },
+    },
+}

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the fused pivot + kept-slot scoring kernel (§13).
+
+Composes the two existing oracles -- ``pivot_select_ref`` (integer, exact
+by construction) and ``score_rows_ref`` (the f32 BM25 contract) -- around
+an in-graph gather of the kept blocks' freq tiles, so the whole WAND
+round (keep-test, compaction, pivot, AND the scores of the surviving
+blocks) is one jitted graph with no host round-trip in between.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.blockmax_pivot.ref import pivot_select_ref
+from repro.kernels.bm25_score.ref import score_rows_ref
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
+
+
+def pivot_score_ref(
+    qb, qmins, nblks, bases, flens, fdata, norms, idf_rows, table, k1p1,
+    slots,
+):
+    """Pivot selection + all-lane scores of the first ``slots`` kept blocks.
+
+    qb / qmins: [nr, 128] int32 bound and minimal-admissible codes; nblks /
+    bases: [nr] int32 valid-lane counts and arena-row bases of the chunks.
+    flens [nb, 128] int32 / fdata [nb, 512] uint8 / norms [nb, 128] (u8
+    codes) / idf_rows [nb] float32 are the FULL resident freq arena --
+    gathered in-graph at the kept rows ``bases + compact[:, :slots]``.
+    table: [256] float32 norm dequant table; k1p1: k1 + 1; slots: static
+    slot budget per chunk row.
+
+    Returns (compact, count, pivot, maxq, sscores) -- the first four as
+    ``pivot_select_ref``, plus sscores [nr, slots, 128] float32: slot s of
+    row r holds the all-lane scores of arena row ``bases[r] +
+    compact[r, s]``.  Slots at or past ``count[r]`` gather row
+    ``clip(bases[r], 0, nb - 1)`` (compact is -1 there), so they hold
+    deterministic garbage -- bit-identical across backends; callers mask
+    with ``count``.
+    """
+    nr = qb.shape[0]
+    compact, count, pivot, maxq = pivot_select_ref(qb, qmins, nblks)
+    nb = flens.shape[0]
+    krows = jnp.clip(
+        bases[:, None] + jnp.maximum(compact[:, :slots], 0), 0, nb - 1
+    )
+    g = krows.reshape(-1)
+    sscores = score_rows_ref(
+        flens[g], fdata[g], norms[g].astype(jnp.int32), idf_rows[g],
+        table, k1p1,
+    ).reshape(nr, slots, BLOCK_VALS)
+    return compact, count, pivot, maxq, sscores

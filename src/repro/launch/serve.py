@@ -36,6 +36,16 @@ with backoff, replica failover, degradation to live lists -- and reports
 availability, degraded fraction, and recovery times.  ``--recover``
 checkpoints the arena up front so DEAD shards restore from it and
 re-admit.
+
+``--loop`` (requires ``--ranked``) serves through the CONTINUOUS-BATCHING
+async engine instead of fixed batches (``repro.serving``, DESIGN.md §13):
+requests arrive on an asyncio loop at ``--offered-qps`` (Poisson) for
+``--duration`` seconds, a deadline-aware batch former coalesces them into
+pow2-bucketed waves (``--batch`` caps the wave, ``--max-delay-ms`` bounds
+the linger, ``--deadline-ms`` sets the per-request SLO, ``--max-queue``
+the backpressure bound), and the report adds sustained QPS, wave
+occupancy, queue depth, deadline misses, and end-to-end latency
+p50/p99/p99.9.  Operator runbook: docs/serving.md.
 """
 
 from __future__ import annotations
@@ -163,6 +173,73 @@ def _print_fault_summary(res, n_queries: int, degraded_q: int) -> None:
     print(f"[serve] shard health: {res.health}")
 
 
+def serve_loop(args, engine, queries) -> None:
+    """The --loop endpoint: open-loop Poisson arrivals through the
+    continuous-batching ``AsyncTopKServer`` (DESIGN.md §13)."""
+    import asyncio
+
+    from repro.serving import AsyncTopKServer, QueueFull
+
+    server = AsyncTopKServer(
+        engine,
+        k=args.topk,
+        max_batch=args.batch,
+        max_queue=args.max_queue,
+        max_delay_s=args.max_delay_ms / 1e3,
+        default_deadline_s=(
+            args.deadline_ms / 1e3 if args.deadline_ms else float("inf")
+        ),
+    )
+
+    async def drive():
+        rng = np.random.default_rng(args.seed + 1)
+        results: list = []
+        t0 = obs.now()
+
+        async def client(q):
+            try:
+                results.append(await server.try_submit(q))
+            except QueueFull:
+                pass  # counted in server.stats["shed"]
+
+        async with server:
+            tasks = []
+            deadline = t0 + args.duration
+            i = 0
+            while obs.now() < deadline:
+                tasks.append(asyncio.ensure_future(
+                    client(queries[i % len(queries)])
+                ))
+                i += 1
+                # Poisson arrivals at the offered rate
+                await asyncio.sleep(rng.exponential(1.0 / args.offered_qps))
+            await asyncio.gather(*tasks)
+        return results, obs.now() - t0
+
+    results, wall = asyncio.run(drive())
+    ok = [r for r in results if not r.expired]
+    lat = [r.latency_s for r in ok]
+    waits = [r.wait_s for r in ok]
+    st, fst = server.stats, server.former.stats
+    print(f"[serve] loop: offered {args.offered_qps:,.0f} q/s for "
+          f"{args.duration:.1f}s -> sustained {len(ok)/wall:,.0f} q/s "
+          f"({len(ok)} served, {st['expired']} expired, {st['shed']} shed, "
+          f"{st['late']} late)")
+    if lat:
+        print(f"[serve] loop latency: "
+              f"p50 {_percentile(lat, 50)*1e3:.2f} ms  "
+              f"p99 {_percentile(lat, 99)*1e3:.2f} ms  "
+              f"p99.9 {_percentile(lat, 99.9)*1e3:.2f} ms  "
+              f"(queue-wait p50 {_percentile(waits, 50)*1e3:.3f} ms)")
+    waves = max(fst["waves"], 1)
+    print(f"[serve] loop waves: {fst['waves']} "
+          f"({fst['full_waves']} full, "
+          f"occupancy {st['served']/(waves*args.batch):.2f}, "
+          f"bucket reuse {fst['bucket_hits']}/{fst['waves']}, "
+          f"{st['padded_queries']} padded)")
+    print(f"[serve] engine stats: {engine.stats}")
+
+
 def serve_ranked(args, rng, corpus) -> None:
     """The --ranked endpoint: batched BM25 top-k over the freq arena."""
     from repro.ranked.bm25 import exhaustive_topk
@@ -186,6 +263,9 @@ def serve_ranked(args, rng, corpus) -> None:
                         resident=args.resident, replicas=args.replicas)
     _print_shard_layout(engine)
     engine.topk_batch(queries[: args.batch], args.topk)  # warm mirror + jit
+    if args.loop:
+        serve_loop(args, engine, queries)
+        return
     resilient = _make_resilient(args, engine)
 
     t0 = obs.now()
@@ -273,6 +353,24 @@ def main() -> None:
                     help="checkpoint the arena up front (OptVB-packed "
                          "sidecars) and restore DEAD shards' sub-arenas "
                          "from it, re-admitting them")
+    ap.add_argument("--loop", action="store_true",
+                    help="serve through the continuous-batching async "
+                         "engine (repro.serving, requires --ranked): "
+                         "Poisson arrivals at --offered-qps for "
+                         "--duration seconds, deadline-aware waves")
+    ap.add_argument("--offered-qps", type=float, default=2_000.0,
+                    help="open-loop arrival rate for --loop (Poisson)")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="seconds of --loop arrivals before draining")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="batch-former linger: a partial wave fires after "
+                         "this long (latency floor vs occupancy trade)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request SLO for --loop; requests past it "
+                         "are expired unserved (0 = no deadline)")
+    ap.add_argument("--max-queue", type=int, default=1_024,
+                    help="bounded request queue for --loop: admissions "
+                         "beyond it shed (backpressure bound)")
     ap.add_argument("--compare-scalar", action="store_true",
                     help="also time the per-query NextGEQ loop (or, with "
                          "--ranked, the exhaustive-scoring oracle) and "
@@ -291,6 +389,11 @@ def main() -> None:
         # the ranked engine has no fused= knob; only boolean-AND serving
         # needs the fused pipeline for sharding
         ap.error("--shards requires the fused engine (drop --no-fused)")
+    if args.loop and not args.ranked:
+        ap.error("--loop serves ranked top-k; add --ranked")
+    if args.loop and (args.faults or args.fault_prob):
+        ap.error("--loop and fault injection are separate lanes; "
+                 "drop --faults/--fault-prob")
 
     server = None
     if args.metrics_port is not None or args.metrics_dump:

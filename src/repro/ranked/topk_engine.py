@@ -88,6 +88,7 @@ from repro.kernels.blockmax_pivot.ops import (
     qmin_for,
 )
 from repro.kernels.bm25_score.ops import bm25_score_rows
+from repro.kernels.pivot_score.kernel import SCORE_SLOTS
 from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
 from repro.kernels.vbyte_decode.ops import default_interpret
 from repro.ranked.bm25 import topk_select
@@ -154,6 +155,8 @@ class TopKEngine:
                 "blocks_total": 0,
                 "pivot_chunks": 0,
                 "score_evictions": 0,  # hot-block score cache flushes (rows)
+                "fused_pivot_chunks": 0,  # cursors through pivot_score (§13)
+                "theta_device_rounds": 0,  # device-carried theta rounds
             },
             engine="topk",
         )
@@ -192,6 +195,11 @@ class TopKEngine:
         self._pivot_fn = None
         self._shard_pivot_fns: list = []
         self._smap_pivot = None
+        # fully-resident round state (DESIGN.md §13): the fused pivot+score
+        # dispatch, the resident row scorer, and the device theta round
+        self._pivot_score_fn = None
+        self._rowscore_fn = None
+        self._theta_fn = None
         self._scache_rows = np.zeros(0, np.int64)  # sorted hot rows
         self._scache = np.zeros((0, BLOCK_VALS), np.float32)
         self.fault_injector = fault_injector
@@ -361,9 +369,24 @@ class TopKEngine:
     # hot-block score cache bound (rows): 2^17 rows x 512 B = 64 MB max
     SCORE_CACHE_ROWS = 1 << 17
 
-    def _score_rows_batch(self, urows: np.ndarray) -> np.ndarray:
-        """[len(urows), 128] f32 lane scores of UNIQUE SORTED arena rows
-        through the fused kernel, cached across batches.
+    def _fetch(self, *arrays) -> list:
+        """THE device->host materialization point of the ranked engine.
+
+        Every fetch on the ranked hot path funnels through this one
+        function -- a plain loop, deliberately not a comprehension, so
+        the sync auditor (``repro.analyze.sync_audit``) attributes every
+        materialization to ONE stable ``(file, fn)`` site and the
+        ``ranked_topk`` ratchet measures residency, not call-site
+        shuffles.  Each round fetches here exactly once per MAX_BUCKET
+        chunk, after the whole round's graph has been dispatched.
+        """
+        out = []
+        for a in arrays:
+            out.append(np.asarray(a))
+        return out
+
+    def _cache_lookup(self, urows: np.ndarray):
+        """Hot-block score cache lookup for UNIQUE SORTED arena rows.
 
         resident="kernel" holds no arena-wide impact mirror -- that is
         the point -- but hot blocks recur across batches (and within one:
@@ -371,10 +394,8 @@ class TopKEngine:
         scoring touch heavily overlapping row sets), so scored rows live
         in a sorted-array hot-block cache with fully vectorized lookups
         (one searchsorted per call; a python dict walk here costs more
-        than the scoring).  The cache is row-BOUNDED, not an
-        unconditional mirror: past ``SCORE_CACHE_ROWS`` it is flushed
-        (counted in ``stats["score_evictions"]``) -- eviction-correct
-        because a re-scored row is bit-identical."""
+        than the scoring).  Returns ``(out [n, 128] f32, hit mask)`` with
+        only the hit rows of ``out`` filled."""
         out = np.empty((len(urows), BLOCK_VALS), np.float32)
         n = len(self._scache_rows)
         if n:
@@ -390,31 +411,109 @@ class TopKEngine:
             nh = int(hit.sum())
             obs.count("ranked_score_cache_rows", nh, kind="hit")
             obs.count("ranked_score_cache_rows", len(urows) - nh, kind="miss")
+        return out, hit
+
+    def _cache_merge(self, mrows: np.ndarray, scored: np.ndarray) -> int:
+        """Insert (SORTED UNIQUE rows, [n, 128] f32 scores) into the
+        hot-block cache; rows already present are skipped (a re-score is
+        bit-identical, so dropping the duplicate is exact).  Returns the
+        number of rows actually inserted.
+
+        The cache is row-BOUNDED, not an unconditional mirror: past
+        ``SCORE_CACHE_ROWS`` it is flushed (counted in
+        ``stats["score_evictions"]``), and an over-budget insert set is
+        truncated so the row bound holds even for one giant batch (mrows
+        is sorted, so the kept prefix keeps the cache sorted too)."""
+        n = len(self._scache_rows)
+        if n:
+            pos = np.minimum(np.searchsorted(self._scache_rows, mrows), n - 1)
+            new = self._scache_rows[pos] != mrows
+            if not new.all():
+                mrows, scored = mrows[new], scored[new]
+        if not len(mrows):
+            return 0
+        if n + len(mrows) > self.SCORE_CACHE_ROWS:
+            self.stats["score_evictions"] += n
+            keep = min(len(mrows), self.SCORE_CACHE_ROWS)
+            self._scache_rows = mrows[:keep].copy()
+            self._scache = scored[:keep].copy()
+        else:
+            rows2 = np.concatenate([self._scache_rows, mrows])
+            order = np.argsort(rows2, kind="stable")
+            self._scache_rows = rows2[order]
+            self._scache = np.concatenate([self._scache, scored])[order]
+        return len(mrows)
+
+    def _build_rowscore_fn(self):
+        """Jitted gather -> score_rows_graph over the RESIDENT freq arena.
+
+        The legacy ``bm25_score_rows`` wrapper gathers rows on the host
+        (one upload of the gathered tiles per call); this keeps the whole
+        sidecar resident and gathers ON DEVICE, so a row-scoring round is
+        one dispatch whose only host traffic is the fetched scores."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.bm25_score.ops import score_rows_graph
+
+        rdev = self.ranked.dev
+        idf_dev = jnp.asarray(self.ranked.idf[self.lob])
+        backend, interpret = self.backend, self.interpret
+        k1p1 = float(self.k1p1)
+
+        def fn(rows):
+            return score_rows_graph(
+                rdev.freq_lens[rows], rdev.freq_data[rows],
+                rdev.norm_q[rows].astype(jnp.int32), idf_dev[rows],
+                rdev.norm_table, k1p1, backend, interpret,
+            )
+
+        return jax.jit(fn)
+
+    def _rowscore_dev(self, mrows: np.ndarray):
+        """ONE resident row-scoring dispatch (pow2 row bucket, padding
+        rows gather row 0 and are sliced off by the caller).  Returns the
+        DEVICE score array -- callers fetch via ``_fetch`` so follow-up
+        graphs (the device theta round) can consume it without a sync."""
+        import jax.numpy as jnp
+
+        if self._rowscore_fn is None:
+            self._rowscore_fn = self._build_rowscore_fn()
+        b = pow2_bucket(len(mrows))
+        rp = np.zeros(b, np.int32)
+        rp[: len(mrows)] = mrows
+        return self._rowscore_fn(jnp.asarray(rp))
+
+    def _score_miss_rows(self, mrows: np.ndarray) -> np.ndarray:
+        """Score UNIQUE SORTED cache-miss rows: resident dispatch on an
+        unsharded device backend, host-gather kernel wrapper otherwise."""
+        if self.sharded is None and self.core.use_device:
+            n = len(mrows)
+            out = np.empty((n, BLOCK_VALS), np.float32)
+            for s in range(0, n, self.MAX_BUCKET):
+                e = min(s + self.MAX_BUCKET, n)
+                res, = self._fetch(self._rowscore_dev(mrows[s:e]))
+                out[s:e] = res[: e - s]
+            return out
+        return bm25_score_rows(
+            self.ranked.freq_lens, self.ranked.freq_data,
+            self.ranked.norm_q, mrows,
+            self.ranked.idf[self.lob[mrows]],
+            self.ranked.norm_table, self.k1p1,
+            backend=self.backend, interpret=self.interpret,
+        )
+
+    def _score_rows_batch(self, urows: np.ndarray) -> np.ndarray:
+        """[len(urows), 128] f32 lane scores of UNIQUE SORTED arena rows,
+        cached across batches (see ``_cache_lookup`` / ``_cache_merge``)."""
+        out, hit = self._cache_lookup(urows)
         miss = ~hit
         if miss.any():
             mrows = urows[miss]
             self.stats["scored_rows"] += len(mrows)
-            scored = bm25_score_rows(
-                self.ranked.freq_lens, self.ranked.freq_data,
-                self.ranked.norm_q, mrows,
-                self.ranked.idf[self.lob[mrows]],
-                self.ranked.norm_table, self.k1p1,
-                backend=self.backend, interpret=self.interpret,
-            )
+            scored = self._score_miss_rows(mrows)
             out[miss] = scored
-            if n + len(mrows) > self.SCORE_CACHE_ROWS:
-                # flush, and truncate an over-budget miss set so the row
-                # bound holds even for one giant batch (mrows is sorted,
-                # so the kept prefix keeps the cache sorted too)
-                self.stats["score_evictions"] += n
-                keep = min(len(mrows), self.SCORE_CACHE_ROWS)
-                self._scache_rows = mrows[:keep].copy()
-                self._scache = scored[:keep].copy()
-            else:
-                rows2 = np.concatenate([self._scache_rows, mrows])
-                order = np.argsort(rows2, kind="stable")
-                self._scache_rows = rows2[order]
-                self._scache = np.concatenate([self._scache, scored])[order]
+            self._cache_merge(mrows, scored)
         return out
 
     def _build_pivot_fn(self, pc):
@@ -451,11 +550,106 @@ class TopKEngine:
             rp[: e - s] = rows[s:e]
             qp[: e - s] = qmins[s:e]
             out, c, _, _ = fn(jnp.asarray(rp), jnp.asarray(qp))
-            kept[s:e] = np.asarray(out)[: e - s]
-            cnt[s:e] = np.asarray(c)[: e - s]
+            out_h, c_h = self._fetch(out, c)
+            kept[s:e] = out_h[: e - s]
+            cnt[s:e] = c_h[: e - s]
         return kept, cnt
 
-    def _pivot_select(self, specs, theta):
+    # fused pivot+score dispatches gather SCORE_SLOTS freq/norm tiles per
+    # cursor (~32 KB each), so they chunk smaller than MAX_BUCKET
+    PIVOT_SCORE_BUCKET = 1_024
+
+    def _build_pivot_score_fn(self, pc):
+        """Jitted gather -> pivot_score_graph: the FUSED round (§13).
+
+        One dispatch selects the kept blocks (bit-identical to
+        ``pivot_graph``: the selection half IS ``pivot_select_blocks``)
+        and decodes + BM25-scores the first ``SCORE_SLOTS`` kept blocks
+        of every cursor in-graph, so the lane-exact candidate filter that
+        used to need a second kernel round-trip rides back with the
+        pivot fetch."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.engine_core import pivot_score_graph
+
+        qb_dev, nblk_dev = pc.dev.qb, pc.dev.nblk
+        base_dev = jnp.asarray(pc.base.astype(np.int32))
+        rdev = self.ranked.dev
+        idf_dev = jnp.asarray(self.ranked.idf[self.lob])
+        backend, interpret = self.backend, self.interpret
+        k1p1 = float(self.k1p1)
+
+        def fn(rows, qmins):
+            return pivot_score_graph(
+                qb_dev[rows], qmins, nblk_dev[rows], base_dev[rows],
+                rdev.freq_lens, rdev.freq_data, rdev.norm_q, idf_dev,
+                rdev.norm_table, k1p1, SCORE_SLOTS, backend, interpret,
+            )
+
+        return jax.jit(fn)
+
+    def _fusable_cursors(self, rows, cur_ij, theta, pc) -> np.ndarray:
+        """FUSED-dispatch routing mask, per pivot cursor (§13).
+
+        A cursor takes the fused pivot+score path when its query's theta
+        is finite (only finite-theta segments get lane-filtered, so only
+        their slot scores will be read) AND its chunk still has blocks
+        missing from the hot-block score cache.  A fully-cached chunk
+        takes the plain pivot -- its lane scores come out of the cache
+        for free -- so the warm steady state pays ZERO fused-gather
+        overhead and the fused path fires exactly where a second
+        row-scoring dispatch would otherwise have been needed."""
+        fin = np.fromiter(
+            (bool(np.isfinite(theta[i])) for i, _ in cur_ij),
+            bool, len(cur_ij),
+        )
+        if not fin.any():
+            return fin
+        base = pc.base[rows]
+        nblk = pc.nblk[rows].astype(np.int64)
+        lo = np.searchsorted(self._scache_rows, base)
+        hi = np.searchsorted(self._scache_rows, base + nblk)
+        return fin & ((hi - lo) < nblk)
+
+    def _pivot_score_dev_on(self, rows, qmins, pc):
+        """Fused dispatch of ``_build_pivot_score_fn``: same bucketing
+        contract as ``_pivot_dev_on`` (pow2 cursor buckets, padding
+        cursors keep nothing), but each fetch also carries the slot
+        scores, which are folded into the hot-block cache here so the
+        candidate filter's ``_score_rows_batch`` finds them already
+        resident.  Returns (kept lanes [n, 128], counts)."""
+        import jax.numpy as jnp
+
+        if self._pivot_score_fn is None:
+            self._pivot_score_fn = self._build_pivot_score_fn(pc)
+        n = len(rows)
+        kept = np.empty((n, BLOCK_VALS), np.int64)
+        cnt = np.empty(n, np.int64)
+        for s in range(0, n, self.PIVOT_SCORE_BUCKET):
+            e = min(s + self.PIVOT_SCORE_BUCKET, n)
+            b = pow2_bucket(e - s)
+            rp = np.zeros(b, np.int32)
+            qp = np.full((b, BLOCK_VALS), QMIN_NONE, np.int32)
+            rp[: e - s] = rows[s:e]
+            qp[: e - s] = qmins[s:e]
+            out, c, _, _, ss = self._pivot_score_fn(
+                jnp.asarray(rp), jnp.asarray(qp)
+            )
+            out_h, c_h, ss_h = self._fetch(out, c, ss)
+            kept[s:e] = out_h[: e - s]
+            cnt[s:e] = c_h[: e - s]
+            ke = out_h[: e - s, :SCORE_SLOTS]
+            valid = ke >= 0
+            if valid.any():
+                grows = (pc.base[rows[s:e]][:, None] + ke)[valid]
+                sc = ss_h[: e - s].reshape(-1, BLOCK_VALS)[valid.reshape(-1)]
+                u, first = np.unique(grows, return_index=True)
+                self.stats["scored_rows"] += self._cache_merge(u, sc[first])
+        self.stats["fused_pivot_chunks"] += n
+        return kept, cnt
+
+    def _pivot_select(self, specs, theta, want_scores: bool = False):
         """Emission + ONE device pivot dispatch for a whole batch.
 
         The host reduces the float admissibility envelope to u8 codes in
@@ -569,7 +763,25 @@ class TopKEngine:
         elif not routed:
             if self._pivot_fn is None:
                 self._pivot_fn = self._build_pivot_fn(pc)
-            kept, cnt = self._pivot_dev_on(self._pivot_fn, rows, qmins_c)
+            # §13: cursors whose slot scores will be read AND whose chunk
+            # is not already hot take the fused pivot+score dispatch; the
+            # rest take the plain pivot (same kept blocks either way)
+            fuse = (
+                self._fusable_cursors(rows, cur_ij, theta, pc)
+                if want_scores
+                else np.zeros(len(rows), bool)
+            )
+            kept = np.empty((len(rows), BLOCK_VALS), np.int64)
+            cnt = np.empty(len(rows), np.int64)
+            plain = ~fuse
+            if plain.any():
+                kept[plain], cnt[plain] = self._pivot_dev_on(
+                    self._pivot_fn, rows[plain], qmins_c[plain]
+                )
+            if fuse.any():
+                kept[fuse], cnt[fuse] = self._pivot_score_dev_on(
+                    rows[fuse], qmins_c[fuse], pc
+                )
             grows = (pc.base[rows][:, None] + kept)[kept >= 0]
         else:
             sa = self.sharded
@@ -661,7 +873,7 @@ class TopKEngine:
         bit-identical across backends and residencies, so the candidate
         sets are too.
         """
-        segments, params = self._pivot_select(specs, theta)
+        segments, params = self._pivot_select(specs, theta, want_scores=True)
         self._flat_init()
         a = self.arena
         out: list[list[np.ndarray]] = [[] for _ in specs]
@@ -766,7 +978,8 @@ class TopKEngine:
                 terms[s:e], docs[s:e], stride, pow2_bucket(e - s)
             )
             res = fn(jnp.asarray(tp), jnp.asarray(pp))
-            out[s:e] = np.asarray(res)[: e - s]
+            res_h, = self._fetch(res)
+            out[s:e] = res_h[: e - s]
         return out
 
     def _contrib_dev(self, terms: np.ndarray, docs: np.ndarray) -> np.ndarray:
@@ -845,6 +1058,142 @@ class TopKEngine:
         return self._contrib_np(terms, docs)
 
     # ------------------------------------------------------------------
+    # device-carried theta (§13): the round-A theta raise + round-B UB
+    # filter ride in the round-A scoring dispatch
+    # ------------------------------------------------------------------
+    def _build_theta_fn(self):
+        """Jitted round-A tail: pair scatter-add -> f32 LOWER BOUNDS of
+        the exact per-doc scores -> k-th lower bound per query -> round-B
+        UB mask.
+
+        Float contract: the exact score of doc slot s is a float64 sum of
+        f32 contributions; the device computes the same sum in f32 plus
+        an abs-sum slack ``asums * eps`` covering every f32 rounding on
+        the path (products, scatter-add order, the f64->f32 base cast --
+        each step is <= 1/2 ulp of a partial bounded by the abs-sum, and
+        eps budgets 4x the op count), so ``lb <= exact`` always.  With
+        theta rounded DOWN and the round-B UBs rounded UP by the caller,
+        the emitted mask is a provable superset of the exact round-B
+        selection {UB >= exact theta2} -- never a subset, so no top-k
+        candidate is ever dropped."""
+        import jax
+        import jax.numpy as jnp
+
+        def fn(
+            scores, dinv, lanes, w, seg, base, ndocs, theta_lo, eps,
+            ub_hi, qid_b, k, cap,
+        ):
+            nqp = ndocs.shape[0]
+            contrib = scores[dinv, lanes] * w
+            sums = base.at[seg].add(contrib)
+            asums = jnp.abs(base).at[seg].add(jnp.abs(contrib))
+            lb = (sums - asums * eps)[:-1].reshape(nqp, cap)
+            slot = jax.lax.broadcasted_iota(jnp.int32, (nqp, cap), 1)
+            lb = jnp.where(slot < ndocs[:, None], lb, -jnp.inf)
+            kth = jax.lax.top_k(lb, k)[0][:, k - 1]
+            theta2 = jnp.where(
+                ndocs >= k, jnp.maximum(theta_lo, kth), theta_lo
+            )
+            return ub_hi >= theta2[qid_b]
+
+        return jax.jit(fn, static_argnames=("k", "cap"))
+
+    def _theta_round_dev(
+        self, specs, sel_a, cap, k, theta, ubs,
+        idx_l, col_l, w_l, out_u, hit, inv, lanes, miss, mrows,
+    ) -> np.ndarray:
+        """Round A as ONE dispatch: score the cache-miss rows resident,
+        scatter the pair contributions into per-(query, doc-slot) f32
+        lower bounds, raise theta on device, and emit the round-B UB
+        mask -- all fetched together (a single ``_fetch``), so the theta
+        broadcast costs no extra host round-trip.
+
+        Fills the miss rows of ``out_u`` (and the hot-block cache) with
+        the fetched scores; returns the mask over the concatenated
+        not-round-A doc slots of every query."""
+        import jax.numpy as jnp
+
+        self.stats["theta_device_rounds"] += 1
+        self.stats["scored_rows"] += len(mrows)
+        nq = len(specs)
+        counts = np.array([int(s.sum()) for s in sel_a], np.int64)
+        capm = int(pow2_bucket(max(int(counts.max()), k)))
+        nqp = int(pow2_bucket(nq, 1))
+        nslot = nqp * capm + 1  # +1: dump slot for padding pairs
+
+        # pair segments: slot = query * capm + compacted doc column
+        qid = np.repeat(
+            np.arange(nq, dtype=np.int64), [len(ix) for ix in idx_l]
+        )
+        col = np.concatenate(col_l) if len(qid) else np.zeros(0, np.int64)
+        w = np.concatenate(w_l) if len(qid) else np.zeros(0, np.float64)
+        seg = qid * capm + col
+        # pairs over CACHED rows accumulate on the host in exact f64 and
+        # enter the device sum as one f32 base term per slot
+        pair_hit = hit[inv]
+        bs64 = np.zeros(nslot, np.float64)
+        if pair_hit.any():
+            hp = np.flatnonzero(pair_hit)
+            np.add.at(
+                bs64, seg[hp],
+                w[hp] * out_u[inv[hp], lanes[hp]].astype(np.float64),
+            )
+        # pairs over rows being scored THIS round stay on device
+        dp = np.flatnonzero(~pair_hit)
+        miss_pos = np.cumsum(miss) - 1  # urows index -> mrows index
+        P = int(pow2_bucket(max(len(dp), 1)))
+        dinv = np.zeros(P, np.int32)
+        dlan = np.zeros(P, np.int32)
+        dw = np.zeros(P, np.float32)
+        dseg = np.full(P, nslot - 1, np.int32)
+        dinv[: len(dp)] = miss_pos[inv[dp]]
+        dlan[: len(dp)] = lanes[dp]
+        dw[: len(dp)] = w[dp].astype(np.float32)
+        dseg[: len(dp)] = seg[dp].astype(np.int32)
+
+        # f32 envelope: theta rounded DOWN, round-B UBs rounded UP
+        ndocs = np.zeros(nqp, np.int32)
+        ndocs[:nq] = np.minimum(counts, capm)
+        theta32 = np.full(nqp, -np.inf, np.float32)
+        theta32[:nq] = np.nextafter(
+            theta.astype(np.float32), np.float32(-np.inf)
+        )
+        ub_l, qid_l = [], []
+        for i in range(nq):
+            nb_i = ~sel_a[i]
+            u = ubs[i][nb_i].astype(np.float32)
+            ub_l.append(np.nextafter(u, np.float32(np.inf)))
+            qid_l.append(np.full(int(nb_i.sum()), i, np.int32))
+        ub_b = np.concatenate(ub_l)
+        n_b = len(ub_b)
+        Bn = int(pow2_bucket(max(n_b, 1)))
+        ubp = np.full(Bn, -np.inf, np.float32)
+        ubp[:n_b] = ub_b
+        qbp = np.zeros(Bn, np.int32)
+        qbp[:n_b] = np.concatenate(qid_l)
+        # abs-sum slack: <= tmax pair adds + products + base cast per
+        # slot, each <= 1 ulp of a partial bounded by the abs-sum; 4x op
+        # count in f32 ulps covers any evaluation order
+        tmax = max((len(t) for t, _, _ in specs), default=1)
+        eps = np.float32(4.0 * (tmax + 4.0) * 2.0 ** -23)
+
+        scores_dev = self._rowscore_dev(mrows)
+        if self._theta_fn is None:
+            self._theta_fn = self._build_theta_fn()
+        mask_dev = self._theta_fn(
+            scores_dev, jnp.asarray(dinv), jnp.asarray(dlan),
+            jnp.asarray(dw), jnp.asarray(dseg),
+            jnp.asarray(bs64.astype(np.float32)), jnp.asarray(ndocs),
+            jnp.asarray(theta32), jnp.asarray(eps), jnp.asarray(ubp),
+            jnp.asarray(qbp), k=k, cap=capm,
+        )
+        miss_sc, mask_h = self._fetch(scores_dev, mask_dev)
+        miss_sc = miss_sc[: len(mrows)]
+        out_u[miss] = miss_sc
+        self._cache_merge(mrows, miss_sc)
+        return mask_h[:n_b]
+
+    # ------------------------------------------------------------------
     # batched bound-filter + exact scoring of per-query candidate sets
     # ------------------------------------------------------------------
     def _score_specs(
@@ -919,9 +1268,9 @@ class TopKEngine:
             else:
                 ubs.append(None)
 
-        def score_subset(sels: list[np.ndarray]):
-            """Exact f64 scores of the selected doc slots of every query,
-            via ONE batched contribution dispatch over the member pairs."""
+        def pairs_for(sels: list[np.ndarray]):
+            """Member-pair segments of the selected doc slots: per query
+            (flat pair index, compacted doc column, multiplicity)."""
             idx_l, col_l, w_l = [], [], []
             for i, (terms, mult, docs) in enumerate(specs):
                 sel = sels[i]
@@ -936,7 +1285,26 @@ class TopKEngine:
                 idx_l.append(cuts[i] + pr * D + pc)
                 col_l.append(colmap[pc])
                 w_l.append(mult[pr])
-            g_idx = np.concatenate(idx_l)
+            return idx_l, col_l, w_l, np.concatenate(idx_l)
+
+        def accumulate(idx_l, col_l, w_l, sels, contrib):
+            """Per-doc exact scores: float64 scatter-add (order-free)."""
+            out, start = [], 0
+            for i in range(nq):
+                n_i = len(idx_l[i])
+                sc = np.zeros(int(sels[i].sum()), np.float64)
+                np.add.at(
+                    sc, col_l[i],
+                    w_l[i] * contrib[start : start + n_i].astype(np.float64),
+                )
+                out.append(sc)
+                start += n_i
+            return out
+
+        def score_subset(sels: list[np.ndarray]):
+            """Exact f64 scores of the selected doc slots of every query,
+            via ONE batched contribution dispatch over the member pairs."""
+            idx_l, col_l, w_l, g_idx = pairs_for(sels)
             self.stats["scored_pairs"] += len(g_idx)
             if self.resident == "kernel":
                 # member pairs pin exact (row, lane) coordinates, so the
@@ -951,17 +1319,7 @@ class TopKEngine:
                 contrib = row_scores[inv, lanes]
             else:
                 contrib = core.flat_scores[pos[g_idx]]
-            out, start = [], 0
-            for i in range(nq):
-                n_i = len(idx_l[i])
-                sc = np.zeros(int(sels[i].sum()), np.float64)
-                np.add.at(
-                    sc, col_l[i],
-                    w_l[i] * contrib[start : start + n_i].astype(np.float64),
-                )
-                out.append(sc)
-                start += n_i
-            return out
+            return accumulate(idx_l, col_l, w_l, sels, contrib)
 
         if theta is None or k is None:
             sels = [np.ones(len(docs), bool) for _, _, docs in specs]
@@ -982,21 +1340,73 @@ class TopKEngine:
             elif len(docs):
                 sel[:] = True
             sel_a.append(sel)
-        scores_a = score_subset(sel_a)
 
-        # ---- raise theta to the k-th true score of round A
+        # ---- round A dispatch; on an unsharded resident backend the
+        # theta raise rides in the SAME dispatch as the round-A scoring
+        # (device-carried theta, §13): an f32 lower-bound top-k on device
+        # emits the round-B UB mask, so round B needs no second
+        # theta-broadcast round-trip.  The authoritative theta2 is still
+        # the exact f64 host value below -- the device mask is only a
+        # provable SUPERSET filter of the exact round-B selection.
+        idx_l, col_l, w_l, g_idx = pairs_for(sel_a)
+        self.stats["scored_pairs"] += len(g_idx)
+        mask_b = None
+        if self.resident == "kernel":
+            g_pos = pos[g_idx]
+            rows_n, lanes = g_pos >> 7, g_pos & (BLOCK_VALS - 1)
+            urows, inv = np.unique(rows_n, return_inverse=True)
+            out_u, hit = self._cache_lookup(urows)
+            miss = ~hit
+            mrows = urows[miss]
+            if (
+                self.sharded is None
+                and self.core.use_device
+                and 0 < len(mrows) <= self.MAX_BUCKET
+            ):
+                mask_b = self._theta_round_dev(
+                    specs, sel_a, cap, k, theta, ubs,
+                    idx_l, col_l, w_l, out_u, hit, inv, lanes, miss, mrows,
+                )
+            elif miss.any():
+                self.stats["scored_rows"] += len(mrows)
+                scored = self._score_miss_rows(mrows)
+                out_u[miss] = scored
+                self._cache_merge(mrows, scored)
+            contrib = out_u[inv, lanes]
+        else:
+            contrib = core.flat_scores[pos[g_idx]]
+        scores_a = accumulate(idx_l, col_l, w_l, sel_a, contrib)
+
+        # ---- raise theta to the k-th true score of round A (exact f64:
+        # the returned theta2 is bit-identical on every path)
         theta2 = theta.copy()
         for i, sc in enumerate(scores_a):
             if len(sc) >= k:
                 kth = np.partition(sc, len(sc) - k)[len(sc) - k]
                 theta2[i] = max(theta2[i], kth)
 
-        # ---- round B: remaining docs whose UB clears the raised theta
+        # ---- round B: remaining docs whose UB clears the raised theta.
+        # The device mask keeps a superset of {UB >= exact theta2} (its
+        # theta is rounded DOWN, the UBs rounded UP), and every kept doc
+        # is scored exactly below -- top-k identity is untouched.
         sel_b = []
-        for i, (_, _, docs) in enumerate(specs):
-            sel = ~sel_a[i] & (ubs[i] >= theta2[i])
-            self.stats["ub_filtered"] += int((~sel_a[i]).sum() - sel.sum())
-            sel_b.append(sel)
+        if mask_b is not None:
+            off = 0
+            for i, (_, _, docs) in enumerate(specs):
+                nb_i = np.flatnonzero(~sel_a[i])
+                m = mask_b[off : off + len(nb_i)]
+                off += len(nb_i)
+                sel = np.zeros(len(docs), bool)
+                sel[nb_i[m]] = True
+                self.stats["ub_filtered"] += int(len(nb_i) - sel.sum())
+                sel_b.append(sel)
+        else:
+            for i, (_, _, docs) in enumerate(specs):
+                sel = ~sel_a[i] & (ubs[i] >= theta2[i])
+                self.stats["ub_filtered"] += int(
+                    (~sel_a[i]).sum() - sel.sum()
+                )
+                sel_b.append(sel)
         scores_b = score_subset(sel_b)
 
         out = []

@@ -168,7 +168,7 @@ def test_hlo_dot_allowlist():
 # ------------------------------------------------------------ sync: checker 3
 def test_sync_audit_matches_baseline():
     measured = sync_audit.audit_hot_paths(backend="ref")
-    assert measured["hot_paths"]["ranked_topk"]["syncs"] == 2
+    assert measured["hot_paths"]["ranked_topk"]["syncs"] == 1
     assert measured["hot_paths"]["boolean_and"]["syncs"] == 1
     assert all(
         m["callbacks"] == 0 for m in measured["hot_paths"].values()

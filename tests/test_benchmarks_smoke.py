@@ -27,6 +27,7 @@ from benchmarks import (  # noqa: E402
     bench_partition_space,
     bench_queries,
     bench_ranked,
+    bench_serve,
     bench_vbyte_family,
     roofline,
 )
@@ -43,6 +44,7 @@ MODULES = {
     "bench_nextgeq": bench_nextgeq,
     "bench_kernels": bench_kernels,
     "bench_ranked": bench_ranked,
+    "bench_serve": bench_serve,
     "bench_obs": bench_obs,
     "roofline": roofline,
 }

@@ -1,0 +1,83 @@
+"""tools/check_docs.py: the docs drift gate (§13 satellite).
+
+The inventories are AST-extracted, so docstrings/comments neither count
+as documentation nor register phantom flags/metrics; the repo itself
+must be drift-free (the same invariant the analyze CI job enforces).
+"""
+
+import pathlib
+import sys
+import textwrap
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_argparse_flags_literal_only(tmp_path):
+    f = tmp_path / "cli.py"
+    f.write_text(textwrap.dedent('''
+        """Docstring mentioning ap.add_argument("--phantom")."""
+        import argparse
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--alpha", type=int)
+        ap.add_argument("-b", "--beta", action="store_true")
+        ap.add_argument("positional")
+        name = "--computed"
+        ap.add_argument(name)
+    '''))
+    assert check_docs.argparse_flags(f) == {"--alpha", "--beta"}
+
+
+def test_obs_metric_names_literal_only(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(textwrap.dedent('''
+        """Example in prose: obs.count("phantom_metric")."""
+        from repro import obs
+
+        def g(n):
+            obs.count("real_counter", 2, kind="hit")
+            obs.set_gauge("real_gauge", 1.0)
+            with obs.timer("real_ms"):
+                pass
+            with obs.span("real_span", path="x"):
+                pass
+            obs.observe(n, 1.0)      # non-literal name: skipped
+            other.count("not_obs")   # wrong receiver: skipped
+    '''))
+    assert check_docs.obs_metric_names(f) == {
+        "real_counter", "real_gauge", "real_ms", "real_span",
+    }
+
+
+def test_repo_inventories_nonempty():
+    flags = check_docs.all_flags()
+    metrics = check_docs.all_metrics()
+    assert "src/repro/launch/serve.py" in flags
+    assert "--loop" in flags["src/repro/launch/serve.py"]
+    assert "src/repro/serving/loop.py" in metrics
+    assert "serve_wave_ms" in metrics["src/repro/serving/loop.py"]
+
+
+def test_empty_corpus_reports_everything():
+    missing = check_docs.missing_flags("")
+    assert ("src/repro/launch/serve.py", "--loop") in missing
+    assert ("benchmarks/run.py", "--json") in missing
+    bad = check_docs.missing_metrics("")
+    assert ("src/repro/serving/loop.py", "serve_queue_depth") in bad
+
+
+def test_metric_match_is_word_bounded():
+    # a superstring does NOT document the name
+    assert check_docs.missing_metrics("serve_queue_depth_total only") == [
+        (src, n) for src, n in check_docs.missing_metrics("")
+        if n != "serve_queue_depth_total"
+    ]
+    md = check_docs.docs_corpus()
+    assert check_docs.missing_metrics(md + " serve_queue_depth ") is not None
+
+
+def test_repo_is_drift_free(capsys):
+    """The committed docs cover every flag and metric -- the CI gate."""
+    assert check_docs.main(["--check"]) == 0
+    assert "check_docs: OK" in capsys.readouterr().out

@@ -1,0 +1,246 @@
+"""Property tests for the FUSED pivot+score kernel family (§13).
+
+Covers the acceptance surface of the fully-resident ranked rounds:
+
+* the fused ``pivot_score`` triple (numpy mirror / jnp ref / pallas) is
+  bit-identical: the integer selection half IS ``pivot_select`` (same
+  compaction, counts, pivot lane, max bound), and the f32 slot scores of
+  every VALID kept slot equal ``bm25_score_rows`` of the same arena rows
+  bit for bit;
+* the engine's fused pivot path fires on device backends (stats
+  ``fused_pivot_chunks``) and the final top-k stays identical to the
+  mirror-resident oracle path on every backend;
+* the device-carried theta round fires cold (stats
+  ``theta_device_rounds``), returns the SAME exact f64 theta2 as the
+  host path, and its round-B keep-set is a superset of the exact
+  selection -- with every shared doc's exact score bit-identical;
+* theta monotonicity: the device round only ever RAISES theta.
+
+Runs under real hypothesis or the seeded shim in tests/_hypothesis_shim.py.
+"""
+
+import numpy as np
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine_core import build_pivot_chunks
+from repro.core.index import build_partitioned_index
+from repro.data.postings import make_ranked_corpus
+from repro.kernels.blockmax_pivot.kernel import QMIN_NONE
+from repro.kernels.blockmax_pivot.ops import pivot_select
+from repro.kernels.bm25_score.ops import bm25_score_rows
+from repro.kernels.pivot_score.kernel import SCORE_SLOTS
+from repro.kernels.pivot_score.ops import pivot_score
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
+from repro.ranked.topk_engine import TopKEngine
+
+BACKENDS = ("numpy", "ref", "pallas")
+PARTS = ("compact", "count", "pivot", "maxq", "sscores")
+
+
+def _mk_corpus(seed, n_lists=6, max_len=1_200, min_len=80):
+    rng = np.random.default_rng(seed)
+    lists, freqs = make_ranked_corpus(
+        rng, n_lists=n_lists, min_len=min_len, max_len=max_len,
+        mean_dense_gap=2.13, frac_dense=0.8,
+    )
+    return build_partitioned_index(lists, "optimal", freqs=freqs), lists
+
+
+def _mk_index(seed, **kw):
+    return _mk_corpus(seed, **kw)[0]
+
+
+def _fused_inputs(idx, rng, n):
+    """Random cursor rows over a REAL arena's pivot chunks, plus the
+    resident freq-arena arrays the fused kernel gathers from."""
+    a = idx.arena
+    r = a.ranked
+    pc = build_pivot_chunks(a)
+    rows = rng.integers(0, len(pc.base), n)
+    qmins = rng.integers(0, QMIN_NONE + 1, (n, BLOCK_VALS))
+    # a few permissive rows so plenty of slots are kept
+    qmins[: max(1, n // 3)] = 0
+    lob = a.part_list[a.part_of_block]
+    args = (
+        pc.qb[rows], qmins, pc.nblk[rows], pc.base[rows],
+        r.freq_lens, r.freq_data, r.norm_q, r.idf[lob].astype(np.float32),
+        r.norm_table, float(r.params.k1 + 1.0),
+    )
+    return args, pc, rows
+
+
+# ---------------------------------------------------------------------------
+# kernel contract
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_pivot_score_backends_bit_identical(seed):
+    idx = _mk_index(seed)
+    rng = np.random.default_rng(seed + 1)
+    args, _, _ = _fused_inputs(idx, rng, int(rng.integers(1, 30)))
+    outs = {be: pivot_score(*args, backend=be) for be in BACKENDS}
+    for be in ("ref", "pallas"):
+        for a, b, part in zip(outs["numpy"], outs[be], PARTS):
+            assert np.array_equal(a, b), (be, part)
+
+
+def test_pivot_score_selection_half_is_pivot_select():
+    idx = _mk_index(2)
+    rng = np.random.default_rng(3)
+    args, _, _ = _fused_inputs(idx, rng, 17)
+    compact, count, pivot, maxq, _ = pivot_score(*args)
+    ref = pivot_select(args[0], args[1], args[2])
+    for a, b, part in zip((compact, count, pivot, maxq), ref, PARTS):
+        assert np.array_equal(a, b), part
+
+
+def test_pivot_score_valid_slots_match_row_scorer():
+    """Every kept slot's lane scores equal bm25_score_rows of the kept
+    global row, bit for bit (invalid slots are masked by count and never
+    compared -- they hold deterministic clamped-gather garbage)."""
+    idx = _mk_index(4)
+    a, r = idx.arena, idx.arena.ranked
+    rng = np.random.default_rng(5)
+    args, pc, rows = _fused_inputs(idx, rng, 21)
+    compact, count, _, _, sscores = pivot_score(*args)
+    lob = a.part_list[a.part_of_block]
+    for i in range(len(rows)):
+        ns = min(int(count[i]), SCORE_SLOTS)
+        if ns == 0:
+            continue
+        grows = pc.base[rows[i]] + compact[i, :ns]
+        want = bm25_score_rows(
+            r.freq_lens, r.freq_data, r.norm_q, grows,
+            r.idf[lob[grows]], r.norm_table, float(r.params.k1 + 1.0),
+        )
+        assert np.array_equal(sscores[i, :ns], want), i
+
+
+# ---------------------------------------------------------------------------
+# engine properties: fused rounds + device-carried theta
+# ---------------------------------------------------------------------------
+
+def _queries(idx, rng, n=10):
+    nl = len(idx.list_sizes)
+    return [rng.integers(0, nl, rng.integers(1, 5)).tolist() for _ in range(n)]
+
+
+@settings(max_examples=2, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_fused_engine_topk_identity(seed):
+    """Top-k results through the fused-round kernel residency stay
+    identical to the mirror-resident numpy oracle on every backend."""
+    idx = _mk_index(seed)
+    queries = _queries(idx, np.random.default_rng(seed + 7))
+    oracle = TopKEngine(idx, backend="numpy", resident="mirror").topk_batch(
+        queries, k=10
+    )
+    for be in BACKENDS:
+        te = TopKEngine(idx, backend=be, resident="kernel")
+        out = te.topk_batch(queries, k=10)
+        for (d1, s1), (d2, s2) in zip(out, oracle):
+            assert np.array_equal(d1, d2), be
+            assert np.array_equal(s1, s2), be
+
+
+def test_fused_pivot_keepset_identity_and_cache_fill():
+    """COLD engine, finite theta: every finite-theta cursor routes
+    through the fused pivot+score dispatch, the kept segments are
+    bit-identical to the plain pivot's, and the fused fetch leaves the
+    kept rows' scores in the hot-block cache (so the candidate filter's
+    row-scoring round finds them resident)."""
+    idx = _mk_index(8)
+    queries = _queries(idx, np.random.default_rng(21), n=6)
+    for be in ("ref", "pallas"):
+        plain = TopKEngine(idx, backend=be, resident="kernel")
+        fused = TopKEngine(idx, backend=be, resident="kernel")
+        specs = [plain._query_spec(q) for q in queries]
+        theta = np.zeros(len(queries))
+        seg_p, par_p = plain._pivot_select(specs, theta)
+        seg_f, par_f = fused._pivot_select(specs, theta, want_scores=True)
+        assert fused.stats["fused_pivot_chunks"] > 0, be
+        assert plain.stats["fused_pivot_chunks"] == 0, be
+        assert par_p == par_f, be
+        assert set(seg_p) == set(seg_f), be
+        for ij in seg_p:
+            assert np.array_equal(seg_p[ij][0], seg_f[ij][0]), (be, ij)
+            assert np.array_equal(seg_p[ij][1], seg_f[ij][1]), (be, ij)
+        # the fused dispatch pre-filled the cache with kept-row scores
+        assert len(fused._scache_rows) > 0, be
+        assert fused.stats["scored_rows"] > 0, be
+        # and a cache-backed re-lookup returns bit-identical scores to a
+        # from-scratch scoring on the plain engine
+        some = fused._scache_rows[: min(64, len(fused._scache_rows))]
+        assert np.array_equal(
+            fused._score_rows_batch(some), plain._score_rows_batch(some)
+        ), be
+
+
+def _uncached_specs(lists, rng, nq=5):
+    """Per-query (terms, mult, candidate docs) touching rows no prior
+    phase has scored -- the cold round-A shape that exercises the device
+    theta round."""
+    specs = []
+    for _ in range(nq):
+        terms = np.unique(rng.integers(0, len(lists), rng.integers(1, 4)))
+        docs = np.unique(np.concatenate([
+            rng.choice(lists[t], size=min(len(lists[t]), 200), replace=False)
+            for t in terms
+        ]).astype(np.int64))
+        specs.append(
+            (terms.astype(np.int64), np.ones(len(terms), np.float64), docs)
+        )
+    return specs
+
+
+def test_device_theta_round_exact_and_superset():
+    idx, lists = _mk_corpus(6)
+    rng = np.random.default_rng(11)
+    specs = _uncached_specs(lists, rng)
+    theta = np.array([-np.inf, 0.5, 1.0, -np.inf, 2.0])
+    k = 5
+    host = TopKEngine(idx, backend="numpy", resident="kernel")
+    out_h, t2_h = host._score_specs(specs, theta.copy(), k)
+    assert host.stats["theta_device_rounds"] == 0
+    for be in ("ref", "pallas"):
+        te = TopKEngine(idx, backend=be, resident="kernel")
+        out_d, t2_d = te._score_specs(specs, theta.copy(), k)
+        assert te.stats["theta_device_rounds"] == 1, be
+        # exact f64 theta2 is bit-identical to the host path, and only
+        # ever raised
+        assert np.array_equal(t2_d, t2_h), be
+        fin = np.isfinite(theta)
+        assert np.all(t2_d[fin] >= theta[fin]), be
+        for (dd, sd), (dh, sh) in zip(out_d, out_h):
+            md = dict(zip(dd.tolist(), sd.tolist()))
+            mh = dict(zip(dh.tolist(), sh.tolist()))
+            # device round-B mask keeps a SUPERSET of the exact selection
+            assert set(mh) <= set(md), be
+            # and every shared doc's exact f64 score is bit-identical
+            for doc in mh:
+                assert md[doc] == mh[doc], (be, doc)
+
+
+def test_device_theta_round_preserves_topk():
+    """End to end: feeding the same specs through the two-round rescore
+    yields the same top-k (docs AND scores) whether theta rode on device
+    or on the host."""
+    idx, lists = _mk_corpus(9)
+    rng = np.random.default_rng(13)
+    specs = _uncached_specs(lists, rng, nq=4)
+    theta = np.zeros(4)
+    k = 8
+    host = TopKEngine(idx, backend="numpy", resident="kernel")
+    out_h, _ = host._score_specs(specs, theta.copy(), k)
+    for be in ("ref", "pallas"):
+        te = TopKEngine(idx, backend=be, resident="kernel")
+        out_d, _ = te._score_specs(specs, theta.copy(), k)
+        assert te.stats["theta_device_rounds"] >= 1, be
+        for (dd, sd), (dh, sh) in zip(out_d, out_h):
+            oh = np.lexsort((dh, -sh))[:k]
+            od = np.lexsort((dd, -sd))[:k]
+            assert np.array_equal(dh[oh], dd[od]), be
+            assert np.array_equal(sh[oh], sd[od]), be

@@ -1,0 +1,152 @@
+#!/usr/bin/env python
+"""Docs drift gate (§13): flags and metric names must stay documented.
+
+Two inventories, both extracted from the AST (docstrings and comments
+never count as documentation-or-emission):
+
+* every ``--flag`` registered via ``add_argument`` in
+  ``src/repro/launch/serve.py`` and ``benchmarks/*.py`` must appear in
+  the docs corpus (README.md + docs/*.md);
+* every metric/span name registered through ``repro.obs`` under
+  ``src/repro`` (``obs.count`` / ``obs.observe`` / ``obs.set_gauge`` /
+  ``obs.timer`` / ``obs.span`` with a literal name) must appear in
+  docs/metrics.md.
+
+Run by the ``analyze`` CI job::
+
+    python tools/check_docs.py --check   # exit 1 on drift
+    python tools/check_docs.py           # print the inventories
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# flag sources the gate covers (ISSUE-9: the operator-facing surfaces)
+FLAG_SOURCES = ("src/repro/launch/serve.py", "benchmarks")
+METRIC_ROOT = "src/repro"
+OBS_FNS = {"count", "observe", "set_gauge", "timer", "span"}
+
+
+def _py_files(rel: str) -> list[pathlib.Path]:
+    p = ROOT / rel
+    return sorted(p.rglob("*.py")) if p.is_dir() else [p]
+
+
+def argparse_flags(path: pathlib.Path) -> set[str]:
+    """Literal ``--flag`` strings passed to any ``add_argument`` call."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    flags = set()
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "add_argument"
+        ):
+            for arg in node.args:
+                if (
+                    isinstance(arg, ast.Constant)
+                    and isinstance(arg.value, str)
+                    and arg.value.startswith("--")
+                ):
+                    flags.add(arg.value)
+    return flags
+
+
+def obs_metric_names(path: pathlib.Path) -> set[str]:
+    """Literal names registered through ``obs.<fn>("name", ...)``."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    names = set()
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in OBS_FNS
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id == "obs"
+            and node.args
+            and isinstance(node.args[0], ast.Constant)
+            and isinstance(node.args[0].value, str)
+        ):
+            names.add(node.args[0].value)
+    return names
+
+
+def all_flags() -> dict[str, set[str]]:
+    return {
+        str(f.relative_to(ROOT)): flags
+        for rel in FLAG_SOURCES
+        for f in _py_files(rel)
+        if (flags := argparse_flags(f))
+    }
+
+
+def all_metrics() -> dict[str, set[str]]:
+    return {
+        str(f.relative_to(ROOT)): names
+        for f in _py_files(METRIC_ROOT)
+        if (names := obs_metric_names(f))
+    }
+
+
+def docs_corpus() -> str:
+    texts = [(ROOT / "README.md").read_text()]
+    texts += [p.read_text() for p in sorted((ROOT / "docs").glob("*.md"))]
+    return "\n".join(texts)
+
+
+def missing_flags(corpus: str) -> list[tuple[str, str]]:
+    return [
+        (src, flag)
+        for src, flags in sorted(all_flags().items())
+        for flag in sorted(flags)
+        if flag not in corpus
+    ]
+
+
+def missing_metrics(metrics_md: str) -> list[tuple[str, str]]:
+    return [
+        (src, name)
+        for src, names in sorted(all_metrics().items())
+        for name in sorted(names)
+        if not re.search(rf"\b{re.escape(name)}\b", metrics_md)
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when a flag or metric is undocumented")
+    args = ap.parse_args(argv)
+
+    corpus = docs_corpus()
+    metrics_md = (ROOT / "docs" / "metrics.md").read_text()
+    bad_flags = missing_flags(corpus)
+    bad_metrics = missing_metrics(metrics_md)
+
+    n_flags = sum(len(v) for v in all_flags().values())
+    n_metrics = len(set().union(*all_metrics().values()))
+    print(f"check_docs: {n_flags} flags across {len(all_flags())} files, "
+          f"{n_metrics} distinct metric names")
+    for src, flag in bad_flags:
+        print(f"  UNDOCUMENTED FLAG {flag} ({src}) -- add it to "
+              f"docs/serving.md or README.md")
+    for src, name in bad_metrics:
+        print(f"  UNDOCUMENTED METRIC {name} ({src}) -- add it to "
+              f"docs/metrics.md")
+    if bad_flags or bad_metrics:
+        print(f"check_docs: DRIFT ({len(bad_flags)} flags, "
+              f"{len(bad_metrics)} metrics)")
+        return 1 if args.check else 0
+    print("check_docs: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
