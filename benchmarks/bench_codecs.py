@@ -1,0 +1,173 @@
+"""Space/speed Pareto: single-codec (VByte/bitvector) vs multi-codec arena.
+
+The DP partitioner is codec-agnostic (the paper's point), so giving it a
+third codec -- Elias-Fano, exact cost ``n*(2 + ceil(log2(u/n)))`` bits plus
+sidecar bytes -- changes only the cost model (DESIGN.md §14).  This bench
+measures what that buys END TO END on two corpus shapes:
+
+* ``clustered`` -- mixed small/medium gaps (the regime where EF's
+  ``2 + log2(u/n)`` bits/int beats VByte's 8 and the bit-vector's
+  ``u/n``): the multi-codec arena must be STRICTLY smaller (asserted).
+* ``uniform`` -- uniform one-VByte-byte gaps where plain VByte already
+  wins everywhere: the codec-aware build must cost nothing (identical
+  arena).
+
+Both boolean AND and ranked BM25 top-k are served from the single-codec
+and the multi-codec arena of the SAME index and asserted bit-identical;
+on the jitted ``ref`` backend the multi-codec arena must stay within
+1.15x of single-codec throughput (perf gate, skipped under --smoke /
+BENCH_PERF_ASSERTS=0).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, latency_fields, perf_asserts, timeit_interleaved
+
+
+def _clustered_corpus(rng, n_lists: int, n: int) -> list[np.ndarray]:
+    """Gaps drawn from {1,2,6,10,20,30}: avg gap ~11.5, squarely in the
+    band (roughly 4..64) where EF's 2+log2(u/n) bits beat both VByte's 8
+    and the bit-vector's u/n."""
+    return [
+        np.cumsum(rng.choice([1, 2, 6, 10, 20, 30], size=n)) - 1
+        for _ in range(n_lists)
+    ]
+
+
+def _uniform_corpus(rng, n_lists: int, n: int) -> list[np.ndarray]:
+    """Gaps uniform in [65, 127]: every gap is exactly one VByte byte
+    (8 bits) while EF needs 2 + log2(~96) ~ 8.6 bits, so plain VByte wins
+    every partition and the codec-aware arena must be byte-identical."""
+    return [
+        np.cumsum(rng.integers(65, 128, size=n)) - 1 for _ in range(n_lists)
+    ]
+
+
+def _ef_fraction(arena) -> float:
+    if arena.block_codec is None:
+        return 0.0
+    from repro.core.arena import CODEC_EF
+
+    return float((arena.block_codec == CODEC_EF).mean())
+
+
+def run(quick: bool = True, smoke: bool = False) -> None:
+    from repro.api import EngineConfig, make_query_engine, make_topk_engine
+    from repro.core.index import build_partitioned_index
+    from repro.data.postings import make_freqs, make_queries
+
+    rng = np.random.default_rng(0)
+    n_lists = 4 if smoke else 8
+    n = 4_000 if smoke else (40_000 if quick else 200_000)
+    n_queries = 16 if smoke else 64
+    backends = ("numpy",) if smoke else ("numpy", "ref")
+    topk = 10
+
+    for shape, corpus in (
+        ("clustered", _clustered_corpus(rng, n_lists, n)),
+        ("uniform", _uniform_corpus(rng, n_lists, n)),
+    ):
+        freqs = make_freqs(rng, corpus)
+        # serialized-index comparison needs both cost models to drive the
+        # DP; the ARENA comparison below uses the codec-aware index alone
+        idx_legacy = build_partitioned_index(
+            corpus, "optimal", freqs=freqs, codecs="svb"
+        )
+        idx = build_partitioned_index(
+            corpus, "optimal", freqs=freqs, codecs="auto"
+        )
+        emit(f"codecs_{shape}_bpi", idx.bits_per_int(),
+             f"bpi_auto={idx.bits_per_int():.3f} "
+             f"bpi_svb={idx_legacy.bits_per_int():.3f}",
+             bpi_auto=idx.bits_per_int(), bpi_svb=idx_legacy.bits_per_int())
+        assert idx.bits_per_int() <= idx_legacy.bits_per_int() + 1e-9, (
+            "a 3-codec cost model can never serialize larger than 2-codec"
+        )
+
+        # single- vs multi-codec arena of the SAME partitioning: identical
+        # rows, only the per-block codec differs
+        arena_s = idx.arena_for("svb")
+        arena_m = idx.arena_for("auto")
+        frac = _ef_fraction(arena_m)
+        emit(f"codecs_{shape}_arena_bytes", arena_m.nbytes(),
+             f"multi_mb={arena_m.nbytes()/1e6:.2f} "
+             f"svb_mb={arena_s.nbytes()/1e6:.2f} ef_blocks={frac:.2f}",
+             arena_bytes_multi=arena_m.nbytes(),
+             arena_bytes_svb=arena_s.nbytes(), ef_block_frac=frac)
+        if shape == "clustered":
+            # the acceptance gate: codec-aware partitioning must SAVE
+            # space where EF wins (correctness of the cost model, never
+            # skipped)
+            assert frac > 0.0, "clustered corpus chose no EF blocks"
+            assert arena_m.nbytes() < arena_s.nbytes(), (
+                f"multi-codec arena not smaller: {arena_m.nbytes()} vs "
+                f"{arena_s.nbytes()}"
+            )
+        else:
+            assert arena_m.block_codec is None, (
+                "uniform corpus must produce a single-codec (identity) arena"
+            )
+
+        queries = [
+            [int(t) for t in q]
+            for q in make_queries(rng, n_lists, n_queries, arity=2)
+        ]
+        for backend in backends:
+            cfg = EngineConfig(backend=backend, codec_policy="svb")
+            eng_s = make_query_engine(idx, cfg)
+            eng_m = make_query_engine(idx, cfg.replace(codec_policy="auto"))
+            want = eng_s.intersect_batch(queries)  # also warms jit
+            got = eng_m.intersect_batch(queries)
+            for q, w, g in zip(queries, want, got):
+                assert np.array_equal(w, g), f"AND mismatch on {q}"
+
+            lat_s, lat_m = timeit_interleaved(
+                lambda: eng_s.intersect_batch(queries),
+                lambda: eng_m.intersect_batch(queries),
+                repeat=3 if quick else 5,
+            )
+            ratio = min(lat_m) / max(min(lat_s), 1e-9)
+            emit(f"codecs_{shape}_and_{backend}",
+                 min(lat_m) / len(queries) * 1e6,
+                 f"multi_vs_svb={ratio:.3f}x",
+                 ratio=ratio,
+                 **latency_fields(lat_m, per=len(queries)))
+            if backend == "ref" and not smoke and perf_asserts():
+                assert ratio <= 1.15, (
+                    f"multi-codec AND throughput ratio {ratio:.3f} > 1.15 "
+                    f"on {shape}"
+                )
+
+            topk_s = make_topk_engine(idx, cfg)
+            topk_m = make_topk_engine(idx, cfg.replace(codec_policy="auto"))
+            want_k = topk_s.topk_batch(queries, topk)
+            got_k = topk_m.topk_batch(queries, topk)
+            for q, (wd, ws), (gd, gs) in zip(queries, want_k, got_k):
+                assert np.array_equal(wd, gd) and np.array_equal(ws, gs), (
+                    f"top-k mismatch on {q}"
+                )
+
+            lat_ks, lat_km = timeit_interleaved(
+                lambda: topk_s.topk_batch(queries, topk),
+                lambda: topk_m.topk_batch(queries, topk),
+                repeat=3 if quick else 5,
+            )
+            kratio = min(lat_km) / max(min(lat_ks), 1e-9)
+            emit(f"codecs_{shape}_topk_{backend}",
+                 min(lat_km) / len(queries) * 1e6,
+                 f"multi_vs_svb={kratio:.3f}x",
+                 ratio=kratio,
+                 **latency_fields(lat_km, per=len(queries)))
+            if backend == "ref" and not smoke and perf_asserts():
+                assert kratio <= 1.15, (
+                    f"multi-codec top-k throughput ratio {kratio:.3f} > "
+                    f"1.15 on {shape}"
+                )
+
+
+if __name__ == "__main__":
+    from .common import cli_main
+
+    cli_main(run)

@@ -73,13 +73,13 @@ def _serve_all(res, queries, batch):
 
 
 def run(quick: bool = True, smoke: bool = False, shards: int = 4) -> None:
-    from repro.core.query_engine import QueryEngine
+    from repro.api import EngineConfig, make_query_engine
     from repro.checkpoint import CheckpointManager
     from repro.distributed.resilient import ResilientEngine, ShardFaultInjector
 
     rng = np.random.default_rng(0)
     idx, queries, batch = _workload(rng, smoke, quick)
-    plain = QueryEngine(idx, backend="numpy")
+    plain = make_query_engine(idx, EngineConfig(backend="numpy"))
     samples, want = timeit_samples(
         lambda: plain.intersect_batch(queries), repeat=2
     )
@@ -95,8 +95,11 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 4) -> None:
     # ---- lane 1: replica failover (kill one shard mid-run)
     inj = ShardFaultInjector(at_batches=(1,), shards=(0,))
     res = ResilientEngine(
-        QueryEngine(idx, backend="numpy", shards=shards, replicas=2,
-                    shard_mesh=None),
+        make_query_engine(
+            idx,
+            EngineConfig(backend="numpy", shards=shards, replicas=2,
+                         shard_mesh=None),
+        ),
         injector=inj, backoff_s=1e-4,
     )
     got, lat, degraded_q = _serve_all(res, queries, batch)
@@ -119,7 +122,11 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 4) -> None:
         manager = CheckpointManager(d, async_save=False)
         inj = ShardFaultInjector(at_batches=(1,), shards=(1,))
         res = ResilientEngine(
-            QueryEngine(idx, backend="numpy", shards=shards, shard_mesh=None),
+            make_query_engine(
+                idx,
+                EngineConfig(backend="numpy", shards=shards,
+                             shard_mesh=None),
+            ),
             injector=inj, manager=manager, backoff_s=1e-4,
         )
         res.checkpoint()
@@ -145,7 +152,10 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 4) -> None:
     # ---- lane 3: graceful degradation (no replicas, no checkpoint)
     inj = ShardFaultInjector(at_batches=(1,), shards=(2 % shards,))
     res = ResilientEngine(
-        QueryEngine(idx, backend="numpy", shards=shards, shard_mesh=None),
+        make_query_engine(
+            idx,
+            EngineConfig(backend="numpy", shards=shards, shard_mesh=None),
+        ),
         injector=inj, backoff_s=1e-4,
     )
     got, lat, degraded_q = _serve_all(res, queries, batch)

@@ -14,8 +14,8 @@ from .common import emit, latency_fields, timeit, timeit_samples
 
 
 def run(quick: bool = True, smoke: bool = False) -> None:
+    from repro.api import EngineConfig, make_query_engine
     from repro.core.index import build_partitioned_index
-    from repro.core.query_engine import QueryEngine
     from repro.data.postings import make_posting_list
 
     rng = np.random.default_rng(0)
@@ -29,8 +29,12 @@ def run(quick: bool = True, smoke: bool = False) -> None:
     }
     for case, seq in cases.items():
         idx = build_partitioned_index([seq], "optimal")
-        pr1 = QueryEngine(idx, backend="numpy", fused=False)
-        fused = QueryEngine(idx, backend="numpy", fused=True)
+        pr1 = make_query_engine(
+            idx, EngineConfig(backend="numpy", fused=False)
+        )
+        fused = make_query_engine(
+            idx, EngineConfig(backend="numpy", fused=True)
+        )
         for jump in jumps:
             probes = seq[np.arange(0, n - jump - 1, jump)][:n_probes]
 

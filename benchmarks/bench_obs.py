@@ -107,7 +107,7 @@ def run(quick: bool = True, smoke: bool = False) -> None:
 
 
 def _run(quick: bool, smoke: bool) -> None:
-    from repro.core.query_engine import QueryEngine
+    from repro.api import EngineConfig, make_query_engine
 
     rng = np.random.default_rng(0)
     idx, queries = _workload(rng, smoke, quick)
@@ -128,7 +128,7 @@ def _run(quick: bool, smoke: bool) -> None:
          ns_per_call=ns_span)
 
     # ---- lane 2: engine A/B, layer off vs on
-    eng = QueryEngine(idx, backend="numpy")
+    eng = make_query_engine(idx, EngineConfig(backend="numpy"))
     eng.intersect_batch(queries)  # warm caches / stats paths
 
     obs.enable(False)

@@ -29,8 +29,8 @@ def _oracle(corpus, q):
 
 
 def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
+    from repro.api import EngineConfig, make_query_engine
     from repro.core.index import build_partitioned_index, build_unpartitioned_index
-    from repro.core.query_engine import QueryEngine
 
     from repro.data.postings import make_corpus, make_queries
 
@@ -67,7 +67,9 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
              f"bpi={idx.bits_per_int():.2f};results={total_s}",
              ops_per_sec=len(queries) / dt_s)
 
-        pr1 = QueryEngine(idx, backend="numpy", fused=False)
+        pr1 = make_query_engine(
+            idx, EngineConfig(backend="numpy", fused=False)
+        )
         pr1.intersect_batch(queries[:2])  # warm the cache
         lat1, _ = timeit_samples(
             lambda: pr1.intersect_batch(queries), repeat=repeat
@@ -78,7 +80,9 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
              f"speedup_vs_scalar={per_q_s/per_q_b:.1f}x",
              **latency_fields(lat1, per=len(queries)))
 
-        fused = QueryEngine(idx, backend="numpy", fused=True)
+        fused = make_query_engine(
+            idx, EngineConfig(backend="numpy", fused=True)
+        )
         fused.intersect_batch(queries[:2])  # warm the flat arena
         lat2, results = timeit_samples(
             lambda: fused.intersect_batch(queries), repeat=repeat
@@ -110,7 +114,7 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
     # fused engine over the jnp oracle of the Pallas decode_search kernel
     # (the jitted device pipeline; on TPU/GPU use backend="pallas")
     idx = build_partitioned_index(corpus, "optimal")
-    engine_k = QueryEngine(idx, backend="ref", fused=True)
+    engine_k = make_query_engine(idx, EngineConfig(backend="ref", fused=True))
     engine_k.intersect_batch(queries[:2])
 
     lat_k, results_k = timeit_samples(
@@ -134,8 +138,10 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
     )
     terms_d = np.tile(base_t, dup)
     probes_d = np.tile(base_p, dup)
-    eng_g = QueryEngine(idx, backend="ref", fused=True)
-    eng_u = QueryEngine(idx, backend="ref", fused=True, group=False)
+    eng_g = make_query_engine(idx, EngineConfig(backend="ref", fused=True))
+    eng_u = make_query_engine(
+        idx, EngineConfig(backend="ref", fused=True, group=False)
+    )
     eng_g.search_batch(terms_d, probes_d)  # warm jit (grouped bucket)
     eng_u.search_batch(terms_d, probes_d)  # warm jit (full bucket)
     lat_g, out_g = timeit_samples(
@@ -162,8 +168,10 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
     # sharding must cost NOTHING vs the unsharded fused engine -- sharding
     # is device placement, and the numpy path serves through the same
     # global flat mirror -- and results are identical.
-    eng_u = QueryEngine(idx, backend="numpy", fused=True)
-    eng_s = QueryEngine(idx, backend="numpy", fused=True, shards=shards)
+    eng_u = make_query_engine(idx, EngineConfig(backend="numpy", fused=True))
+    eng_s = make_query_engine(
+        idx, EngineConfig(backend="numpy", fused=True, shards=shards)
+    )
     eng_u.intersect_batch(queries[:2])  # warm both flat mirrors
     eng_s.intersect_batch(queries[:2])
     lat_u, res_u = timeit_samples(
@@ -188,7 +196,9 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
 
     # the device pipeline sharded: per-shard jitted dispatch (shard_map
     # when one device per shard exists -- on 1-CPU runs only shards=1 maps)
-    eng_sr = QueryEngine(idx, backend="ref", fused=True, shards=shards)
+    eng_sr = make_query_engine(
+        idx, EngineConfig(backend="ref", fused=True, shards=shards)
+    )
     eng_sr.intersect_batch(queries[:2])
     lat_sr, res_sr = timeit_samples(
         lambda: eng_sr.intersect_batch(queries), repeat=max(2, repeat - 4)

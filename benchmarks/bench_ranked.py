@@ -42,8 +42,8 @@ def _corpora(rng, quick: bool, smoke: bool):
 def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
     from repro.core.index import build_partitioned_index
     from repro.data.postings import make_queries
+    from repro.api import EngineConfig, make_topk_engine
     from repro.ranked.bm25 import exhaustive_topk
-    from repro.ranked.topk_engine import TopKEngine
 
     rng = np.random.default_rng(7)
     k = 10
@@ -69,7 +69,8 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
                                                        "pallas"]
         dt_mirror_ref = None
         for be in backends:
-            eng = TopKEngine(idx, backend=be, seed_blocks=2)
+            eng = make_topk_engine(idx, EngineConfig(backend=be),
+                                   seed_blocks=2)
             eng.topk_batch(queries, k)  # warm: mirror build + jit traces
             lat_e, got = timeit_samples(
                 lambda: eng.topk_batch(queries, k),
@@ -102,8 +103,10 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
         # per block, no sync per pruning round), rescoring through the
         # fused bm25 kernel.  Must stay IDENTICAL to the oracle and, on
         # CPU, must not regress vs the mirror path it replaces.
-        eng_k = TopKEngine(idx, backend="ref", seed_blocks=2,
-                           resident="kernel")
+        eng_k = make_topk_engine(
+            idx, EngineConfig(backend="ref", resident="kernel"),
+            seed_blocks=2,
+        )
         eng_k.topk_batch(queries, k)  # warm: jit traces + chunk tiles
         lat_k, got_k = timeit_samples(
             lambda: eng_k.topk_batch(queries, k), repeat=2 if smoke else 7,
@@ -141,8 +144,11 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
         # ISSUE-5: sharded kernel residency -- the pivot dispatch routes
         # per shard (qmins broadcast, kept blocks scattered back) and the
         # top-k stays identical to the oracle
-        eng_sk = TopKEngine(idx, backend="ref", seed_blocks=2,
-                            shards=shards, resident="kernel")
+        eng_sk = make_topk_engine(
+            idx,
+            EngineConfig(backend="ref", shards=shards, resident="kernel"),
+            seed_blocks=2,
+        )
         eng_sk.topk_batch(queries, k)
         lat_sk, got_sk = timeit_samples(
             lambda: eng_sk.topk_batch(queries, k), repeat=2 if smoke else 5,
@@ -161,7 +167,9 @@ def run(quick: bool = True, smoke: bool = False, shards: int = 2) -> None:
 
         # ISSUE-4: the sharded-arena lane -- list-hash routed top-k stays
         # IDENTICAL to the oracle (and hence to every unsharded engine)
-        eng_s = TopKEngine(idx, backend="ref", seed_blocks=2, shards=shards)
+        eng_s = make_topk_engine(
+            idx, EngineConfig(backend="ref", shards=shards), seed_blocks=2
+        )
         eng_s.topk_batch(queries, k)  # warm mirror + per-shard jit traces
         lat_s, got_s = timeit_samples(
             lambda: eng_s.topk_batch(queries, k), repeat=2 if smoke else 5,

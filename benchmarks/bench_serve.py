@@ -63,15 +63,16 @@ def _closed_loop(server, queries, clients: int, per_client: int):
 
 
 def run(quick: bool = True, smoke: bool = False) -> None:
+    from repro.api import EngineConfig, make_topk_engine
     from repro.data.postings import make_queries
-    from repro.ranked.topk_engine import TopKEngine
     from repro.serving import AsyncTopKServer
 
     rng = np.random.default_rng(23)
     k = 10
     idx = _corpus(rng, smoke)
-    engine = TopKEngine(idx, backend="ref", seed_blocks=2,
-                        resident="kernel")
+    engine = make_topk_engine(
+        idx, EngineConfig(backend="ref", resident="kernel"), seed_blocks=2
+    )
     queries = [
         [int(t) for t in q]
         for ar in (2, 3)

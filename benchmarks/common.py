@@ -63,6 +63,26 @@ def timeit(fn, *args, repeat=3, number=1):
     return best, out
 
 
+def timeit_interleaved(fn_a, fn_b, repeat=5):
+    """Wall-time samples for two COMPETING callables, A/B alternated
+    within every round.
+
+    Timing A's window fully before B's bakes whatever the machine was
+    doing during the second window straight into the A/B ratio;
+    interleaving spreads load drift over both sides so min(a)/min(b)
+    stays a property of the code, not of the neighbour's cron job.
+    """
+    sa, sb = [], []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn_a()
+        sa.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        sb.append(time.perf_counter() - t0)
+    return sa, sb
+
+
 def timeit_samples(fn, *args, repeat=5):
     """All per-call wall times (seconds) plus the last output -- the raw
     samples behind the p50/p99 fields of the JSON records."""

@@ -26,6 +26,7 @@ from repro import obs
 
 from . import (
     bench_build_time,
+    bench_codecs,
     bench_competitors,
     bench_faults,
     bench_fig1_distribution,
@@ -55,6 +56,7 @@ MODULES = {
     "serve": bench_serve,
     "roofline": roofline,
     "obs": bench_obs,
+    "codecs": bench_codecs,
 }
 
 # history entries kept per BENCH_*.json: enough trajectory for the
@@ -70,6 +72,7 @@ JSON_GROUPS = {
     "ranked": "ranked",
     "serve": "serve",
     "obs": "obs",
+    "codecs": "codecs",
 }
 
 

@@ -36,7 +36,7 @@ import re
 from repro.analyze.discovery import SRC_ROOT
 from repro.analyze.report import Finding
 
-REQUIRED_FAMILIES = ("bm25_score", "blockmax_pivot", "vbyte_decode")
+REQUIRED_FAMILIES = ("bm25_score", "blockmax_pivot", "vbyte_decode", "ef_search")
 IDENTITY_CLASSES = ("integer", "f32-bit-exact")
 BACKENDS = ("numpy", "ref", "pallas")
 LOCAL_ROLES = ("gather", "config")  # backend-local, excluded from agreement

@@ -1,8 +1,8 @@
 """FMA/contraction sanitizer (checker 2 of ``repro.analyze``; DESIGN.md §10).
 
 Compiles the single-source jit-graph halves the engines are built
-from (``engine_core.GRAPH_CONTRACTS``: locate / decode_search / pivot /
-pivot_score / score_rows / score_probe) with synthetic gathered-row
+from (``engine_core.GRAPH_CONTRACTS``: locate / decode_search / ef_search /
+pivot / pivot_score / score_rows / score_probe) with synthetic gathered-row
 arguments, then walks the
 OPTIMIZED HLO -- the op stream XLA actually runs, after fusion -- with the
 shared walker of ``launch.hlo_walker`` and asserts the identity class each
@@ -127,11 +127,13 @@ def graph_specs(backend: str = "ref"):
 
     from repro.core.engine_core import (
         decode_search_graph,
+        ef_search_graph,
         locate_graph,
         pivot_graph,
         pivot_score_graph,
     )
     from repro.kernels.bm25_score.ops import score_probe_graph, score_rows_graph
+    from repro.kernels.ef_search.kernel import EF_HI_WORDS
     from repro.kernels.vbyte_decode.kernel import BLOCK_BYTES, BLOCK_VALS, BM
 
     nr, nb, stride = BM, 64, 131
@@ -151,12 +153,18 @@ def graph_specs(backend: str = "ref"):
     qb = jnp.asarray(np.zeros((nr, BLOCK_VALS), np.int32))
     qmins = jnp.asarray(np.zeros((nr, BLOCK_VALS), np.int32))
     nblk = jnp.asarray(np.full(nr, BLOCK_VALS, np.int32))
+    ef_lo = jnp.asarray(np.zeros((nr, BLOCK_VALS), np.int32))
+    ef_hi = jnp.asarray(np.zeros((nr, EF_HI_WORDS), np.int32))
+    ef_lb = jnp.asarray(np.zeros(nr, np.int32))
 
     def locate(t, p):
         return locate_graph(keys, offs, stride, nb, t, p)
 
     def decode_search(ln, d, b, p):
         return decode_search_graph(ln, d, b, p, backend, False)
+
+    def ef_search(l, h, lb, b, p):
+        return ef_search_graph(l, h, lb, b, p, backend, False)
 
     def score_probe(ln, d, fl, fd, nm, b, p, i, tb, k):
         return score_probe_graph(ln, d, fl, fd, nm, b, p, i, tb, k, backend, False)
@@ -175,6 +183,7 @@ def graph_specs(backend: str = "ref"):
     return {
         "locate_graph": (locate, (terms, probes)),
         "decode_search_graph": (decode_search, (lens, data, base, pe)),
+        "ef_search_graph": (ef_search, (ef_lo, ef_hi, ef_lb, base, pe)),
         "score_probe_graph": (
             score_probe,
             (lens, data, lens, data, norms, base, pe, idf, table, k1p1),

@@ -136,12 +136,12 @@ def audit_hot_paths(backend: str = "ref") -> dict:
         WARM_QUERIES,
         tiny_ranked_index,
     )
-    from repro.core.query_engine import QueryEngine
-    from repro.ranked.topk_engine import TopKEngine
+    from repro.api import EngineConfig, make_query_engine, make_topk_engine
 
     index = tiny_ranked_index()
-    qe = QueryEngine(index, backend=backend)
-    te = TopKEngine(index, backend=backend, resident="kernel")
+    cfg = EngineConfig(backend=backend)
+    qe = make_query_engine(index, cfg)
+    te = make_topk_engine(index, cfg.replace(resident="kernel"))
     qe.intersect_batch(WARM_QUERIES)
     te.topk_batch(WARM_QUERIES, k=5)
 

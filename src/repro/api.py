@@ -1,0 +1,177 @@
+"""Unified engine-construction facade (DESIGN.md §14).
+
+Engine construction had grown a kwarg sprawl: every caller (the serving
+loop, six benchmark drivers, the resilience layer, tests) threaded its own
+subset of ``backend= / shards= / cache_bytes= / resident= / ...`` through
+``QueryEngine`` and ``TopKEngine``, and new engine options meant touching
+every call site.  ``EngineConfig`` is the one frozen record of every
+engine option; ``make_query_engine`` / ``make_topk_engine`` build the
+engines from it, and the engines themselves accept ``config=`` directly.
+
+Legacy keywords keep working -- ``QueryEngine(idx, backend="ref")`` is
+untouched -- through one coercion point (``coerce_config``): keywords
+alone are silently lifted into a config; a keyword that CONFLICTS with an
+explicit ``config=`` wins but emits a ``DeprecationWarning`` (the two
+sources disagree, and the keyword path is the deprecated one); an unknown
+keyword raises ``TypeError`` naming this module (previously ``TopKEngine``
+silently ignored typos).
+
+``EngineConfig`` round-trips JSON (``to_json`` / ``from_json``) for config
+files (``serve.py --config``), and ``from_args`` lifts an ``argparse``
+namespace -- the serving flags map 1:1 onto fields.  ``fault_injector``
+is a live object and is deliberately NOT serializable: ``to_json`` raises
+if one is set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from dataclasses import dataclass
+
+#: sentinel distinguishing "caller passed this keyword" from "default"
+UNSET = type("_Unset", (), {"__repr__": lambda s: "UNSET"})()
+
+CODEC_POLICIES = ("svb", "auto", "ef")
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Every engine-construction option, in one frozen record.
+
+    Fields not meaningful to an engine are ignored by it (``resident`` by
+    ``QueryEngine``; ``fused`` / ``group`` / the cache bounds by
+    ``TopKEngine``) -- one config can build both engines of a serving
+    process.
+    """
+
+    backend: str = "auto"          # "auto" | "numpy" | "ref" | "pallas"
+    fused: bool = True             # QueryEngine: fused locate->decode path
+    group: bool = True             # QueryEngine: group duplicate cursors
+    resident: str = "auto"         # TopKEngine: "auto" | "mirror" | "kernel"
+    codec_policy: str = "auto"     # arena codec: "svb" | "auto" | "ef"
+    shards: int | None = None      # list-hash shard count (None = unsharded)
+    shard_mesh: object = "auto"    # "auto" | None | a Mesh with "shard" axis
+    replicas: int = 1              # replica placement factor (R <= S)
+    cache_parts: int = 32_768      # QueryEngine LRU entry bound
+    cache_bytes: int = 256 << 20   # QueryEngine LRU/mirror byte budget
+    fault_injector: object = None  # live ShardFaultInjector (not serialized)
+
+    def __post_init__(self):
+        if self.codec_policy not in CODEC_POLICIES:
+            raise ValueError(
+                f"codec_policy must be one of {CODEC_POLICIES}, got "
+                f"{self.codec_policy!r}"
+            )
+
+    def replace(self, **updates) -> "EngineConfig":
+        """A copy with the given fields replaced (frozen-dataclass update)."""
+        return dataclasses.replace(self, **updates)
+
+    # ------------------------------------------------------------------
+    # JSON round-trip (serve.py --config files)
+    # ------------------------------------------------------------------
+    def to_json(self) -> str:
+        if self.fault_injector is not None:
+            raise ValueError(
+                "fault_injector is a live object and cannot be serialized; "
+                "clear it (cfg.replace(fault_injector=None)) before to_json()"
+            )
+        if self.shard_mesh not in ("auto", None):
+            raise ValueError(
+                "an explicit shard_mesh (a Mesh object) cannot be "
+                "serialized; use 'auto' or None in serialized configs"
+            )
+        d = dataclasses.asdict(self)
+        del d["fault_injector"]
+        return json.dumps(d, indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "EngineConfig":
+        d = json.loads(text)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(
+                f"unknown EngineConfig field(s) in JSON: {sorted(unknown)}"
+            )
+        if "fault_injector" in d:
+            raise ValueError("fault_injector cannot come from JSON")
+        return cls(**d)
+
+    @classmethod
+    def from_args(cls, ns) -> "EngineConfig":
+        """Lift an argparse namespace (``launch.serve`` flags) into a config.
+
+        A ``--config FILE`` JSON (``ns.config``) supplies the base; any
+        recognized flag present on the namespace overrides its field.
+        ``--codec`` maps to ``codec_policy``.
+        """
+        base = cls()
+        path = getattr(ns, "config", None)
+        if path:
+            with open(path) as fh:
+                base = cls.from_json(fh.read())
+        updates = {}
+        for name in (
+            "backend", "fused", "group", "resident", "shards", "shard_mesh",
+            "replicas", "cache_parts", "cache_bytes",
+        ):
+            val = getattr(ns, name, None)
+            if val is not None:
+                updates[name] = val
+        codec = getattr(ns, "codec", None)
+        if codec is not None:
+            updates["codec_policy"] = codec
+        return base.replace(**updates) if updates else base
+
+
+def coerce_config(engine: str, config, explicit: dict, extra: dict):
+    """Resolve ``config=`` plus legacy keywords into one ``EngineConfig``.
+
+    THE compatibility point the engines call from ``__init__``: ``explicit``
+    maps each legacy keyword to its passed value (``UNSET`` when the caller
+    left it alone); ``extra`` holds unrecognized ``**kwargs``.  Keywords
+    alone lift silently; a keyword disagreeing with an explicit config wins
+    with a ``DeprecationWarning``; unknown keywords raise ``TypeError``.
+    """
+    if extra:
+        bad = ", ".join(sorted(extra))
+        raise TypeError(
+            f"{engine} got unexpected keyword argument(s): {bad}. Engine "
+            "options are the fields of repro.api.EngineConfig -- pass "
+            "config=EngineConfig(...) or one of its field names as a "
+            "keyword."
+        )
+    cfg = config if config is not None else EngineConfig()
+    updates = {}
+    for name, val in explicit.items():
+        if val is UNSET:
+            continue
+        if config is not None and val != getattr(cfg, name):
+            warnings.warn(
+                f"{engine}: keyword {name}={val!r} overrides "
+                f"config.{name}={getattr(cfg, name)!r}; passing both is "
+                "deprecated -- put the value in the EngineConfig",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        updates[name] = val
+    return cfg.replace(**updates) if updates else cfg
+
+
+def make_query_engine(index, config: EngineConfig | None = None):
+    """Boolean/NextGEQ engine over ``index`` from one ``EngineConfig``."""
+    from repro.core.query_engine import QueryEngine
+
+    return QueryEngine(index, config=config or EngineConfig())
+
+
+def make_topk_engine(index, config: EngineConfig | None = None, **kwargs):
+    """BM25 top-k engine over ``index`` from one ``EngineConfig``.
+
+    ``kwargs`` passes through non-config engine knobs (``seed_blocks``).
+    """
+    from repro.ranked.topk_engine import TopKEngine
+
+    return TopKEngine(index, config=config or EngineConfig(), **kwargs)

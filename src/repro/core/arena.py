@@ -29,6 +29,20 @@ Per-block sidecars make every block self-decoding and directly searchable:
 ``device_ok`` says whether the int32 key space is wide enough (it is unless
 ``n_lists * stride`` overflows 31 bits -- then the numpy path serves).
 
+MULTI-CODEC arenas (DESIGN.md §14): under ``codec_policy="auto"`` blocks of
+Elias-Fano-tagged partitions (and under ``"ef"`` every eligible block) are
+stored as fixed-width EF tiles (``ef_lo`` / ``ef_hi`` / ``ef_lbits``, 308
+bytes per block) instead of Stream-VByte rows, served by
+``repro.kernels.ef_search``.  ``block_codec[b]`` tags each block (0 = SVB,
+1 = EF) and ``codec_row[b]`` gives its row WITHIN its codec's arrays --
+``lens`` / ``data`` then hold only the SVB rows, so the arena actually
+shrinks.  The locate sidecars (``block_base`` / ``block_keys`` /
+``lane_valid``) and the ranked sidecar stay per-BLOCK and codec-agnostic:
+one searchsorted still locates every cursor, only the decode is dispatched
+per codec.  Single-codec arenas keep ``block_codec = None`` and the exact
+row-identity layout of PR 1 -- every existing path is byte-for-byte
+unchanged.
+
 When the index carries a freq stream (``index.has_freqs``), the transcode
 also builds the RANKED sidecar (DESIGN.md §5): the per-posting term
 frequencies re-encoded into PARALLEL Stream-VByte blocks (``freq_lens`` /
@@ -50,6 +64,11 @@ import numpy as np
 from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
 
 TAG_VBYTE = 0
+TAG_EF = 2  # mirrors repro.core.index (which imports this module)
+
+CODEC_SVB = 0  # block_codec values
+CODEC_EF = 1
+CODEC_POLICIES = ("svb", "auto", "ef")
 
 
 @dataclass
@@ -119,7 +138,19 @@ class DeviceArena:
     n_blocks: int = 0
     device_ok: bool = True
     ranked: RankedSidecar | None = None
+    # multi-codec layout (None on single-codec arenas: lens/data rows are
+    # then block rows, the PR 1 identity layout)
+    block_codec: np.ndarray | None = None  # [n_blocks] uint8  0=SVB 1=EF
+    codec_row: np.ndarray | None = None    # [n_blocks] int64  row in codec
+    ef_lo: np.ndarray | None = None        # [n_ef, 128] uint16 low bits
+    ef_hi: np.ndarray | None = None        # [n_ef, 24] uint16  high words
+    ef_lbits: np.ndarray | None = None     # [n_ef] uint8  l per tile
     _dev: object = field(default=None, repr=False, compare=False)
+
+    @property
+    def multi(self) -> bool:
+        """True when blocks mix codecs (lens/data hold SVB rows only)."""
+        return self.block_codec is not None
 
     @property
     def dev(self):
@@ -139,20 +170,55 @@ class DeviceArena:
                     self.list_blk_offsets.astype(np.int32)
                 ),
             )
+            if self.block_codec is not None:
+                self._dev.block_codec = jnp.asarray(
+                    self.block_codec.astype(np.int32)
+                )
+                self._dev.codec_row = jnp.asarray(
+                    self.codec_row.astype(np.int32)
+                )
+                self._dev.ef_lo = jnp.asarray(self.ef_lo.astype(np.int32))
+                self._dev.ef_hi = jnp.asarray(self.ef_hi.astype(np.int32))
+                self._dev.ef_lbits = jnp.asarray(
+                    self.ef_lbits.astype(np.int32)
+                )
         return self._dev
 
     def nbytes(self) -> int:
-        return int(
+        total = int(
             self.lens.nbytes + self.data.nbytes + self.block_base.nbytes
             + self.block_keys.nbytes + self.lane_valid.nbytes
         ) + (self.ranked.nbytes() if self.ranked is not None else 0)
+        if self.block_codec is not None:
+            total += int(
+                self.block_codec.nbytes + self.codec_row.nbytes
+                + self.ef_lo.nbytes + self.ef_hi.nbytes
+                + self.ef_lbits.nbytes
+            )
+        return total
 
 
-def build_arena(index) -> DeviceArena:
-    """Transcode every partition of ``index`` into the block arena."""
+def build_arena(index, codec_policy: str = "auto") -> DeviceArena:
+    """Transcode every partition of ``index`` into the block arena.
+
+    ``codec_policy`` picks the per-BLOCK storage codec: ``"svb"`` forces
+    the all-Stream-VByte layout of PR 1; ``"auto"`` stores the blocks of
+    Elias-Fano-TAGGED partitions as EF tiles where block-eligible;
+    ``"ef"`` stores EVERY eligible block as an EF tile regardless of the
+    partition's serialized tag.  When no block ends up EF (e.g. ``"auto"``
+    over an index built with ``codecs="svb"``), the arena is returned in
+    the single-codec identity layout (``block_codec is None``).
+    """
     from repro.core.bitvector import bitvector_decode
+    from repro.core.eliasfano import ef_decode
     from repro.core.vbyte import vbyte_decode
     from repro.kernels.vbyte_decode.ops import pack_blocks
+
+    if codec_policy not in CODEC_POLICIES:
+        raise ValueError(
+            f"codec_policy must be one of {CODEC_POLICIES}, got "
+            f"{codec_policy!r}"
+        )
 
     n_parts = len(index.endpoints)
     sizes = index.sizes.astype(np.int64)
@@ -192,6 +258,9 @@ def build_arena(index) -> DeviceArena:
         if index.tags[p] == TAG_VBYTE:
             g = vbyte_decode(index.payload[off:end], size).astype(np.int64)
             vals = base + np.cumsum(g + 1)
+        elif index.tags[p] == TAG_EF:
+            vals = ef_decode(index.payload[off:end], size) + base + 1
+            g = np.diff(vals, prepend=base) - 1
         else:
             universe = int(index.endpoints[p]) - base
             vals = bitvector_decode(index.payload[off:end], universe) + base + 1
@@ -210,7 +279,39 @@ def build_arena(index) -> DeviceArena:
             tf_m1[s : s + size] = index._decode_partition_freqs(p) - 1
             norm_q[s : s + size] = q_norms[vals]
 
-    lens, data, _ = pack_blocks(gaps_m1)
+    # per-BLOCK codec split (§14): EF tiles where the policy + per-block
+    # eligibility allow, Stream-VByte rows (compacted) for the rest
+    block_codec = codec_row = ef_lo = ef_hi = ef_lbits = None
+    svb_gaps = gaps_m1
+    if codec_policy != "svb" and nb:
+        from repro.kernels.ef_search.ops import (
+            ef_block_eligible,
+            ef_pack_blocks,
+        )
+
+        blk_vals = block_base[:, None] + np.cumsum(
+            gaps_m1.reshape(nb, BLOCK_VALS).astype(np.int64) + 1, axis=1
+        )
+        want = (
+            np.repeat(np.asarray(index.tags) == TAG_EF, n_blk)
+            if codec_policy == "auto"
+            else np.ones(nb, bool)
+        )
+        ef_mask = want & ef_block_eligible(blk_vals, block_base)
+        if ef_mask.any():
+            block_codec = np.where(ef_mask, CODEC_EF, CODEC_SVB).astype(
+                np.uint8
+            )
+            # row of each block WITHIN its codec's arrays (rows stay in
+            # block order per codec, so gathered rows remain ascending)
+            codec_row = np.zeros(nb, np.int64)
+            codec_row[~ef_mask] = np.arange(int((~ef_mask).sum()))
+            codec_row[ef_mask] = np.arange(int(ef_mask.sum()))
+            ef_lo, ef_hi, ef_lbits = ef_pack_blocks(
+                blk_vals[ef_mask], block_base[ef_mask]
+            )
+            svb_gaps = gaps_m1.reshape(nb, BLOCK_VALS)[~ef_mask].reshape(-1)
+    lens, data, _ = pack_blocks(svb_gaps)
 
     stride = int(index.endpoints.max()) + 2 if n_parts else 2
     block_keys = block_last + part_list[
@@ -249,6 +350,11 @@ def build_arena(index) -> DeviceArena:
         n_blocks=nb,
         device_ok=bool(device_ok),
         ranked=ranked,
+        block_codec=block_codec,
+        codec_row=codec_row,
+        ef_lo=ef_lo,
+        ef_hi=ef_hi,
+        ef_lbits=ef_lbits,
     )
 
 

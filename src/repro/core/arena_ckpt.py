@@ -51,6 +51,14 @@ UNRANKED_KEYS = (
     "sizes",
     "stride",
 )
+# multi-codec arenas (DESIGN.md §14) append their codec split + EF tiles
+MULTICODEC_KEYS = (
+    "block_codec",
+    "codec_row",
+    "ef_hi",
+    "ef_lbits",
+    "ef_lo",
+)
 RANKED_KEYS = UNRANKED_KEYS + (
     "bm25_b",
     "bm25_k1",
@@ -109,14 +117,25 @@ def arena_to_tree(a: DeviceArena) -> dict:
             bm25_k1=np.float64(r.params.k1),
             bm25_b=np.float64(r.params.b),
         )
+    if a.block_codec is not None:
+        tree.update(
+            block_codec=a.block_codec,
+            codec_row=a.codec_row,
+            ef_lo=a.ef_lo,
+            ef_hi=a.ef_hi,
+            ef_lbits=a.ef_lbits,
+        )
     return tree
 
 
-def arena_template(ranked: bool) -> dict:
+def arena_template(ranked: bool, multi: bool = False) -> dict:
     """Same-treedef dummy tree for ``CheckpointManager.restore`` (which
     needs the target STRUCTURE only; leaf values are ignored)."""
     z = np.zeros(0, np.int64)
-    return {k: z for k in (RANKED_KEYS if ranked else UNRANKED_KEYS)}
+    keys = RANKED_KEYS if ranked else UNRANKED_KEYS
+    if multi:
+        keys = keys + MULTICODEC_KEYS
+    return {k: z for k in keys}
 
 
 def tree_to_arena(tree: dict) -> DeviceArena:
@@ -155,6 +174,13 @@ def tree_to_arena(tree: dict) -> DeviceArena:
         n_blocks=int(tree["n_blocks"]),
         device_ok=bool(tree["device_ok"]),
         ranked=ranked,
+        block_codec=(
+            np.asarray(tree["block_codec"]) if "block_codec" in tree else None
+        ),
+        codec_row=np.asarray(tree["codec_row"]) if "codec_row" in tree else None,
+        ef_lo=np.asarray(tree["ef_lo"]) if "ef_lo" in tree else None,
+        ef_hi=np.asarray(tree["ef_hi"]) if "ef_hi" in tree else None,
+        ef_lbits=np.asarray(tree["ef_lbits"]) if "ef_lbits" in tree else None,
     )
 
 
@@ -180,8 +206,13 @@ def restore_arena(manager, step: int | None = None):
     last_err: Exception | None = None
     for s in candidates:
         try:
-            ranked = "freq_lens" in manager.manifest(s)["treedef"]
-            tree, got = manager.restore(arena_template(ranked), step=s)
+            treedef = manager.manifest(s)["treedef"]
+            tree, got = manager.restore(
+                arena_template(
+                    "freq_lens" in treedef, multi="block_codec" in treedef
+                ),
+                step=s,
+            )
             return tree_to_arena(tree), got
         except RESTORE_ERRORS as e:
             if step is not None:

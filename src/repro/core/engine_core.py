@@ -265,6 +265,47 @@ def build_pivot_chunks(arena) -> PivotChunks:
     return PivotChunks(qb=qb, nblk=nblk, base=base, offsets=offsets)
 
 
+def decode_rows_values(arena, rows, backend, interpret):
+    """[len(rows), 128] absolute docIDs of arena block rows, codec-aware.
+
+    THE host row-decode of the stack: every flat-mirror build, row-cache
+    miss, and list decode funnels through here.  Single-codec arenas keep
+    the PR 1 path (rows index ``lens``/``data`` directly); multi-codec
+    arenas (§14) bucket the rows by ``block_codec`` and decode each
+    codec's tiles with its own decoder -- Stream-VByte rows via
+    ``decode_block_rows`` + cumsum, EF tiles via ``ef_decode_rows_np`` --
+    then scatter back in row order.
+    """
+    a = arena
+    rows = np.asarray(rows, dtype=np.int64)
+    if a.block_codec is None:
+        gaps = decode_block_rows(
+            a.lens[rows], a.data[rows], backend=backend, interpret=interpret
+        )
+        return a.block_base[rows][:, None] + np.cumsum(gaps + 1, axis=1)
+    from repro.core.arena import CODEC_EF
+    from repro.kernels.ef_search.ops import ef_decode_rows_np
+
+    out = np.empty((len(rows), BLOCK_VALS), np.int64)
+    cr = a.codec_row[rows]
+    ef_j = np.nonzero(a.block_codec[rows] == CODEC_EF)[0]
+    svb_j = np.nonzero(a.block_codec[rows] != CODEC_EF)[0]
+    if len(svb_j):
+        r = cr[svb_j]
+        gaps = decode_block_rows(
+            a.lens[r], a.data[r], backend=backend, interpret=interpret
+        )
+        out[svb_j] = a.block_base[rows[svb_j]][:, None] + np.cumsum(
+            gaps + 1, axis=1
+        )
+    if len(ef_j):
+        r = cr[ef_j]
+        out[ef_j] = ef_decode_rows_np(
+            a.ef_lo[r], a.ef_hi[r], a.ef_lbits[r], a.block_base[rows[ef_j]]
+        )
+    return out
+
+
 def decode_search_graph(lens_g, data_g, base_g, pe, backend, interpret):
     """Fused decode+NextGEQ over GATHERED rows -> (value, rank_in).
 
@@ -290,6 +331,37 @@ def decode_search_graph(lens_g, data_g, base_g, pe, backend, interpret):
     return decode_search_ref(lens_g, data_g, base_g, pe)
 
 
+def ef_search_graph(lo_g, hi_g, lbits_g, base_g, pe, backend, interpret):
+    """Fused Elias-Fano NextGEQ over GATHERED EF tiles -> (value, rank_in).
+
+    ``decode_search_graph``'s twin for the EF half of a multi-codec arena
+    (§14): same (value, rank) output contract, same staging discipline --
+    pallas packs the high words + per-row scalars into the META tile, ref
+    calls the jnp oracle.  Integer contract, bit-identical across
+    backends.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.ef_search.kernel import (
+        EF_HI_WORDS,
+        EFMETA_BASE,
+        EFMETA_LBITS,
+        EFMETA_PROBE,
+        ef_search_blocks,
+    )
+    from repro.kernels.ef_search.ref import ef_search_ref
+
+    if backend == "pallas":
+        meta = jnp.zeros((pe.shape[0], BLOCK_VALS), jnp.int32)
+        meta = meta.at[:, :EF_HI_WORDS].set(hi_g)
+        meta = meta.at[:, EFMETA_LBITS].set(lbits_g)
+        meta = meta.at[:, EFMETA_BASE].set(base_g)
+        meta = meta.at[:, EFMETA_PROBE].set(pe)
+        out = ef_search_blocks(lo_g, meta, interpret=interpret)
+        return out[:, 0], out[:, 1]
+    return ef_search_ref(lo_g, hi_g, lbits_g, base_g, pe)
+
+
 # Identity registry of the single-source jit-graph halves, checked by the
 # HLO sanitizer (repro.analyze.hlo_check; DESIGN.md §10).  "integer" graphs
 # must lower to float-free optimized HLO; "f32-bit-exact" graphs may use f32
@@ -302,6 +374,10 @@ GRAPH_CONTRACTS = {
         "identity": "integer",
     },
     "decode_search_graph": {
+        "module": "repro.core.engine_core",
+        "identity": "integer",
+    },
+    "ef_search_graph": {
         "module": "repro.core.engine_core",
         "identity": "integer",
     },
@@ -388,6 +464,7 @@ class EngineCore:
         self.lane_end: np.ndarray | None = None
         self.flat_ok = None  # None = undecided, False = budget refused
         self._jax_fn = None
+        self._ef_jax_fn = None
 
     # ------------------------------------------------------------------
     # LRU cache (decoded rows / partitions / lists), byte- and count-bounded
@@ -434,15 +511,14 @@ class EngineCore:
                 self.flat_ok = False  # budget refused: per-call decode
                 return False
             with obs.span("flat_init", backend=self.mirror_backend):
-                gaps = decode_block_rows(
-                    a.lens[: a.n_blocks],
-                    a.data[: a.n_blocks],
+                vals = decode_rows_values(
+                    a,
+                    np.arange(a.n_blocks, dtype=np.int64),
                     backend=self.mirror_backend,
                     interpret=self.interpret,
                 )
             self.stats["kernel_calls"] += 1
             self.stats["decoded_rows"] += a.n_blocks
-            vals = a.block_base[:, None] + np.cumsum(gaps + 1, axis=1)
             # one sentinel lane so a past-the-end searchsorted result is
             # still a valid gather index (masked via lane_end afterwards)
             self.flat_vals = np.append(vals.reshape(-1), -1)
@@ -490,15 +566,11 @@ class EngineCore:
                 out[j] = got
         if miss_j:
             miss_rows = rows[miss_j]
-            gaps = decode_block_rows(
-                a.lens[miss_rows],
-                a.data[miss_rows],
-                backend=self.backend,
-                interpret=self.interpret,
+            vals = decode_rows_values(
+                a, miss_rows, backend=self.backend, interpret=self.interpret
             )
             self.stats["kernel_calls"] += 1
             self.stats["decoded_rows"] += len(miss_rows)
-            vals = a.block_base[miss_rows][:, None] + np.cumsum(gaps + 1, axis=1)
             out[miss_j] = vals
             # cache at most a budget's worth of this batch's rows (the
             # most recently decoded): caching a miss set larger than the
@@ -589,14 +661,19 @@ class EngineCore:
         import jax.numpy as jnp
 
         dev = self.arena.dev
+        multi = self.arena.block_codec is not None
         locate = build_locate_dev(self.arena)
         backend, interpret = self.backend, self.interpret
 
         def fn(terms, probes):
             rows, pe, past = locate(terms, probes)
+            # multi-codec arenas store SVB tiles compacted: the gather goes
+            # through codec_row (EF blocks alias row 0, but every cursor
+            # reaching this fn was bucketed onto an SVB block by the host)
+            sr = dev.codec_row[rows] if multi else rows
             value, rank_in = decode_search_graph(
-                dev.lens[rows],
-                dev.data[rows],
+                dev.lens[sr],
+                dev.data[sr],
                 dev.block_base[rows],
                 pe,
                 backend,
@@ -608,24 +685,96 @@ class EngineCore:
 
         return jax.jit(fn)
 
+    def _build_ef_jax_fn(self):
+        """Jitted locate -> EF-NextGEQ pipeline (multi-codec arenas, §14).
+
+        The EF twin of ``_build_jax_fn``: same locate graph, same rank
+        arithmetic, ``ef_search_graph`` in place of ``decode_search_graph``
+        with the tile gather routed through ``codec_row``.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        dev = self.arena.dev
+        locate = build_locate_dev(self.arena)
+        backend, interpret = self.backend, self.interpret
+
+        def fn(terms, probes):
+            rows, pe, past = locate(terms, probes)
+            er = dev.codec_row[rows]
+            value, rank_in = ef_search_graph(
+                dev.ef_lo[er],
+                dev.ef_hi[er],
+                dev.ef_lbits[er],
+                dev.block_base[rows],
+                pe,
+                backend,
+                interpret,
+            )
+            part = dev.part_of_block[rows]
+            rank = (rows - dev.first_blk[part]) * BLOCK_VALS + rank_in
+            return jnp.where(past, -1, value), jnp.where(past, -1, rank)
+
+        return jax.jit(fn)
+
+    def _dispatch_jax(self, fn, terms, probes):
+        """Stage one cursor bucket and run one jitted pipeline over it."""
+        import jax.numpy as jnp
+
+        n = len(terms)
+        tp, pp = stage_cursors(terms, probes, self.arena.stride, pow2_bucket(n))
+        value, rank = fn(jnp.asarray(tp), jnp.asarray(pp))
+        return (
+            np.asarray(value)[:n].astype(np.int64),
+            np.asarray(rank)[:n].astype(np.int64),
+        )
+
     def search_jax(self, terms, probes):
         """Device fused pipeline, jitted end-to-end over the resident arena.
 
         Cursor counts are padded to power-of-two buckets so jit traces are
         reused across batches; padding cursors probe list 0 at docID 0 and
         are sliced away.  One host sync at the end (the result fetch).
-        """
-        import jax.numpy as jnp
 
-        n = len(terms)
-        tp, pp = stage_cursors(terms, probes, self.arena.stride, pow2_bucket(n))
+        Multi-codec arenas add a HOST pre-pass: the same searchsorted that
+        the device pipeline opens with, run once on the host purely to read
+        each located block's ``block_codec`` tag, buckets the cursors per
+        codec; then ONE fused dispatch per codec per wave resolves its
+        bucket (each jitted fn re-locates on device -- the graphs stay
+        single-source and the HLO contracts unchanged).  The scatter back
+        into batch order is pure indexing, so results are independent of
+        the codec split -- bit-identical to the single-codec arena.
+        """
+        a = self.arena
         if self._jax_fn is None:
             self._jax_fn = self._build_jax_fn()
-        value, rank = self._jax_fn(jnp.asarray(tp), jnp.asarray(pp))
-        return (
-            np.asarray(value)[:n].astype(np.int64),
-            np.asarray(rank)[:n].astype(np.int64),
+        if a.block_codec is None:
+            return self._dispatch_jax(self._jax_fn, terms, probes)
+        from repro.core.arena import CODEC_EF
+
+        terms = np.asarray(terms, dtype=np.int64)
+        probes = np.asarray(probes, dtype=np.int64)
+        pc = np.clip(probes, 0, a.stride - 1)
+        k = np.searchsorted(a.block_keys, pc + terms * a.stride, side="left")
+        codec = a.block_codec[np.minimum(k, a.n_blocks - 1)]
+        ef_j = np.nonzero(codec == CODEC_EF)[0]
+        n = len(terms)
+        if not len(ef_j):
+            return self._dispatch_jax(self._jax_fn, terms, probes)
+        if self._ef_jax_fn is None:
+            self._ef_jax_fn = self._build_ef_jax_fn()
+        if len(ef_j) == n:
+            return self._dispatch_jax(self._ef_jax_fn, terms, probes)
+        svb_j = np.nonzero(codec != CODEC_EF)[0]
+        value = np.empty(n, np.int64)
+        rank = np.empty(n, np.int64)
+        value[svb_j], rank[svb_j] = self._dispatch_jax(
+            self._jax_fn, terms[svb_j], probes[svb_j]
         )
+        value[ef_j], rank[ef_j] = self._dispatch_jax(
+            self._ef_jax_fn, terms[ef_j], probes[ef_j]
+        )
+        return value, rank
 
     @property
     def use_device(self) -> bool:

@@ -4,13 +4,21 @@ Layout (arena style, all flat numpy arrays -> directly shardable / shippable
 to device):
 
   L1 (per partition): ``endpoints`` (last docID), ``sizes``, ``tags``
-      (0 = VByte, 1 = bit-vector), ``offsets`` (byte offset into L2).
+      (0 = VByte, 1 = bit-vector, 2 = Elias-Fano), ``offsets`` (byte offset
+      into L2).
   L2: one concatenated ``uint8`` payload buffer.
   Per list: ``list_part_offsets`` slicing the L1 arrays, plus the list length.
 
 VByte partitions store the plain-VByte bytes of ``gap - 1`` (see costs.py);
 bit-vector partitions store the packed characteristic bitmap of the re-based
-values over ``universe = sum(gaps)`` bits.
+values over ``universe = sum(gaps)`` bits; Elias-Fano partitions store the
+high/low split of ``core.eliasfano`` (DESIGN.md §14).  The DP partitioner is
+codec-agnostic (the paper's point): with ``codecs="auto"`` each partition
+independently picks the codec with the smallest EXACT serialized payload
+(ties prefer VByte, then bitvector -- deterministic), still in linear time;
+``codecs="svb"`` (default) keeps the legacy 2-way VByte/bitvector choice
+byte-identically, and ``codecs="ef"`` prefers Elias-Fano wherever the
+partition is EF-eligible (universe < 2^23; see ``core.eliasfano``).
 
 Ranked retrieval (DESIGN.md §5) adds an OPTIONAL second payload stream:
 per-posting term frequencies, VByte-encoded (``tf - 1``) per partition into
@@ -40,6 +48,12 @@ import numpy as np
 
 from .bitvector import bitvector_decode, bitvector_encode
 from .costs import DEFAULT_F, gaps_from_sorted
+from .eliasfano import (
+    EF_UNIVERSE_MAX,
+    ef_decode,
+    ef_encode,
+    ef_payload_bytes,
+)
 from .partition import (
     optimal_partitioning,
     partition_payload_costs,
@@ -49,6 +63,9 @@ from .vbyte import vbyte_decode, vbyte_encode
 
 TAG_VBYTE = 0
 TAG_BITVECTOR = 1
+TAG_EF = 2
+
+CODEC_POLICIES = ("svb", "auto", "ef")
 
 
 @dataclass
@@ -67,8 +84,14 @@ class PartitionedIndex:
     freq_offsets: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
     freq_payload: np.ndarray = field(default_factory=lambda: np.zeros(0, np.uint8))
     doc_lens: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    # codec-choice policy the builder used for the L2 payloads ("svb" =
+    # legacy 2-way VByte/bitvector, "auto"/"ef" may tag TAG_EF partitions)
+    codecs: str = "svb"
     _engine: object = field(default=None, repr=False, compare=False)
     _arena: object = field(default=None, repr=False, compare=False)
+    _arena_cache: dict = field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     @property
     def has_freqs(self) -> bool:
@@ -104,10 +127,30 @@ class PartitionedIndex:
         searches over -- see ``repro.core.arena``.
         """
         if self._arena is None:
+            self._arena = self.arena_for("auto")
+        return self._arena
+
+    def arena_for(self, codec_policy: str = "auto"):
+        """The block arena under one codec policy, cached per policy.
+
+        ``"auto"`` follows the index's partition tags (an all-SVB arena
+        for legacy indexes -- byte-identical to the pre-multi-codec
+        build); ``"svb"`` forces every partition into Stream-VByte tiles
+        (the single-codec baseline the Pareto bench compares against);
+        ``"ef"`` forces EF tiles wherever the block is EF-eligible.
+        """
+        if codec_policy not in CODEC_POLICIES:
+            raise ValueError(
+                f"unknown codec policy {codec_policy!r}: "
+                f"expected one of {CODEC_POLICIES}"
+            )
+        got = self._arena_cache.get(codec_policy)
+        if got is None:
             from .arena import build_arena
 
-            self._arena = build_arena(self)
-        return self._arena
+            got = build_arena(self, codec_policy=codec_policy)
+            self._arena_cache[codec_policy] = got
+        return got
 
     # ---------------- stats ----------------
     def space_bits(self) -> int:
@@ -133,6 +176,8 @@ class PartitionedIndex:
         if self.tags[p] == TAG_VBYTE:
             gaps = vbyte_decode(self.payload[off:end], size).astype(np.int64) + 1
             return base + np.cumsum(gaps)
+        if self.tags[p] == TAG_EF:
+            return ef_decode(self.payload[off:end], size) + base + 1
         universe = int(self.endpoints[p]) - base
         rebased = bitvector_decode(self.payload[off:end], universe)
         return rebased + base + 1
@@ -217,7 +262,34 @@ class PartitionedIndex:
         return np.asarray(out, dtype=np.int64)
 
 
-def _encode_partitions(seq: np.ndarray, P: np.ndarray, F: int):
+def _choose_codec(n: int, u_ef: int, ce_: int, cb_: int, codecs: str) -> int:
+    """Per-partition codec tag under one policy; EXACT serialized bytes.
+
+    ``u_ef = endpoint - base - 1`` (the largest rebased value), ``ce_`` /
+    ``cb_`` the VByte / bitvector payload BIT costs from
+    ``partition_payload_costs``.  The 3-way choice compares serialized
+    byte sizes (what actually lands in L2) and breaks ties
+    deterministically: VByte first (matching the legacy ``ce <= cb``
+    preference), then bitvector -- so a dense partition where EF and
+    bitvector cost the same stays a bitvector.
+    """
+    if codecs == "svb":
+        return TAG_VBYTE if ce_ <= cb_ else TAG_BITVECTOR
+    eligible = 0 <= u_ef < EF_UNIVERSE_MAX
+    if codecs == "ef" and eligible:
+        return TAG_EF
+    vb = ce_ // 8
+    bv = (cb_ + 7) // 8
+    ef = ef_payload_bytes(n, u_ef) if eligible else None
+    if vb <= bv and (ef is None or vb <= ef):
+        return TAG_VBYTE
+    if ef is None or bv <= ef:
+        return TAG_BITVECTOR
+    return TAG_EF
+
+
+def _encode_partitions(seq: np.ndarray, P: np.ndarray, F: int,
+                       codecs: str = "svb"):
     """Encode one list given endpoints P; returns per-partition arrays."""
     gaps = gaps_from_sorted(seq)
     pe, pb = partition_payload_costs(gaps, P)
@@ -228,12 +300,17 @@ def _encode_partitions(seq: np.ndarray, P: np.ndarray, F: int):
         part = seq[s:r]
         endpoints.append(int(part[-1]))
         sizes.append(int(r - s))
-        if ce_ <= cb_:
-            tags.append(TAG_VBYTE)
+        tag = _choose_codec(
+            int(r - s), int(part[-1]) - base - 1, int(ce_), int(cb_), codecs
+        )
+        tags.append(tag)
+        if tag == TAG_VBYTE:
             g = gaps[s:r] - 1
             payloads.append(vbyte_encode(g.astype(np.uint64)))
+        elif tag == TAG_EF:
+            universe = int(part[-1]) - base - 1
+            payloads.append(ef_encode(part - base - 1, universe))
         else:
-            tags.append(TAG_BITVECTOR)
             universe = int(part[-1]) - base
             payloads.append(bitvector_encode(part - base - 1, universe))
         base = int(part[-1])
@@ -247,14 +324,26 @@ def build_partitioned_index(
     uniform_block: int = 128,
     partitioner=None,
     freqs: list[np.ndarray] | None = None,
+    codecs: str = "svb",
 ) -> PartitionedIndex:
     """strategy in {"optimal", "uniform", "eps", "single"} or pass partitioner.
 
     ``freqs`` (one tf >= 1 array per list, aligned with the docIDs) attaches
     the ranked-retrieval payload stream: per-partition VByte(tf - 1) plus the
     implied document lengths / collection stats (DESIGN.md §5).
+
+    ``codecs`` in {"svb", "auto", "ef"}: the per-partition codec-choice
+    policy (see the module docstring).  The default keeps the legacy 2-way
+    VByte/bitvector build byte-identical; the freq stream is VByte(tf - 1)
+    per partition whatever the docID codec.
     """
     from .partition import eps_optimal
+
+    if codecs not in CODEC_POLICIES:
+        raise ValueError(
+            f"unknown codecs policy {codecs!r}: expected one of "
+            f"{CODEC_POLICIES}"
+        )
 
     all_ep, all_sz, all_tag, all_pay = [], [], [], []
     all_fpay: list[np.ndarray] = []
@@ -262,6 +351,13 @@ def build_partitioned_index(
     list_sizes = []
     for li, seq in enumerate(lists):
         seq = np.asarray(seq, dtype=np.int64)
+        if seq.size == 0:
+            # an empty list would produce an empty partition, which no codec
+            # can serialize (every partition stores its endpoint); fail at
+            # build time instead of deep inside the encoder
+            raise ValueError(
+                f"lists[{li}] is empty: posting lists must be non-empty"
+            )
         gaps = gaps_from_sorted(seq)
         if partitioner is not None:
             P = partitioner(gaps)
@@ -275,7 +371,7 @@ def build_partitioned_index(
             P = np.array([len(seq)], dtype=np.int64)
         else:
             raise ValueError(strategy)
-        ep, sz, tag, pay = _encode_partitions(seq, P, F)
+        ep, sz, tag, pay = _encode_partitions(seq, P, F, codecs=codecs)
         all_ep += ep
         all_sz += sz
         all_tag += tag
@@ -324,6 +420,7 @@ def build_partitioned_index(
         freq_offsets=freq_offsets,
         freq_payload=freq_payload,
         doc_lens=doc_lens,
+        codecs=codecs,
     )
 
 

@@ -59,9 +59,13 @@ from __future__ import annotations
 import numpy as np
 
 from repro import obs
-from repro.core.engine_core import EngineCore, group_cursors
+from repro.api import UNSET, coerce_config
+from repro.core.engine_core import (
+    EngineCore,
+    decode_rows_values,
+    group_cursors,
+)
 from repro.kernels.vbyte_decode.kernel import BLOCK_VALS
-from repro.kernels.vbyte_decode.ops import decode_block_rows
 
 TAG_VBYTE = 0
 TAG_BITVECTOR = 1
@@ -124,22 +128,47 @@ class QueryEngine:
     def __init__(
         self,
         index,
-        backend: str = "auto",
-        cache_parts: int = 32_768,
-        cache_bytes: int = 256 << 20,
-        fused: bool = True,
-        group: bool = True,
-        shards: int | None = None,
-        shard_mesh="auto",
-        replicas: int = 1,
-        fault_injector=None,
+        backend=UNSET,
+        cache_parts=UNSET,
+        cache_bytes=UNSET,
+        fused=UNSET,
+        group=UNSET,
+        shards=UNSET,
+        shard_mesh=UNSET,
+        replicas=UNSET,
+        fault_injector=UNSET,
+        codec_policy=UNSET,
+        config=None,
+        **kwargs,
     ):
+        # one coercion point for config= + legacy keywords (repro.api):
+        # keywords alone lift silently, conflicts warn (keyword wins),
+        # unknown keywords raise pointing at EngineConfig
+        cfg = coerce_config(
+            "QueryEngine",
+            config,
+            dict(
+                backend=backend, cache_parts=cache_parts,
+                cache_bytes=cache_bytes, fused=fused, group=group,
+                shards=shards, shard_mesh=shard_mesh, replicas=replicas,
+                fault_injector=fault_injector, codec_policy=codec_policy,
+            ),
+            kwargs,
+        )
+        self.config = cfg
+        backend = cfg.backend
+        shards, shard_mesh = cfg.shards, cfg.shard_mesh
+        replicas, fault_injector = cfg.replicas, cfg.fault_injector
         self.index = index
-        self.cache_parts = int(cache_parts)
-        self.cache_bytes = int(cache_bytes)
-        self.fused = bool(fused)
-        self.group = bool(group)
-        self.arena = index.arena
+        self.cache_parts = int(cfg.cache_parts)
+        self.cache_bytes = int(cfg.cache_bytes)
+        self.fused = bool(cfg.fused)
+        self.group = bool(cfg.group)
+        self.arena = (
+            index.arena_for(cfg.codec_policy)
+            if hasattr(index, "arena_for")
+            else index.arena
+        )
         # CounterDict: plain-dict reads for callers/tests, and every numeric
         # increment mirrors onto an obs counter when the layer is armed
         self.stats = obs.CounterDict(
@@ -157,8 +186,8 @@ class QueryEngine:
             engine="query",
         )
         self.core = EngineCore(
-            self.arena, backend=backend, cache_parts=cache_parts,
-            cache_bytes=cache_bytes, stats=self.stats,
+            self.arena, backend=backend, cache_parts=self.cache_parts,
+            cache_bytes=self.cache_bytes, stats=self.stats,
         )
         self.backend = self.core.backend
         self.interpret = self.core.interpret
@@ -253,13 +282,11 @@ class QueryEngine:
         nblk = a.n_blk[parts]
         rows = np.repeat(a.first_blk[parts], nblk) + _concat_aranges(nblk)
         urows = np.unique(rows)
-        gaps = decode_block_rows(
-            a.lens[urows], a.data[urows], backend=self.backend,
-            interpret=self.interpret,
+        vals = decode_rows_values(
+            a, urows, backend=self.backend, interpret=self.interpret
         )
         self.stats["kernel_calls"] += 1
         self.stats["decoded_parts"] += len(parts)
-        vals = a.block_base[urows][:, None] + np.cumsum(gaps + 1, axis=1)
         flat = vals.reshape(-1)
         row0 = np.searchsorted(urows, a.first_blk[parts])
         dec: dict[int, np.ndarray] = {}
@@ -319,7 +346,10 @@ class QueryEngine:
         value = np.full(n, -1, np.int64)
         rank = np.full(n, -1, np.int64) if with_rank else None
         past = np.ones(n, bool)
-        if self._use_device and sa.mesh is not None:
+        # the shard_map body is single-codec (one decode_search per shard
+        # slot); multi-codec arenas serve shards through the host loop,
+        # whose per-shard EngineCores dispatch per codec
+        if self._use_device and sa.mesh is not None and not self.arena.multi:
             if self._smap_fn is None:
                 from repro.core.shard import ShardMapSearch
 

@@ -165,6 +165,15 @@ class ShardedArena:
             for r in range(replicas):
                 sel = np.flatnonzero(owner_r[r] == s)
                 local_r[r, sel] = np.searchsorted(lists_s, sel)
+        if arena.block_codec is not None:
+            # the shard_map bodies are single-codec: multi-codec arenas
+            # serve shards through the host loop (per-shard EngineCores
+            # dispatch per codec); an explicit mesh request cannot be met
+            if mesh not in ("auto", None):
+                raise ValueError("shard_mesh is single-codec; multi-codec "
+                                 "arenas use the host shard loop "
+                                 "(shard_mesh=None)")
+            mesh = None
         if mesh == "auto":
             mesh = make_shard_mesh(n_shards)
         elif mesh is not None:
@@ -293,6 +302,11 @@ class ShardedArena:
         DEVICE copies); keeping the padded host stacking alive would pin a
         redundant arena-sized buffer for the engine's lifetime.
         """
+        if self.arena.block_codec is not None:
+            # the shard_map bodies decode one codec; the engines gate the
+            # mesh path off for multi-codec arenas before reaching here
+            raise ValueError("shard_map stacking is single-codec; "
+                             "multi-codec arenas use the host shard loop")
         S = self.n_shards
         nb_m = max(1, max(sub.n_blocks for sub in self.shards))
         np_m = max(1, max(len(sub.first_blk) for sub in self.shards))
@@ -396,6 +410,11 @@ def _slice_arena(
     global arena exactly.  Only the locate keys are recomputed -- same
     global ``stride``, shard-LOCAL list ids (ascending with the global
     ids, so the keys stay globally non-decreasing within the shard).
+
+    Multi-codec arenas (§14) slice per codec: the shard's SVB rows and EF
+    tiles are gathered from the global codec arrays through ``codec_row``,
+    and shard-local codec rows are renumbered in block order -- the same
+    pure-gather property, per codec.
     """
     in_shard = np.zeros(len(a.list_blk_offsets) - 1, bool)
     in_shard[lists_s] = True
@@ -428,9 +447,25 @@ def _slice_arena(
             norm_table=r.norm_table,
             params=r.params,
         )
+    block_codec_s = codec_row_s = ef_lo_s = ef_hi_s = ef_lbits_s = None
+    if a.block_codec is None:
+        lens_s, data_s = a.lens[rows_s], a.data[rows_s]
+    else:
+        from repro.core.arena import CODEC_EF
+
+        block_codec_s = a.block_codec[rows_s]
+        cr = a.codec_row[rows_s]
+        ef_m = block_codec_s == CODEC_EF
+        codec_row_s = np.zeros(len(rows_s), np.int64)
+        codec_row_s[~ef_m] = np.arange(int((~ef_m).sum()))
+        codec_row_s[ef_m] = np.arange(int(ef_m.sum()))
+        lens_s, data_s = a.lens[cr[~ef_m]], a.data[cr[~ef_m]]
+        ef_lo_s = a.ef_lo[cr[ef_m]]
+        ef_hi_s = a.ef_hi[cr[ef_m]]
+        ef_lbits_s = a.ef_lbits[cr[ef_m]]
     return DeviceArena(
-        lens=a.lens[rows_s],
-        data=a.data[rows_s],
+        lens=lens_s,
+        data=data_s,
         block_base=a.block_base[rows_s],
         block_keys=block_last + part_list_s[part_of_block_s] * a.stride,
         lane_valid=a.lane_valid[rows_s],
@@ -445,6 +480,11 @@ def _slice_arena(
         n_blocks=len(rows_s),
         device_ok=bool((len(lists_s) + 1) * a.stride < 2**31 - BLOCK_VALS - 2),
         ranked=ranked,
+        block_codec=block_codec_s,
+        codec_row=codec_row_s,
+        ef_lo=ef_lo_s,
+        ef_hi=ef_hi_s,
+        ef_lbits=ef_lbits_s,
     )
 
 

@@ -303,11 +303,14 @@ class ResilientEngine:
             if cores:
                 from repro.core.engine_core import EngineCore
 
+                # the rebuilt core reads the engine's one EngineConfig
+                # (repro.api) rather than re-threading individual kwargs
+                cfg = eng.config
                 cores[s] = EngineCore(
                     sub,
                     backend=eng.backend,
-                    cache_parts=eng.cache_parts,
-                    cache_bytes=eng.cache_bytes,
+                    cache_parts=cfg.cache_parts,
+                    cache_bytes=cfg.cache_bytes,
                     stats=eng.stats,
                     shard_id=s,
                     injector=self.injector,

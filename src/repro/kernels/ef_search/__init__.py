@@ -1,0 +1,35 @@
+"""Fused Elias-Fano NextGEQ kernel family (DESIGN.md §14)."""
+
+from .kernel import (
+    EF_HI_BITS,
+    EF_HI_WORDS,
+    EFMETA_BASE,
+    EFMETA_LBITS,
+    EFMETA_PROBE,
+    ef_search_blocks,
+)
+from .ops import (
+    EF_BLOCK_UNIVERSE_MAX,
+    ef_block_eligible,
+    ef_decode_rows_np,
+    ef_pack_blocks,
+    ef_search,
+    ef_search_np,
+)
+from .ref import ef_search_ref
+
+__all__ = [
+    "EF_BLOCK_UNIVERSE_MAX",
+    "EF_HI_BITS",
+    "EF_HI_WORDS",
+    "EFMETA_BASE",
+    "EFMETA_LBITS",
+    "EFMETA_PROBE",
+    "ef_block_eligible",
+    "ef_decode_rows_np",
+    "ef_pack_blocks",
+    "ef_search",
+    "ef_search_blocks",
+    "ef_search_np",
+    "ef_search_ref",
+]

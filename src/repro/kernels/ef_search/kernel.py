@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused Elias-Fano NextGEQ over gathered block tiles.
+
+The arena re-splits every EF partition into per-block tiles (128 values
+each, rebased to the block's ``block_base``; see ``ops.ef_pack_blocks``):
+uint16 low bits per lane plus a 384-bit unary high stream -- 128 one-bits
+(one per lane) and up to 256 zero-bits (the block universe is capped so
+``high < 256``).  The high stream ships as 24 x 16-bit words inside the
+staged META tile, so every in-kernel shift stays in non-negative int32.
+
+NextGEQ resolves with NO select-dictionary and NO per-lane control flow,
+just cumsums and reductions over the [BM, 384] bit tile (VPU-shaped):
+
+* ``rank`` -- split the rebased probe into (hp, lp).  The position of the
+  b-th zero is ``Z(b) = #{j : zcumsum_j <= b}``, so the count of lanes
+  with ``high < hp`` is ``Z(hp-1) - (hp-1)`` and the count with ``high <=
+  hp`` is ``Z(hp) - hp``; lanes between the two counts with ``low < lp``
+  complete the rank.  ``hp > 255`` (probe beyond the tile's high range)
+  short-circuits to rank 128.
+* ``value`` -- the rank-th one-bit sits at ``S(r) = #{j : ocumsum_j <=
+  r}``, so ``high = S(r) - r`` and ``value = base + 1 + (high << l | low)``.
+
+Outputs match ``vbyte_decode.decode_search_blocks`` lane-for-lane: lane 0
+the smallest in-block value >= probe (2^31-1 if none), lane 1 the count
+of in-block values < probe.  Integer contract -- bit-identical to the jnp
+ref and the numpy mirror by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
+
+EF_HI_WORDS = 24  # 16 high-stream bits per staged int32 word
+EF_HI_BITS = EF_HI_WORDS * 16  # 384 = 128 one-bits + up to 256 zero-bits
+
+# ef_search_blocks meta lanes: [:, 0:EF_HI_WORDS] = the 16-bit high-stream
+# words, then per-row scalars; remaining lanes ignored (kept 128-wide)
+EFMETA_LBITS = EF_HI_WORDS
+EFMETA_BASE = EF_HI_WORDS + 1
+EFMETA_PROBE = EF_HI_WORDS + 2
+_I32_MAX = 2**31 - 1  # python int: jnp constants would be captured by pallas
+
+
+def _ef_search_tile(lo, hi_words, lbits, base, probe):
+    """[BM,128] i32 lows + [BM,24] i32 high words + [BM,1] i32 scalars
+    -> [BM,1] (value, rank).  Shared by the kernel body below; the jnp
+    ref re-derives the same arithmetic over unstaged inputs."""
+    rows = lo.shape[0]
+    shift = jax.lax.broadcasted_iota(jnp.int32, (rows, EF_HI_WORDS, 16), 2)
+    # the inclusive one counts over the 384-bit stream, built
+    # hierarchically -- a length-16 scan within each word plus a length-24
+    # word-prefix scan -- instead of one length-384 scan, and kept in
+    # int8/int16 (the [BM,24,16] intermediates dominate memory traffic on
+    # big cursor waves; every count fits: inner <= 16, oc <= 128).  The
+    # zero counts are never materialized: zc_j = j+1 - oc_j, so
+    # ``zc_j <= b``  <=>  ``oc_j >= j+1-b``.
+    bits = ((hi_words[:, :, None] >> shift) & 1).astype(jnp.int8)
+    inner_oc = jnp.cumsum(bits, axis=2)  # within-word one counts
+    wo = inner_oc[:, :, 15:16].astype(jnp.int16)  # ones per word
+    oc = jnp.cumsum(wo, axis=1) - wo + inner_oc  # inclusive one counts
+    pos1 = (
+        jax.lax.broadcasted_iota(jnp.int16, (rows, EF_HI_WORDS, 16), 1) * 16
+        + shift.astype(jnp.int16) + 1
+    )  # j + 1 over the flat 384-bit stream
+    rp = jnp.clip(probe - base - 1, 0, None)  # rebased probe, >= 0
+    hp = rp >> lbits
+    lp = rp & ((1 << lbits) - 1)
+    # hp clamps to 384 before the int16 narrowing: zc <= 256, so every
+    # b >= 256 already counts all 384 positions -- identical sums, and the
+    # hp > 255 rows are overridden by ``big`` below anyway
+    hp3 = jnp.minimum(hp, EF_HI_BITS)[:, :, None].astype(jnp.int16)
+    # count_lt = #lanes with high < hp; count_le = #lanes with high <= hp
+    z_lt = jnp.sum(oc >= pos1 - (hp3 - 1), axis=(1, 2), dtype=jnp.int32)[:, None]
+    z_le = jnp.sum(oc >= pos1 - hp3, axis=(1, 2), dtype=jnp.int32)[:, None]
+    big = hp > 255  # beyond the tile's high range: every lane is below
+    count_lt = jnp.where(hp <= 0, 0, z_lt - (hp - 1))
+    count_lt = jnp.where(big, BLOCK_VALS, count_lt)
+    count_le = jnp.where(big, BLOCK_VALS, z_le - hp)
+    lane = jax.lax.broadcasted_iota(jnp.int32, lo.shape, 1)
+    mid = jnp.sum(
+        ((lane >= count_lt) & (lane < count_le) & (lo < lp)).astype(
+            jnp.int32
+        ),
+        axis=1,
+        keepdims=True,
+    )
+    rank = jnp.where(big, BLOCK_VALS, count_lt + mid)
+    rc = jnp.minimum(rank, BLOCK_VALS - 1)
+    sel = jnp.sum(
+        oc <= rc[:, :, None].astype(jnp.int16), axis=(1, 2), dtype=jnp.int32
+    )[:, None]
+    high_r = sel - rc
+    low_r = jnp.sum(jnp.where(lane == rc, lo, 0), axis=1, keepdims=True)
+    value = base + 1 + ((high_r << lbits) | low_r)
+    value = jnp.where(rank >= BLOCK_VALS, _I32_MAX, value)
+    return value, rank
+
+
+def _ef_search_kernel(lo_ref, meta_ref, out_ref):
+    lo = lo_ref[...]
+    meta = meta_ref[...]
+    value, rank = _ef_search_tile(
+        lo,
+        meta[:, :EF_HI_WORDS],
+        meta[:, EFMETA_LBITS : EFMETA_LBITS + 1],
+        meta[:, EFMETA_BASE : EFMETA_BASE + 1],
+        meta[:, EFMETA_PROBE : EFMETA_PROBE + 1],
+    )
+    lane = jax.lax.broadcasted_iota(jnp.int32, lo.shape, 1)
+    out_ref[...] = jnp.where(lane == 0, value, jnp.where(lane == 1, rank, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ef_search_blocks(
+    lo: jnp.ndarray, meta: jnp.ndarray, interpret: bool = True
+):
+    """Fused in-register Elias-Fano NextGEQ over gathered block tiles.
+
+    lo: [nr, 128] int32 -- one GATHERED EF tile's low bits per cursor.
+    meta: [nr, 128] int32 carrying per row: lanes 0..23 the 16-bit high
+    words, lane EFMETA_LBITS = l, lane EFMETA_BASE = block_base, lane
+    EFMETA_PROBE = probe.
+
+    Returns [nr, 128] int32: lane 0 = smallest value >= probe within the
+    block (2^31-1 if none), lane 1 = count of block values < probe
+    (0..128) -- the ``decode_search_blocks`` output contract exactly.
+    """
+    nr = lo.shape[0]
+    assert nr % BM == 0, f"rows must be a multiple of {BM}"
+    grid = (nr // BM,)
+    return pl.pallas_call(
+        _ef_search_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BLOCK_VALS), lambda i: (i, 0)),
+            pl.BlockSpec((BM, BLOCK_VALS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BM, BLOCK_VALS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, BLOCK_VALS), jnp.int32),
+        interpret=interpret,
+    )(lo, meta)

@@ -1,0 +1,233 @@
+"""Host packer + wrappers for the fused Elias-Fano NextGEQ triple.
+
+The arena stores every EF-tagged block as a fixed-width tile (DESIGN.md
+§14): 128 uint16 low-bit lanes, 24 uint16 high-stream words (384 unary
+bits: 128 ones + up to 256 zeros), and one uint8 ``l`` -- 308 bytes per
+block against the 1536 bytes of a Stream-VByte tile's lens+data rows.
+Values are rebased per block (``r = value - block_base - 1``), and a
+block is EF-eligible iff its rebased universe stays below 2^23, which
+caps ``l`` at 15 (uint16 lanes) and ``high`` at 255 (the 384-bit
+stream).  ``ef_pack_blocks`` builds the tiles; ``ef_search`` dispatches
+NextGEQ over them through the numpy / ref / pallas triple with the same
+``(value, rank)`` interface as ``vbyte_decode.decode_search``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.ef_search.kernel import (
+    EF_HI_WORDS,
+    EFMETA_BASE,
+    EFMETA_LBITS,
+    EFMETA_PROBE,
+    ef_search_blocks,
+)
+from repro.kernels.ef_search.ref import ef_search_ref
+from repro.kernels.vbyte_decode.kernel import BLOCK_VALS, BM
+from repro.kernels.vbyte_decode.ops import _resolve_interpret
+
+# largest per-BLOCK rebased universe an EF tile can hold: l = bitlen - 8
+# keeps the high part < 256 (384-bit unary stream) and l <= 15 keeps the
+# low bits inside uint16 lanes
+EF_BLOCK_UNIVERSE_MAX = 1 << 23
+
+
+def ef_block_eligible(vals: np.ndarray, bases: np.ndarray) -> np.ndarray:
+    """[n] bool: can each row of block values become an EF tile?
+
+    vals: [n, 128] absolute ascending docIDs (padding lanes included --
+    they are encoded like any other lane, exactly as the SVB tiles pad);
+    bases: [n] the block's ``block_base`` sidecar.
+    """
+    u = vals[:, -1] - bases - 1
+    return (u >= 0) & (u < EF_BLOCK_UNIVERSE_MAX)
+
+
+def ef_pack_blocks(
+    vals: np.ndarray, bases: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pack rows of 128 ascending docIDs into EF tiles.
+
+    vals: [n, 128] absolute values; bases: [n] block_base per row.  Every
+    row must be ``ef_block_eligible``.  Returns ``(lo [n,128] uint16,
+    hi [n,24] uint16, lbits [n] uint8)``.
+    """
+    from repro.core.costs import bit_length_np
+
+    vals = np.asarray(vals, dtype=np.int64)
+    bases = np.asarray(bases, dtype=np.int64)
+    n = vals.shape[0]
+    if n == 0:
+        return (
+            np.zeros((0, BLOCK_VALS), np.uint16),
+            np.zeros((0, EF_HI_WORDS), np.uint16),
+            np.zeros(0, np.uint8),
+        )
+    r = vals - bases[:, None] - 1
+    u = r[:, -1]
+    if not ((u >= 0) & (u < EF_BLOCK_UNIVERSE_MAX)).all():
+        raise ValueError("block universe out of EF tile range")
+    lbits = np.maximum(bit_length_np(u) - 8, 0).astype(np.int64)
+    lo = (r & ((1 << lbits)[:, None] - 1)).astype(np.uint16)
+    hi_val = r >> lbits[:, None]  # [n, 128] <= 255 by construction
+    ones_pos = hi_val + np.arange(BLOCK_VALS, dtype=np.int64)  # < 384
+    bits = np.zeros((n, EF_HI_WORDS * 16), np.uint16)
+    bits[np.arange(n)[:, None], ones_pos] = 1
+    weights = (1 << np.arange(16, dtype=np.uint32)).astype(np.uint32)
+    hi = (
+        (bits.reshape(n, EF_HI_WORDS, 16).astype(np.uint32) * weights)
+        .sum(axis=2)
+        .astype(np.uint16)
+    )
+    return lo, hi, lbits.astype(np.uint8)
+
+
+def ef_decode_rows_np(
+    lo_rows: np.ndarray, hi_rows: np.ndarray, lbits_rows: np.ndarray,
+    bases: np.ndarray,
+) -> np.ndarray:
+    """[n, 128] absolute int64 docIDs of gathered EF tiles (host decode).
+
+    The flat-mirror / row-cache counterpart of ``decode_blocks_np`` +
+    cumsum: every row holds exactly 128 one-bits, so ``np.nonzero`` over
+    the expanded bit tile yields each lane's high part directly.
+    """
+    lo_rows = np.asarray(lo_rows, dtype=np.int64)
+    hi_rows = np.asarray(hi_rows, dtype=np.int64)
+    n = lo_rows.shape[0]
+    if n == 0:
+        return np.zeros((0, BLOCK_VALS), np.int64)
+    j = np.arange(EF_HI_WORDS * 16, dtype=np.int64)
+    bits = (hi_rows[:, j >> 4] >> (j & 15)) & 1
+    ones_pos = np.nonzero(bits)[1].reshape(n, BLOCK_VALS)
+    high = ones_pos - np.arange(BLOCK_VALS, dtype=np.int64)
+    l = np.asarray(lbits_rows, dtype=np.int64)[:, None]
+    return np.asarray(bases, np.int64)[:, None] + 1 + ((high << l) | lo_rows)
+
+
+def ef_search_np(
+    lo: np.ndarray, hi: np.ndarray, lbits: np.ndarray,
+    block_base: np.ndarray, rows: np.ndarray, probes: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized-numpy fused EF search: decode each cursor's tile and
+    resolve NextGEQ in one pass.  Duplicate rows are decoded once.
+
+    Returns (value [C] int64, rank [C] int64) exactly as
+    ``vbyte_decode.decode_search_np`` (value of the LAST lane when none
+    qualifies; callers mask past-the-end cursors).
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    probes = np.asarray(probes, dtype=np.int64)
+    urows, inv = np.unique(rows, return_inverse=True)
+    uvals = ef_decode_rows_np(
+        lo[urows], hi[urows], np.asarray(lbits)[urows],
+        np.asarray(block_base, np.int64)[urows],
+    )
+    vals = uvals[inv]  # [C, 128]
+    rank = (vals < probes[:, None]).sum(axis=1)
+    value = vals[np.arange(len(rows)), np.minimum(rank, BLOCK_VALS - 1)]
+    return value, rank
+
+
+def ef_search(
+    lo, hi, lbits, block_base, rows, probes,
+    backend: str = "numpy", interpret: bool | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fused EF NextGEQ over arena tiles; numpy in/out, all backends.
+
+    lo [nb,128] uint16 / hi [nb,24] uint16 / lbits [nb] uint8 /
+    block_base [nb]: the EF half of a multi-codec arena.  rows [C]: the
+    EF tile row located for each cursor.  probes [C]: absolute probe
+    docIDs.  Returns (value [C] int64, rank [C] int64) as ``ef_search_np``.
+    Like ``decode_search``, this convenience wrapper ships gathered tiles
+    host->device per call; the engines' jitted pipelines stay resident.
+    """
+    if backend == "numpy":
+        return ef_search_np(lo, hi, lbits, block_base, rows, probes)
+    if backend not in ("ref", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    rows = np.asarray(rows, dtype=np.int64)
+    n = len(rows)
+    if n == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    pad = (-n) % BM
+    rows_p = np.concatenate([rows, np.zeros(pad, np.int64)]) if pad else rows
+    probes_p = np.zeros(n + pad, np.int64)
+    probes_p[:n] = np.asarray(probes, dtype=np.int64)
+    lo_g = jnp.asarray(np.asarray(lo, np.int32)[rows_p])
+    hi_g = np.asarray(hi, np.int32)[rows_p]
+    lb_g = np.asarray(lbits, np.int32)[rows_p]
+    bases_g = np.asarray(block_base, np.int64)[rows_p].astype(np.int32)
+    probes_i = probes_p.astype(np.int32)
+    if backend == "ref":
+        value, rank = ef_search_ref(
+            lo_g, jnp.asarray(hi_g), jnp.asarray(lb_g),
+            jnp.asarray(bases_g), jnp.asarray(probes_i),
+        )
+    else:
+        meta = np.zeros((n + pad, BLOCK_VALS), np.int32)
+        meta[:, :EF_HI_WORDS] = hi_g
+        meta[:, EFMETA_LBITS] = lb_g
+        meta[:, EFMETA_BASE] = bases_g
+        meta[:, EFMETA_PROBE] = probes_i
+        out = ef_search_blocks(
+            lo_g, jnp.asarray(meta), interpret=_resolve_interpret(interpret)
+        )
+        value, rank = out[:, 0], out[:, 1]
+    return (
+        np.asarray(value)[:n].astype(np.int64),
+        np.asarray(rank)[:n].astype(np.int64),
+    )
+
+
+# Machine-readable triple contract (DESIGN.md §10), verified on every PR by
+# repro.analyze.contracts -- a PURE LITERAL, like vbyte_decode's.  The
+# pallas META tile stages the high words + per-row scalars (hi+lbits+base+
+# probe); the numpy mirror gathers rows itself (":gather").
+CONTRACT = {
+    "family": "ef_search",
+    "identity": "integer",
+    "ops": {
+        "ef_search": {
+            "roles": ["lo", "hi", "lbits", "base", "probe"],
+            "out": ["value:int64[nr]", "rank:int64[nr]"],
+            "backends": {
+                "numpy": {
+                    "module": "ops",
+                    "fn": "ef_search_np",
+                    "params": [
+                        "lo:lo",
+                        "hi:hi",
+                        "lbits:lbits",
+                        "block_base:base",
+                        "rows:gather",
+                        "probes:probe",
+                    ],
+                },
+                "ref": {
+                    "module": "ref",
+                    "fn": "ef_search_ref",
+                    "params": [
+                        "lo_rows:lo",
+                        "hi_rows:hi",
+                        "lbits_rows:lbits",
+                        "bases:base",
+                        "probes:probe",
+                    ],
+                },
+                "pallas": {
+                    "module": "kernel",
+                    "fn": "ef_search_blocks",
+                    "params": [
+                        "lo:lo",
+                        "meta:staging=hi+lbits+base+probe",
+                        "interpret:config",
+                    ],
+                },
+            },
+        },
+    },
+}

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused Elias-Fano NextGEQ kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ef_search.kernel import _ef_search_tile
+
+
+def ef_search_ref(lo_rows, hi_rows, lbits_rows, bases, probes):
+    """jnp oracle of the fused EF NextGEQ kernel (DESIGN.md §14).
+
+    lo_rows: [nr, 128] int32 low bits; hi_rows: [nr, 24] int32 16-bit
+    high-stream words; lbits_rows / bases / probes: [nr] int32 -- gathered
+    EF tiles, one per cursor.  Returns (value [nr] int32, rank [nr]
+    int32): the smallest in-block value >= probe (2^31-1 if none) and the
+    count of block values < probe -- ``decode_search_ref``'s contract.
+    """
+    value, rank = _ef_search_tile(
+        lo_rows.astype(jnp.int32),
+        hi_rows.astype(jnp.int32),
+        lbits_rows.astype(jnp.int32)[:, None],
+        bases.astype(jnp.int32)[:, None],
+        probes.astype(jnp.int32)[:, None],
+    )
+    return value[:, 0], rank[:, 0]

@@ -46,6 +46,13 @@ the linger, ``--deadline-ms`` sets the per-request SLO, ``--max-queue``
 the backpressure bound), and the report adds sustained QPS, wave
 occupancy, queue depth, deadline misses, and end-to-end latency
 p50/p99/p99.9.  Operator runbook: docs/serving.md.
+
+``--codec {auto,svb,ef}`` selects the arena codec policy (DESIGN.md §14):
+``auto`` lets the optimal partitioner pick VByte / Elias-Fano / bitvector
+per partition by exact encoded size, ``svb`` keeps the legacy
+VByte/bitvector arena, ``ef`` prefers Elias-Fano wherever a block is
+eligible.  ``--config FILE`` loads a ``repro.api.EngineConfig`` JSON as
+the base engine configuration; explicit flags override its fields.
 """
 
 from __future__ import annotations
@@ -55,6 +62,7 @@ import argparse
 import numpy as np
 
 from repro import obs
+from repro.api import EngineConfig, make_query_engine, make_topk_engine
 from repro.core import build_partitioned_index, build_unpartitioned_index
 from repro.core.query_engine import QueryEngine
 from repro.data.postings import make_corpus, make_freqs, make_queries
@@ -243,12 +251,14 @@ def serve_loop(args, engine, queries) -> None:
 def serve_ranked(args, rng, corpus) -> None:
     """The --ranked endpoint: batched BM25 top-k over the freq arena."""
     from repro.ranked.bm25 import exhaustive_topk
-    from repro.ranked.topk_engine import TopKEngine
 
     freqs = make_freqs(rng, corpus)
     t0 = obs.now()
-    idx = build_partitioned_index(corpus, "optimal", freqs=freqs)
-    arena = idx.arena  # includes the freq transcode + block-max sidecar
+    idx = build_partitioned_index(
+        corpus, "optimal", freqs=freqs, codecs=args.cfg.codec_policy
+    )
+    # includes the freq transcode + block-max sidecar
+    arena = idx.arena_for(args.cfg.codec_policy)
     t_build = obs.now() - t0
     print(f"[serve] ranked index: {idx.bits_per_int():.2f} bpi docIDs + "
           f"{idx.freq_payload.size * 8 / max(int(idx.list_sizes.sum()), 1):.2f} "
@@ -259,8 +269,7 @@ def serve_ranked(args, rng, corpus) -> None:
         [int(t) for t in q]
         for q in make_queries(rng, args.n_lists, args.queries, args.arity)
     ]
-    engine = TopKEngine(idx, backend=args.backend, shards=args.shards,
-                        resident=args.resident, replicas=args.replicas)
+    engine = make_topk_engine(idx, args.cfg)
     _print_shard_layout(engine)
     engine.topk_batch(queries[: args.batch], args.topk)  # warm mirror + jit
     if args.loop:
@@ -316,17 +325,31 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--arity", type=int, default=2)
     ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--backend", default="auto",
+    # engine flags default to None so a --config file is not clobbered by
+    # argparse defaults: EngineConfig.from_args only overrides fields the
+    # caller actually set, and main() rebinds the resolved values onto args
+    ap.add_argument("--backend", default=None,
                     choices=["auto", "numpy", "ref", "pallas"])
     ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    default=None,
                     help="serve through the PR-1 partition-LRU engine "
                          "instead of the fused device pipeline")
+    ap.add_argument("--codec", default=None, choices=["auto", "svb", "ef"],
+                    help="arena codec policy (DESIGN.md §14): 'auto' lets "
+                         "the partitioner pick VByte/Elias-Fano/bitvector "
+                         "per partition by encoded size, 'svb' keeps the "
+                         "legacy VByte/bitvector arena, 'ef' prefers "
+                         "Elias-Fano wherever a block is eligible")
+    ap.add_argument("--config", default=None, metavar="PATH",
+                    help="EngineConfig JSON file (repro.api) supplying the "
+                         "engine options; explicit flags override its "
+                         "fields")
     ap.add_argument("--ranked", action="store_true",
                     help="serve BM25 top-k through the Block-Max engine "
                          "instead of boolean AND")
     ap.add_argument("--topk", type=int, default=10,
                     help="k for --ranked serving")
-    ap.add_argument("--resident", default="auto",
+    ap.add_argument("--resident", default=None,
                     choices=["auto", "mirror", "kernel"],
                     help="ranked residency: 'mirror' prunes on the host "
                          "impact mirror; 'kernel' keeps only compressed "
@@ -338,7 +361,7 @@ def main() -> None:
                     help="list-hash-partition the arena into N shards "
                          "(DESIGN.md §6): shard_map over a device mesh "
                          "when possible, host-side shard loop otherwise")
-    ap.add_argument("--replicas", type=int, default=1,
+    ap.add_argument("--replicas", type=int, default=None,
                     help="place every list on R shards (DESIGN.md §11); "
                          "routing prefers the primary, replicas carry its "
                          "lists bit-identically when it dies")
@@ -385,6 +408,14 @@ def main() -> None:
                          "snapshot to PATH at exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    # resolve flags + --config file into the one EngineConfig, then rebind
+    # the resolved values so the rest of the driver reads them from args
+    args.cfg = EngineConfig.from_args(args)
+    args.backend = args.cfg.backend
+    args.fused = args.cfg.fused
+    args.resident = args.cfg.resident
+    args.shards = args.cfg.shards
+    args.replicas = args.cfg.replicas
     if args.shards is not None and not args.fused and not args.ranked:
         # the ranked engine has no fused= knob; only boolean-AND serving
         # needs the fused pipeline for sharding
@@ -427,7 +458,9 @@ def _serve(args) -> None:
         return
 
     t0 = obs.now()
-    idx = build_partitioned_index(corpus, "optimal")
+    idx = build_partitioned_index(
+        corpus, "optimal", codecs=args.cfg.codec_policy
+    )
     t_build = obs.now() - t0
     base = build_unpartitioned_index(corpus)
     print(f"[serve] space: optimal {idx.bits_per_int():.2f} bpi vs "
@@ -439,8 +472,7 @@ def _serve(args) -> None:
         [int(t) for t in q]
         for q in make_queries(rng, args.n_lists, args.queries, args.arity)
     ]
-    engine = QueryEngine(idx, backend=args.backend, fused=args.fused,
-                         shards=args.shards, replicas=args.replicas)
+    engine = make_query_engine(idx, args.cfg)
     _print_shard_layout(engine)
     # warm-up batch: triggers the one-time arena transcode + jit on device
     engine.intersect_batch(queries[: args.batch])

@@ -73,6 +73,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro import obs
+from repro.api import UNSET, coerce_config
 from repro.core.engine_core import (
     EngineCore,
     build_locate_dev,
@@ -127,11 +128,32 @@ class TopKEngine:
         shard dispatch, normally wired by ``ResilientEngine``.
     """
 
-    def __init__(self, index, backend: str = "auto", seed_blocks: int = 4,
-                 resident: str = "auto", shards: int | None = None,
-                 shard_mesh="auto", replicas: int = 1, fault_injector=None):
+    def __init__(self, index, backend=UNSET, seed_blocks: int = 4,
+                 resident=UNSET, shards=UNSET, shard_mesh=UNSET,
+                 replicas=UNSET, fault_injector=UNSET, codec_policy=UNSET,
+                 config=None, **kwargs):
+        # one coercion point for config= + legacy keywords (repro.api);
+        # unknown keywords now raise instead of being silently ignored
+        cfg = coerce_config(
+            "TopKEngine",
+            config,
+            dict(
+                backend=backend, resident=resident, shards=shards,
+                shard_mesh=shard_mesh, replicas=replicas,
+                fault_injector=fault_injector, codec_policy=codec_policy,
+            ),
+            kwargs,
+        )
+        self.config = cfg
+        backend, resident = cfg.backend, cfg.resident
+        shards, shard_mesh = cfg.shards, cfg.shard_mesh
+        replicas, fault_injector = cfg.replicas, cfg.fault_injector
         self.index = index
-        self.arena = index.arena
+        self.arena = (
+            index.arena_for(cfg.codec_policy)
+            if hasattr(index, "arena_for")
+            else index.arena
+        )
         if self.arena.ranked is None:
             raise ValueError(
                 "index has no ranked sidecar: build with freqs= "
@@ -184,9 +206,11 @@ class TopKEngine:
         )
         self.backend = self.core.backend
         self.interpret = self.core.interpret
-        self._jax_fn = None
+        # per-codec jitted contrib fns of the global arena ("svb" always,
+        # "ef" filled on the first EF-bucketed wave of a multi-codec arena)
+        self._jax_fns: dict = {}
         self.sharded = None
-        self._shard_fns: list = []
+        self._shard_fns: list = []  # per shard: per-codec fn dict (or None)
         self._smap_fn = None
         # device-pivot state (resident="kernel"): bound-chunk tiles + the
         # f64 dequant table behind the exact theta -> qmin reduction
@@ -948,15 +972,65 @@ class TopKEngine:
         backend, interpret = self.backend, self.interpret
         k1p1 = float(self.k1p1)
 
+        multi = arena.block_codec is not None
+
         def fn(terms, probes):
             rows, pe, past = locate(terms, probes)
+            # multi-codec arenas compact the SVB doc tiles: gather through
+            # codec_row (the host bucketing only sends SVB-block cursors)
+            sr = dev.codec_row[rows] if multi else rows
             contrib = score_probe_graph(
-                dev.lens[rows], dev.data[rows], rdev.freq_lens[rows],
+                dev.lens[sr], dev.data[sr], rdev.freq_lens[rows],
                 rdev.freq_data[rows], rdev.norm_q[rows].astype(jnp.int32),
                 dev.block_base[rows], pe, rdev.idf[lob_dev[rows]],
                 rdev.norm_table, k1p1, backend, interpret,
             )
             return jnp.where(past, jnp.float32(0.0), contrib)
+
+        return jax.jit(fn)
+
+    def _build_ef_jax_fn(self, arena, ranked):
+        """Jitted locate -> EF-NextGEQ -> score-row -> lane-select over one
+        multi-codec arena (§14): the EF twin of ``_build_jax_fn``.
+
+        The freq sidecar stays per-BLOCK whatever the docID codec, so the
+        scoring half is ``score_rows_graph`` over the SAME freq row the SVB
+        fn would read, and the matched lane's score is selected at the EF
+        rank -- per-posting arithmetic identical to ``score_probe_graph``,
+        hence bit-identical contributions.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.engine_core import ef_search_graph
+        from repro.kernels.bm25_score.ops import score_rows_graph
+
+        dev, rdev = arena.dev, ranked.dev
+        lob = arena.part_list[arena.part_of_block]
+        lob_dev = jnp.asarray(lob.astype(np.int32))
+        locate = build_locate_dev(arena)
+        backend, interpret = self.backend, self.interpret
+        k1p1 = float(self.k1p1)
+
+        def fn(terms, probes):
+            rows, pe, past = locate(terms, probes)
+            er = dev.codec_row[rows]
+            value, rank_in = ef_search_graph(
+                dev.ef_lo[er], dev.ef_hi[er], dev.ef_lbits[er],
+                dev.block_base[rows], pe, backend, interpret,
+            )
+            row_scores = score_rows_graph(
+                rdev.freq_lens[rows], rdev.freq_data[rows],
+                rdev.norm_q[rows].astype(jnp.int32),
+                rdev.idf[lob_dev[rows]], rdev.norm_table, k1p1, backend,
+                interpret,
+            )
+            rc = jnp.minimum(rank_in, BLOCK_VALS - 1)
+            contrib = jnp.take_along_axis(row_scores, rc[:, None], axis=1)[
+                :, 0
+            ]
+            hit = (value == pe) & ~past
+            return jnp.where(hit, contrib, jnp.float32(0.0))
 
         return jax.jit(fn)
 
@@ -982,15 +1056,50 @@ class TopKEngine:
             out[s:e] = res_h[: e - s]
         return out
 
+    def _contrib_dev_arena(self, arena, ranked, fns, terms, docs):
+        """One arena's device contributions, bucketed per codec (§14).
+
+        ``fns`` is the arena's per-codec jitted-fn dict, filled lazily.
+        Single-codec arenas go straight to the SVB pipeline; multi-codec
+        arenas run the host codec pre-pass (the same searchsorted the
+        device re-runs, read only for ``block_codec``) and dispatch ONE
+        fused wave per codec, scattering back in batch order.
+        """
+        if fns.get("svb") is None:
+            fns["svb"] = self._build_jax_fn(arena, ranked)
+        if arena.block_codec is None:
+            return self._contrib_dev_on(fns["svb"], arena.stride, terms, docs)
+        from repro.core.arena import CODEC_EF
+
+        pc = np.clip(docs, 0, arena.stride - 1)
+        k = np.searchsorted(
+            arena.block_keys, pc + terms * arena.stride, side="left"
+        )
+        codec = arena.block_codec[np.minimum(k, arena.n_blocks - 1)]
+        ef_j = np.nonzero(codec == CODEC_EF)[0]
+        if not len(ef_j):
+            return self._contrib_dev_on(fns["svb"], arena.stride, terms, docs)
+        if fns.get("ef") is None:
+            fns["ef"] = self._build_ef_jax_fn(arena, ranked)
+        if len(ef_j) == len(terms):
+            return self._contrib_dev_on(fns["ef"], arena.stride, terms, docs)
+        svb_j = np.nonzero(codec != CODEC_EF)[0]
+        out = np.empty(len(terms), np.float32)
+        out[svb_j] = self._contrib_dev_on(
+            fns["svb"], arena.stride, terms[svb_j], docs[svb_j]
+        )
+        out[ef_j] = self._contrib_dev_on(
+            fns["ef"], arena.stride, terms[ef_j], docs[ef_j]
+        )
+        return out
+
     def _contrib_dev(self, terms: np.ndarray, docs: np.ndarray) -> np.ndarray:
         """Device path; with ``shards=`` cursors route to their owning
         shard's sub-arena and merge back by pure scatter (contributions are
         scalars -- nothing to rebase)."""
         if self.sharded is None:
-            if self._jax_fn is None:
-                self._jax_fn = self._build_jax_fn(self.arena, self.ranked)
-            return self._contrib_dev_on(
-                self._jax_fn, self.arena.stride, terms, docs
+            return self._contrib_dev_arena(
+                self.arena, self.ranked, self._jax_fns, terms, docs
             )
         sa = self.sharded
         owner, local, served = sa.route(terms)
@@ -1018,10 +1127,10 @@ class TopKEngine:
                 continue
             self._check_shard(s)
             if self._shard_fns[s] is None:
-                sub = sa.shards[s]
-                self._shard_fns[s] = self._build_jax_fn(sub, sub.ranked)
-            out[idx] = self._contrib_dev_on(
-                self._shard_fns[s], sa.shards[s].stride, local[idx], docs[idx]
+                self._shard_fns[s] = {}
+            sub = sa.shards[s]
+            out[idx] = self._contrib_dev_arena(
+                sub, sub.ranked, self._shard_fns[s], local[idx], docs[idx]
             )
         return out
 

@@ -1,0 +1,184 @@
+"""repro.api: the EngineConfig facade (DESIGN.md §14.4).
+
+One frozen record of every engine option, JSON round-trip for --config
+files, argparse lifting for launch.serve, and the single coercion point
+the engines call: legacy keywords lift silently, conflicts warn (keyword
+wins), unknown keywords raise naming EngineConfig.
+"""
+
+import argparse
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CODEC_POLICIES,
+    EngineConfig,
+    UNSET,
+    coerce_config,
+    make_query_engine,
+    make_topk_engine,
+)
+from repro.core.index import build_partitioned_index
+from repro.core.query_engine import QueryEngine
+from repro.data.postings import make_freqs
+from repro.ranked.topk_engine import TopKEngine
+
+
+def _tiny_index(freqs=False, codecs="svb"):
+    rng = np.random.default_rng(0)
+    corpus = [
+        np.cumsum(rng.choice([1, 2, 6, 10, 20, 30], size=800)).astype(
+            np.int64
+        )
+        - 1
+        for _ in range(4)
+    ]
+    f = make_freqs(rng, corpus) if freqs else None
+    return build_partitioned_index(corpus, "optimal", freqs=f, codecs=codecs)
+
+
+# ----------------------------------------------------------------------
+# the config record
+# ----------------------------------------------------------------------
+def test_json_roundtrip():
+    cfg = EngineConfig(
+        backend="ref",
+        fused=False,
+        resident="kernel",
+        codec_policy="ef",
+        shards=4,
+        replicas=2,
+        cache_bytes=1 << 20,
+    )
+    assert EngineConfig.from_json(cfg.to_json()) == cfg
+    # defaults round-trip too
+    assert EngineConfig.from_json(EngineConfig().to_json()) == EngineConfig()
+
+
+def test_json_rejects_unknown_fields_and_live_objects():
+    with pytest.raises(ValueError, match="unknown EngineConfig field"):
+        EngineConfig.from_json('{"backnd": "ref"}')
+    with pytest.raises(ValueError, match="fault_injector"):
+        EngineConfig.from_json('{"fault_injector": null}')
+    with pytest.raises(ValueError, match="fault_injector"):
+        EngineConfig(fault_injector=object()).to_json()
+    with pytest.raises(ValueError, match="shard_mesh"):
+        EngineConfig(shard_mesh=object()).to_json()
+
+
+def test_codec_policy_validated():
+    assert CODEC_POLICIES == ("svb", "auto", "ef")
+    with pytest.raises(ValueError, match="codec_policy"):
+        EngineConfig(codec_policy="lz77")
+
+
+def test_replace_is_frozen_update():
+    cfg = EngineConfig()
+    cfg2 = cfg.replace(backend="numpy", shards=2)
+    assert (cfg2.backend, cfg2.shards) == ("numpy", 2)
+    assert cfg == EngineConfig()  # original untouched
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.backend = "numpy"
+
+
+# ----------------------------------------------------------------------
+# argparse lifting (launch.serve --config / flags)
+# ----------------------------------------------------------------------
+def test_from_args_config_file_base_plus_flag_overrides(tmp_path):
+    base = EngineConfig(backend="numpy", codec_policy="ef", shards=2)
+    path = tmp_path / "engine.json"
+    path.write_text(base.to_json())
+    ns = argparse.Namespace(
+        config=str(path),
+        backend="ref",  # explicit flag overrides the file
+        fused=None,  # un-passed flags (None) leave the file's value
+        codec=None,
+        shards=None,
+        replicas=None,
+    )
+    cfg = EngineConfig.from_args(ns)
+    assert cfg.backend == "ref"
+    assert cfg.codec_policy == "ef"
+    assert cfg.shards == 2
+
+
+def test_from_args_codec_maps_to_codec_policy():
+    ns = argparse.Namespace(config=None, codec="auto", backend=None)
+    assert EngineConfig.from_args(ns).codec_policy == "auto"
+    assert EngineConfig.from_args(argparse.Namespace()) == EngineConfig()
+
+
+# ----------------------------------------------------------------------
+# coercion: legacy keywords vs config=
+# ----------------------------------------------------------------------
+def test_legacy_keywords_lift_silently():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any DeprecationWarning fails
+        cfg = coerce_config(
+            "QueryEngine",
+            None,
+            dict(backend="ref", fused=False, group=UNSET),
+            {},
+        )
+    assert (cfg.backend, cfg.fused, cfg.group) == ("ref", False, True)
+
+
+def test_keyword_conflicting_with_config_warns_and_wins():
+    with pytest.warns(DeprecationWarning, match="backend"):
+        cfg = coerce_config(
+            "TopKEngine",
+            EngineConfig(backend="numpy"),
+            dict(backend="ref"),
+            {},
+        )
+    assert cfg.backend == "ref"
+    # a keyword AGREEING with the config does not warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        coerce_config(
+            "TopKEngine", EngineConfig(backend="ref"), dict(backend="ref"), {}
+        )
+
+
+@pytest.mark.parametrize("engine_cls", [QueryEngine, TopKEngine])
+def test_unknown_kwarg_raises_naming_engineconfig(engine_cls):
+    idx = _tiny_index(freqs=engine_cls is TopKEngine)
+    with pytest.raises(TypeError, match="EngineConfig") as ei:
+        engine_cls(idx, bakend="ref")
+    assert "bakend" in str(ei.value)
+
+
+# ----------------------------------------------------------------------
+# factories build working engines
+# ----------------------------------------------------------------------
+def test_factories_and_legacy_paths_agree():
+    idx = _tiny_index(freqs=True, codecs="auto")
+    cfg = EngineConfig(backend="ref", codec_policy="auto")
+    queries = [[0, 1], [2, 3], [1, 3]]
+
+    via_factory = make_query_engine(idx, cfg).intersect_batch(queries)
+    via_kwargs = QueryEngine(
+        idx, backend="ref", codec_policy="auto"
+    ).intersect_batch(queries)
+    for w, g in zip(via_factory, via_kwargs):
+        assert np.array_equal(w, g)
+
+    tk = make_topk_engine(idx, cfg, seed_blocks=2)
+    assert tk.config == cfg
+    want = TopKEngine(idx, backend="ref", codec_policy="auto", seed_blocks=2)
+    for (wd, ws), (gd, gs) in zip(
+        want.topk_batch(queries, 5), tk.topk_batch(queries, 5)
+    ):
+        assert np.array_equal(wd, gd)
+        assert np.array_equal(ws, gs)
+
+
+def test_engines_expose_their_config():
+    idx = _tiny_index()
+    eng = make_query_engine(idx, EngineConfig(backend="numpy"))
+    assert eng.config.backend == "numpy"
+    assert eng.config == EngineConfig(backend="numpy")

@@ -18,6 +18,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 from benchmarks import (  # noqa: E402
     bench_build_time,
+    bench_codecs,
     bench_competitors,
     bench_faults,
     bench_fig1_distribution,
@@ -46,6 +47,7 @@ MODULES = {
     "bench_ranked": bench_ranked,
     "bench_serve": bench_serve,
     "bench_obs": bench_obs,
+    "bench_codecs": bench_codecs,
     "roofline": roofline,
 }
 

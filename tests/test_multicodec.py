@@ -1,0 +1,341 @@
+"""Multi-codec arena + codec-dispatch edge cases (DESIGN.md §14).
+
+The locate half is codec-agnostic; the decode half buckets cursors by
+``block_codec`` and runs one fused graph per codec per wave.  These tests
+pin the edges of that contract: degenerate partitions (empty / single
+element), the deterministic tie-break of the 3-way cost choice, probe
+clipping at 2^31 over EF blocks, shard-merge bit-identity, and
+property-style mixed-codec lists against the scalar oracle.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import EngineConfig, make_query_engine, make_topk_engine
+from repro.core.arena import CODEC_EF
+from repro.core.eliasfano import EF_UNIVERSE_MAX, ef_payload_bytes
+from repro.core.index import (
+    TAG_BITVECTOR,
+    TAG_EF,
+    TAG_VBYTE,
+    _choose_codec,
+    build_partitioned_index,
+)
+from repro.data.postings import make_freqs
+
+BACKENDS = ["numpy", "ref", "pallas"]
+
+
+def _clustered(rng, n):
+    """Gaps in EF's winning band (avg ~11.5; see bench_codecs)."""
+    return np.cumsum(rng.choice([1, 2, 6, 10, 20, 30], size=n)).astype(
+        np.int64
+    ) - 1
+
+
+def _cut_at(points):
+    """A partitioner returning fixed endpoints (forces codec boundaries the
+    DP's VByte/bitvector objective would not cut at by itself)."""
+
+    def partitioner(gaps):
+        pts = sorted(set(int(p) for p in points) | {len(gaps)})
+        return np.asarray([p for p in pts if 0 < p <= len(gaps)], np.int64)
+
+    return partitioner
+
+
+# ----------------------------------------------------------------------
+# degenerate partitions
+# ----------------------------------------------------------------------
+def test_empty_list_rejected_at_build():
+    """An empty list would mean an empty partition, which no codec can
+    serialize (every partition stores its endpoint): clean build error."""
+    with pytest.raises(ValueError, match="lists\\[1\\] is empty"):
+        build_partitioned_index(
+            [np.arange(10, dtype=np.int64), np.zeros(0, np.int64)],
+            "optimal",
+            codecs="auto",
+        )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_single_element_partitions(backend):
+    """One-value lists (and a forced one-value partition INSIDE a
+    multi-codec list) decode and search identically on every backend."""
+    rng = np.random.default_rng(3)
+    big = _clustered(rng, 600) + 1000
+    lists = [
+        np.array([7], np.int64),
+        np.array([12_345_678], np.int64),
+        big,
+    ]
+    # cut the big list's first element into its own partition: a 1-element
+    # partition adjacent to (usually-EF) clustered partitions
+    idx = build_partitioned_index(
+        lists, partitioner=_cut_at([1, 200, 400]), codecs="auto"
+    )
+    for t, seq in enumerate(lists):
+        assert np.array_equal(idx.decode_list(t), seq)
+    eng = make_query_engine(idx, EngineConfig(backend=backend))
+    terms = np.array([0, 0, 1, 1, 2, 2, 2], np.int64)
+    probes = np.array(
+        [7, 8, 12_345_678, 0, int(big[0]), int(big[0]) + 1, int(big[-1])],
+        np.int64,
+    )
+    got = eng.next_geq_batch(terms, probes)
+    want = np.array(
+        [7, -1, 12_345_678, 12_345_678, big[0], big[1], big[-1]], np.int64
+    )
+    assert np.array_equal(got, want)
+
+
+# ----------------------------------------------------------------------
+# cost-model tie-break
+# ----------------------------------------------------------------------
+def test_dense_ef_bitvector_tie_prefers_bitvector():
+    """Where EF and bitvector serialize to the same bytes (both below
+    VByte), the tag stays bitvector -- the documented deterministic
+    tie-break, so dense legacy partitions never churn codec."""
+    n, u = 100, 220
+    ef_bytes = ef_payload_bytes(n, u)
+    cb_bits = 8 * ef_bytes  # bitvector ties EF exactly
+    ce_bits = cb_bits + 800  # VByte strictly worse
+    assert _choose_codec(n, u, ce_bits, cb_bits, "auto") == TAG_BITVECTOR
+    # and bitvector strictly cheaper also beats EF
+    assert _choose_codec(n, u, ce_bits, cb_bits - 8, "auto") == TAG_BITVECTOR
+    # VByte ties bitvector: VByte first (the legacy ce <= cb preference)
+    assert _choose_codec(n, u, cb_bits, cb_bits, "svb") == TAG_VBYTE
+
+
+def test_dense_runs_stay_bitvector_under_auto():
+    """Gap-1 runs are bitvector-optimal (1 bit/int vs EF's 2): the 3-way
+    build must keep the legacy tags AND the exact serialized size."""
+    rng = np.random.default_rng(4)
+    starts = np.cumsum(rng.integers(5_000, 9_000, size=4))
+    lists = [
+        (s + np.arange(3_000)).astype(np.int64) for s in starts
+    ]
+    idx_auto = build_partitioned_index(lists, "optimal", codecs="auto")
+    idx_svb = build_partitioned_index(lists, "optimal", codecs="svb")
+    assert (np.asarray(idx_auto.tags) == TAG_EF).sum() == 0
+    assert np.array_equal(idx_auto.tags, idx_svb.tags)
+    assert idx_auto.space_bits() == idx_svb.space_bits()
+    assert (np.asarray(idx_auto.tags) == TAG_BITVECTOR).sum() > 0
+
+
+# ----------------------------------------------------------------------
+# the 2^31 probe clip over EF blocks
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ef_blocks_survive_2_31_probe_clip(backend):
+    """EF-tagged blocks sitting just below 2^31: probes straddling 2^31
+    clip to past-the-end (never wrapping negative through int32 staging),
+    in-range probes resolve inside the EF tiles, and AND matches the
+    scalar oracle."""
+    rng = np.random.default_rng(0)
+    low = _clustered(rng, 400)
+    hi = (2**31 - 3_000_000) + np.cumsum(
+        rng.choice([1, 2, 6, 10, 20, 30], size=3000)
+    ).astype(np.int64)
+    l0 = np.concatenate([low, hi])
+    l1 = np.unique(np.concatenate([low[::2], hi[::3], hi[1:200]]))
+    # the DP's 2-way objective never cuts at the jump (VByte absorbs any
+    # gap at 8*ceil(bits/7)); force cuts so the dense high partitions get
+    # universes < 2^23 and become EF-eligible
+    cuts = [400, 401] + list(range(401 + 1024, 3400, 1024))
+    idx = build_partitioned_index(
+        [l0, l1], partitioner=_cut_at(cuts), codecs="auto"
+    )
+    tags = np.asarray(idx.tags)
+    assert (tags == TAG_EF).sum() > 0, "high clusters must be EF-tagged"
+    arena = idx.arena_for("auto")
+    assert arena.multi and (arena.block_codec == CODEC_EF).any()
+    assert (arena.block_base[arena.block_codec == CODEC_EF] > 2**30).any()
+
+    eng = make_query_engine(
+        idx, EngineConfig(backend=backend, codec_policy="auto")
+    )
+    probes = np.array(
+        [2**31 - 1, 2**31, 2**31 + 1, 2**40, -(2**33), 0, int(hi[0]) + 1],
+        np.int64,
+    )
+    terms = np.zeros(len(probes), np.int64)
+    got = eng.next_geq_batch(terms, probes)
+    assert (got[:4] == -1).all()  # >= 2^31 - 1 > last value: past the end
+    assert got[4] == l0[0]  # huge negative clips to probe 0
+    assert got[5] == l0[0]
+    assert got[6] == hi[1]  # resolved inside an EF tile
+    want = np.asarray(idx.intersect_scalar([0, 1]))
+    assert np.array_equal(eng.intersect_batch([[0, 1]])[0], want)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_codec_bucket_dispatch_pure_waves(backend):
+    """Waves touching only SVB blocks, only EF blocks, and both: each
+    dispatch shape is bit-identical to the numpy mirror (the all-SVB /
+    all-EF fast paths and the split+scatter path all exercised)."""
+    rng = np.random.default_rng(1)
+    low = _clustered(rng, 300)  # clustered -> EF
+    sparse = low[-1] + 1 + np.cumsum(
+        rng.integers(65, 128, size=2000)
+    ).astype(np.int64)  # one-VByte-byte gaps -> SVB
+    l0 = np.concatenate([low, sparse])
+    idx = build_partitioned_index(
+        [l0, sparse[::2].copy()], partitioner=_cut_at([300]), codecs="auto"
+    )
+    arena = idx.arena_for("auto")
+    assert arena.multi
+    codecs = arena.block_codec
+    assert (codecs == CODEC_EF).any() and (codecs != CODEC_EF).any()
+
+    eng = make_query_engine(
+        idx, EngineConfig(backend=backend, codec_policy="auto")
+    )
+    oracle = make_query_engine(
+        idx, EngineConfig(backend="numpy", codec_policy="auto")
+    )
+    ef_probes = low[rng.integers(0, len(low), 16)]  # all-EF wave
+    svb_probes = sparse[rng.integers(0, len(sparse), 16)]  # all-SVB wave
+    mixed = np.concatenate([ef_probes, svb_probes])  # split + scatter
+    for probes in (ef_probes, svb_probes, mixed):
+        terms = np.zeros(len(probes), np.int64)
+        got = eng.search_batch(terms, probes)
+        want = oracle.search_batch(terms, probes)
+        assert np.array_equal(got[0], want[0])
+        assert np.array_equal(got[1], want[1])
+
+
+# ----------------------------------------------------------------------
+# sharded multi-codec
+# ----------------------------------------------------------------------
+def test_one_shard_multicodec_bit_identity():
+    """shards=1 over a multi-codec arena: the sliced shard arena carries
+    the codec sidecars and answers bit-identically to unsharded serving,
+    boolean AND ranked."""
+    rng = np.random.default_rng(2)
+    corpus = [_clustered(rng, 2_500 + 500 * i) for i in range(6)]
+    freqs = make_freqs(rng, corpus)
+    idx = build_partitioned_index(
+        corpus, "optimal", freqs=freqs, codecs="auto"
+    )
+    assert (np.asarray(idx.tags) == TAG_EF).sum() > 0
+    cfg = EngineConfig(backend="ref", codec_policy="auto")
+    queries = [[0, 1], [2, 5], [3, 4, 1], [0, 5]]
+
+    plain = make_query_engine(idx, cfg)
+    sharded = make_query_engine(idx, cfg.replace(shards=1))
+    for q, w, g in zip(
+        queries, plain.intersect_batch(queries), sharded.intersect_batch(queries)
+    ):
+        assert np.array_equal(w, g), q
+
+    plain_k = make_topk_engine(idx, cfg)
+    sharded_k = make_topk_engine(idx, cfg.replace(shards=1))
+    for (wd, ws), (gd, gs) in zip(
+        plain_k.topk_batch(queries, 10), sharded_k.topk_batch(queries, 10)
+    ):
+        assert np.array_equal(wd, gd)
+        assert np.array_equal(ws, gs)
+
+
+# ----------------------------------------------------------------------
+# property tests: codecs mixed within one list
+# ----------------------------------------------------------------------
+@given(
+    st.lists(
+        st.sampled_from(["dense", "ef", "sparse"]), min_size=2, max_size=5
+    ),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=12, deadline=None)
+def test_mixed_codec_list_roundtrip(segments, seed):
+    """Lists stitched from dense / EF-band / sparse gap regimes: the
+    3-codec build round-trips exactly, never serializes larger than the
+    2-way build, and NextGEQ over the mixed arena matches searchsorted."""
+    rng = np.random.default_rng(seed)
+    gaps = []
+    for kind in segments:
+        n = int(rng.integers(50, 220))
+        if kind == "dense":
+            gaps.append(np.ones(n, np.int64))
+        elif kind == "ef":
+            gaps.append(rng.integers(4, 40, size=n).astype(np.int64))
+        else:
+            gaps.append(rng.integers(200, 3_000, size=n).astype(np.int64))
+    seq = np.cumsum(np.concatenate(gaps)) - 1
+    idx = build_partitioned_index([seq], "optimal", codecs="auto")
+    assert np.array_equal(idx.decode_list(0), seq)
+    idx_svb = build_partitioned_index([seq], "optimal", codecs="svb")
+    assert idx.space_bits() <= idx_svb.space_bits()
+    for p in range(len(idx.endpoints)):
+        if idx.tags[p] == TAG_EF:
+            base = -1 if p == 0 else int(idx.endpoints[p - 1])
+            assert int(idx.endpoints[p]) - base - 1 < EF_UNIVERSE_MAX
+
+    eng = make_query_engine(
+        idx, EngineConfig(backend="ref", codec_policy="auto")
+    )
+    pick = rng.integers(0, len(seq), size=40)
+    probes = np.unique(
+        np.concatenate(
+            [seq[pick], seq[pick] + 1, [0, int(seq[-1]) + 1]]
+        )
+    )
+    terms = np.zeros(len(probes), np.int64)
+    got = eng.next_geq_batch(terms, probes)
+    pos = np.searchsorted(seq, probes, side="left")
+    want = np.where(pos < len(seq), seq[np.minimum(pos, len(seq) - 1)], -1)
+    assert np.array_equal(got, want)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_mixed_codec_intersection_matches_scalar(seed):
+    """Two mixed-regime lists, AND through the multi-codec ref engine vs
+    the scalar oracle (which decodes all three tags)."""
+    rng = np.random.default_rng(seed)
+    l0 = _clustered(rng, 1_200)
+    l1 = np.unique(
+        np.concatenate(
+            [
+                l0[rng.integers(0, len(l0), 400)],
+                np.cumsum(rng.integers(65, 128, size=600)).astype(np.int64),
+            ]
+        )
+    )
+    idx = build_partitioned_index([l0, l1], "optimal", codecs="auto")
+    eng = make_query_engine(
+        idx, EngineConfig(backend="ref", codec_policy="auto")
+    )
+    want = np.asarray(idx.intersect_scalar([0, 1]))
+    assert np.array_equal(eng.intersect_batch([[0, 1]])[0], want)
+
+
+# ----------------------------------------------------------------------
+# checkpointed multi-codec arena
+# ----------------------------------------------------------------------
+def test_multicodec_arena_checkpoint_roundtrip(tmp_path):
+    """save_arena/restore_arena carry the codec sidecars and EF tiles:
+    the restored arena serves bit-identically to the original."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.arena_ckpt import restore_arena, save_arena
+
+    rng = np.random.default_rng(5)
+    corpus = [_clustered(rng, 2_000) for _ in range(3)]
+    idx = build_partitioned_index(
+        corpus, "optimal", freqs=make_freqs(rng, corpus), codecs="auto"
+    )
+    arena = idx.arena_for("auto")
+    assert arena.multi
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    save_arena(mgr, arena, step=0)
+    got, step = restore_arena(mgr)
+    assert step == 0
+    assert got.multi
+    assert np.array_equal(got.block_codec, arena.block_codec)
+    assert np.array_equal(got.codec_row, arena.codec_row)
+    for name in ("ef_lo", "ef_hi", "ef_lbits"):
+        assert np.array_equal(getattr(got, name), getattr(arena, name)), name
+    assert got.nbytes() == arena.nbytes()

@@ -1,16 +1,19 @@
 #!/usr/bin/env python
 """Docs drift gate (§13): flags and metric names must stay documented.
 
-Two inventories, both extracted from the AST (docstrings and comments
+Three inventories, all extracted from the AST (docstrings and comments
 never count as documentation-or-emission):
 
 * every ``--flag`` registered via ``add_argument`` in
   ``src/repro/launch/serve.py`` and ``benchmarks/*.py`` must appear in
-  the docs corpus (README.md + docs/*.md);
+  the docs corpus (README.md + DESIGN.md + docs/*.md);
 * every metric/span name registered through ``repro.obs`` under
   ``src/repro`` (``obs.count`` / ``obs.observe`` / ``obs.set_gauge`` /
   ``obs.timer`` / ``obs.span`` with a literal name) must appear in
-  docs/metrics.md.
+  docs/metrics.md;
+* every public top-level name of the ``repro.api`` facade (classes,
+  functions, UPPER_CASE constants -- ISSUE-10's one blessed construction
+  surface) must appear in the docs corpus.
 
 Run by the ``analyze`` CI job::
 
@@ -32,6 +35,7 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 FLAG_SOURCES = ("src/repro/launch/serve.py", "benchmarks")
 METRIC_ROOT = "src/repro"
 OBS_FNS = {"count", "observe", "set_gauge", "timer", "span"}
+API_MODULE = "src/repro/api.py"
 
 
 def _py_files(rel: str) -> list[pathlib.Path]:
@@ -95,8 +99,28 @@ def all_metrics() -> dict[str, set[str]]:
     }
 
 
+def api_surface() -> set[str]:
+    """Public top-level names of the ``repro.api`` facade.
+
+    Classes, functions, and UPPER_CASE module constants not prefixed with
+    ``_`` -- the construction surface every caller is pointed at.
+    """
+    path = ROOT / API_MODULE
+    tree = ast.parse(path.read_text(), filename=str(path))
+    names = set()
+    for node in tree.body:
+        if isinstance(node, (ast.ClassDef, ast.FunctionDef)):
+            if not node.name.startswith("_"):
+                names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for target in node.targets:
+                if isinstance(target, ast.Name) and target.id.isupper():
+                    names.add(target.id)
+    return names
+
+
 def docs_corpus() -> str:
-    texts = [(ROOT / "README.md").read_text()]
+    texts = [(ROOT / "README.md").read_text(), (ROOT / "DESIGN.md").read_text()]
     texts += [p.read_text() for p in sorted((ROOT / "docs").glob("*.md"))]
     return "\n".join(texts)
 
@@ -119,6 +143,14 @@ def missing_metrics(metrics_md: str) -> list[tuple[str, str]]:
     ]
 
 
+def missing_api(corpus: str) -> list[str]:
+    return [
+        name
+        for name in sorted(api_surface())
+        if not re.search(rf"\b{re.escape(name)}\b", corpus)
+    ]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--check", action="store_true",
@@ -129,20 +161,25 @@ def main(argv=None) -> int:
     metrics_md = (ROOT / "docs" / "metrics.md").read_text()
     bad_flags = missing_flags(corpus)
     bad_metrics = missing_metrics(metrics_md)
+    bad_api = missing_api(corpus)
 
     n_flags = sum(len(v) for v in all_flags().values())
     n_metrics = len(set().union(*all_metrics().values()))
     print(f"check_docs: {n_flags} flags across {len(all_flags())} files, "
-          f"{n_metrics} distinct metric names")
+          f"{n_metrics} distinct metric names, "
+          f"{len(api_surface())} repro.api names")
     for src, flag in bad_flags:
         print(f"  UNDOCUMENTED FLAG {flag} ({src}) -- add it to "
               f"docs/serving.md or README.md")
     for src, name in bad_metrics:
         print(f"  UNDOCUMENTED METRIC {name} ({src}) -- add it to "
               f"docs/metrics.md")
-    if bad_flags or bad_metrics:
+    for name in bad_api:
+        print(f"  UNDOCUMENTED API NAME {name} ({API_MODULE}) -- add it to "
+              f"README.md or DESIGN.md §14")
+    if bad_flags or bad_metrics or bad_api:
         print(f"check_docs: DRIFT ({len(bad_flags)} flags, "
-              f"{len(bad_metrics)} metrics)")
+              f"{len(bad_metrics)} metrics, {len(bad_api)} api names)")
         return 1 if args.check else 0
     print("check_docs: OK")
     return 0
